@@ -1,0 +1,45 @@
+"""Fig. 14: decode throughput as a function of (DCT_SIZE, ENCODED_COEFFS)
+on the MIT-BIH analog.  Reproduces: throughput inversely proportional to E;
+peak at N=32 for low E."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.bench_throughput import decode_gbps
+from benchmarks.common import emit, eval_signal, tables_for
+from repro.core import DOMAIN_DEFAULTS, encode
+from repro.core.config import CodecConfig
+
+ART = "benchmarks/artifacts/ne_sweep"
+
+
+def run(fast: bool = False):
+    os.makedirs(ART, exist_ok=True)
+    sig = eval_signal("mitbih", 1 << 19)
+    base = DOMAIN_DEFAULTS["biomedical"]
+    grid = {}
+    ns = (16, 32, 64) if not fast else (32,)
+    for n in ns:
+        for e in (2, 4, 8, 16):
+            if e > n:
+                continue
+            cfg = CodecConfig(
+                n=n, e=e, b1=min(2, e), b2=e, mu=base.mu,
+                a0_percentile=base.a0_percentile,
+            )
+            tables = tables_for("mitbih", cfg)
+            c = encode(sig, tables)
+            gbps = float(np.mean(decode_gbps(c, tables, trials=3)))
+            grid[f"n{n}_e{e}"] = {"n": n, "e": e, "gbps": gbps,
+                                  "cr": c.compression_ratio}
+            emit(f"ne_sweep/n{n}_e{e}", 0.0,
+                 f"GBps={gbps:.3f} CR={c.compression_ratio:.1f}")
+    with open(os.path.join(ART, "grid.json"), "w") as f:
+        json.dump(grid, f, indent=1)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Tables 1 & 2: codec parameter table + dataset inventory."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import DOMAIN_DEFAULTS
+from repro.data.signals import DATASETS, domain_of
+
+
+def run(fast: bool = False):
+    del fast
+    for dom, cfg in sorted(DOMAIN_DEFAULTS.items()):
+        emit(
+            f"params/{dom}", 0.0,
+            f"N={cfg.n} E={cfg.e} B1={cfg.b1} B2={cfg.b2} mu={cfg.mu} "
+            f"alpha1={cfg.alpha1} pct={cfg.a0_percentile} "
+            f"headroom={cfg.scale_headroom} Lmax={cfg.l_max}",
+        )
+    for ds in sorted(DATASETS):
+        emit(f"datasets/{ds}", 0.0, f"domain={domain_of(ds)} synthetic=1")
+
+
+if __name__ == "__main__":
+    run()

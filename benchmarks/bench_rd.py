@@ -1,0 +1,83 @@
+"""Fig. 8/9: rate-distortion curves — parameter sweep + Pareto extraction.
+
+Sweeps (N, E) per dataset exactly as the paper does ("the sweep is performed
+over all lossy parameters but focused primarily on N and E"), maps each
+point to (PRD, CR), and extracts the Pareto front.  Results land in
+benchmarks/artifacts/rd/<dataset>.json for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, eval_signal, tables_for, time_fn
+from repro.core import DOMAIN_DEFAULTS
+from repro.core.codec import roundtrip_metrics
+from repro.core.config import CodecConfig
+from repro.data.signals import DATASETS, domain_of
+
+ART = "benchmarks/artifacts/rd"
+
+SWEEP = [
+    # (n, e_fraction) grid — e = max(1, int(n * frac))
+    (16, 1.0), (16, 0.5), (16, 0.25),
+    (32, 1.0), (32, 0.5), (32, 0.25), (32, 0.125),
+    (64, 0.5), (64, 0.25), (64, 0.125), (64, 0.0625),
+]
+
+
+def pareto_front(points):
+    """Points: list of (prd, cr).  Front: max CR at each PRD (lower-left
+    dominated points removed)."""
+    pts = sorted(points)
+    front = []
+    best_cr = -1.0
+    for prd, cr in pts:
+        if cr > best_cr:
+            front.append((prd, cr))
+            best_cr = cr
+    return front
+
+
+def run(fast: bool = False):
+    os.makedirs(ART, exist_ok=True)
+    datasets = sorted(DATASETS) if not fast else ["mitbih", "load_power"]
+    for ds in datasets:
+        dom = domain_of(ds)
+        base = DOMAIN_DEFAULTS[dom]
+        sig = eval_signal(ds, 65536)
+        points = []
+        t0 = time_fn(lambda: None)  # noop baseline
+        for n, frac in SWEEP:
+            e = max(1, int(n * frac))
+            cfg = CodecConfig(
+                n=n, e=e, b1=min(base.b1, e), b2=e, mu=base.mu,
+                alpha1=base.alpha1, a0_percentile=base.a0_percentile,
+                scale_headroom=base.scale_headroom,
+            )
+            try:
+                cr, prd = roundtrip_metrics(sig, tables_for(ds, cfg))
+            except Exception:
+                continue
+            points.append((float(prd), float(cr), n, e))
+        front = pareto_front([(p, c) for p, c, _, _ in points])
+        # best CR within the paper's high-fidelity band (PRD <= 5%; 2% seismic)
+        band = 2.0 if dom == "seismic" else 5.0
+        in_band = [c for p, c in front if p <= band]
+        best = max(in_band) if in_band else 0.0
+        with open(os.path.join(ART, f"{ds}.json"), "w") as f:
+            json.dump(
+                {"dataset": ds, "domain": dom, "points": points,
+                 "pareto": front, "best_cr_in_band": best, "band": band},
+                f, indent=1,
+            )
+        emit(
+            f"rd_pareto/{ds}", 0.0,
+            f"best_CR@PRD<={band:.0f}%={best:.1f}x front_points={len(front)}",
+        )
+
+
+if __name__ == "__main__":
+    run()

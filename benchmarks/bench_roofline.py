@@ -1,0 +1,131 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from dry-run
+artifacts.
+
+  compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+  collective term = collective_bytes / (chips x 50e9 B/s ICI per link)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(); collective bytes are
+parsed from the optimized HLO (dryrun.collective_bytes).  cost_analysis on
+the CPU backend reports *per-partition* numbers for SPMD-compiled modules,
+so terms divide by chips only where the quantity is whole-module.  We treat
+cost_analysis flops/bytes as per-device (XLA reports the per-partition
+module after SPMD partitioning) and collective bytes as per-device link
+traffic.
+
+MODEL_FLOPS uses 6*N*D (dense) or 6*N_active*D (MoE) with D = tokens
+processed per step; the ratio MODEL_FLOPS / (HLO_FLOPs x chips) flags
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e)
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+ART_IN = "benchmarks/artifacts/dryrun"
+ART_OUT = "benchmarks/artifacts/roofline.json"
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 1 * 128,
+    "long_500k": 1 * 1,
+}
+
+
+def analyze(rec: Dict) -> Dict:
+    chips = rec["n_devices"]
+    flops_dev = rec["flops"]  # per-partition (SPMD) module FLOPs
+    bytes_dev = rec["bytes_accessed"]
+    coll_dev = rec["collective_bytes_total"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_collective = coll_dev / ICI_BW
+
+    terms = {
+        "compute": t_compute, "memory": t_memory, "collective": t_collective
+    }
+    dominant = max(terms, key=terms.get)
+
+    tokens = SHAPE_TOKENS.get(rec["shape"], 0)
+    n_active = rec["params_active"]
+    mult = 6 if rec["kind"] == "train" else 2
+    model_flops = mult * n_active * tokens
+    hlo_total = flops_dev * chips
+    useful = model_flops / hlo_total if hlo_total else 0.0
+
+    bound = max(terms.values())
+    mfu_bound = (model_flops / chips / PEAK_FLOPS) / bound if bound else 0.0
+
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "kind", "mesh", "multi_pod",
+                               "compression")},
+        "terms_s": {k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_total,
+        "useful_flops_ratio": round(useful, 4),
+        "roofline_bound_s": round(bound, 6),
+        "mfu_upper_bound": round(mfu_bound, 4),
+        "collective_breakdown": rec.get("collective_bytes", {}),
+        "memory_resident_bytes": rec["memory"].get("resident_estimate_bytes"),
+    }
+
+
+def run(fast: bool = False):
+    del fast
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART_IN, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        # re-analyze persisted HLO with the current cost model (metric fixes
+        # apply without recompiling the cell)
+        hlo_path = path[: -len(".json")] + ".hlo.gz"
+        if os.path.exists(hlo_path):
+            import gzip
+
+            from repro.analysis import analyze_hlo
+
+            with gzip.open(hlo_path, "rt") as f:
+                hc = analyze_hlo(f.read())
+            rec["flops"] = hc.flops
+            rec["bytes_accessed"] = hc.hbm_bytes
+            # headline collective term uses the bf16/TPU-adjusted wire bytes
+            # (the CPU lowering upcasts bf16 compute to f32 before SPMD —
+            # see HloCost.collective_bytes_tpu); raw bytes kept alongside.
+            rec["collective_bytes_total"] = hc.collective_bytes_tpu
+            rec["collective_bytes_raw_f32_lowering"] = hc.collective_bytes
+            rec["collective_bytes"] = hc.collective_by_op
+        row = analyze(rec)
+        rows.append(row)
+        emit(
+            f"roofline/{row['arch']}/{row['shape']}/"
+            f"{'mp' if row['multi_pod'] else 'sp'}"
+            + (f"/{row['compression']}" if row["compression"] != "none"
+               else ""),
+            row["roofline_bound_s"] * 1e6,
+            f"dominant={row['dominant']} "
+            f"compute={row['terms_s']['compute']:.4f}s "
+            f"memory={row['terms_s']['memory']:.4f}s "
+            f"collective={row['terms_s']['collective']:.4f}s "
+            f"useful={row['useful_flops_ratio']:.3f} "
+            f"mfu_bound={row['mfu_upper_bound']:.3f}",
+        )
+    with open(ART_OUT, "w") as f:
+        json.dump(rows, f, indent=1)
+    if not rows:
+        emit("roofline/no_artifacts", 0.0,
+             "run repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Fig. 13: normalized runtime breakdown of decompression stages per dataset.
+
+Times the lossless stage (SymLen Huffman decode + compaction) and the lossy
+stage (dequant + inverse DCT) separately, mirroring the paper's per-kernel
+latency breakdown.  The paper's observation to reproduce: low-compressibility
+datasets (MIT-BIH) are lossless-dominated; smooth datasets with large N
+(wind) are lossy-dominated.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, eval_signal, tables_for
+from repro.core import DOMAIN_DEFAULTS, encode
+from repro.core import dct as dctlib
+from repro.core import symlen as symlib
+from repro.core.quantize import dequantize
+from repro.data.signals import DATASETS, domain_of
+
+ART = "benchmarks/artifacts/stage_breakdown"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("l_max", "max_symlen", "num_symbols")
+)
+def _lossless(hi, lo, sl, dec_limit, dec_first, dec_rank, dec_syms, *,
+              l_max, max_symlen, num_symbols):
+    return symlib.unpack_symlen(
+        hi, lo, sl, dec_limit, dec_first, dec_rank, dec_syms,
+        l_max=l_max, max_symlen=max_symlen, num_symbols=num_symbols,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "e", "num_windows"))
+def _lossy(syms, quant, *, n, e, num_windows):
+    coeffs = dequantize(syms.reshape(num_windows, e), quant)
+    return dctlib.inverse_dct(coeffs, n)
+
+
+def _time(fn, *a, **k):
+    out = fn(*a, **k)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        out = fn(*a, **k)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def run(fast: bool = False):
+    os.makedirs(ART, exist_ok=True)
+    datasets = ["mitbih", "wind_speed"] if fast else sorted(DATASETS)
+    rows = {}
+    for ds in datasets:
+        tables = tables_for(ds)
+        sig = eval_signal(ds, 1 << 20)
+        c = encode(sig, tables)
+        dev = tables.device_tables()
+        hi, lo = symlib.words_to_u32(c.words)
+        t_ll, syms = _time(
+            _lossless, jnp.asarray(hi), jnp.asarray(lo),
+            jnp.asarray(c.symlen, jnp.int32),
+            dev.dec_limit, dev.dec_first, dev.dec_rank, dev.dec_syms,
+            l_max=c.l_max, max_symlen=c.max_symlen,
+            num_symbols=c.num_symbols,
+        )
+        t_ly, _ = _time(
+            _lossy, syms, dev.quant, n=c.n, e=c.e, num_windows=c.num_windows
+        )
+        frac_ll = t_ll / (t_ll + t_ly)
+        rows[ds] = {
+            "lossless_ms": t_ll * 1e3, "lossy_ms": t_ly * 1e3,
+            "lossless_frac": frac_ll, "cr": c.compression_ratio,
+        }
+        emit(
+            f"stage_breakdown/{ds}", (t_ll + t_ly) * 1e6,
+            f"lossless_frac={frac_ll:.2f} lossless_ms={t_ll*1e3:.1f} "
+            f"lossy_ms={t_ly*1e3:.1f} CR={c.compression_ratio:.1f}",
+        )
+    with open(os.path.join(ART, "stages.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    run()

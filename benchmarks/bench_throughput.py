@@ -1,0 +1,104 @@
+"""Fig. 12 + Table 3: decompression throughput by PRD bin + trial stability.
+
+Measures the word-parallel decode pipeline (jitted XLA path — the TPU
+kernels run interpret=True on CPU and are validated for correctness, not
+speed).  Throughput is decompressed-output GB/s, excluding host transfer —
+the paper's measurement convention.  CPU numbers are not TPU numbers; the
+roofline section projects the TPU-side bound.  Five sequential trials on a
+warmed jit replicate Table 3's stability protocol.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, eval_signal, tables_for
+from repro.core import DOMAIN_DEFAULTS, encode
+from repro.core.codec import _decode_device
+from repro.core.config import CodecConfig
+from repro.core.metrics import prd
+from repro.core import symlen as symlib
+from repro.data.signals import DATASETS, domain_of
+
+ART = "benchmarks/artifacts/throughput"
+
+PRD_BINS = ((0.0, 2.0), (2.0, 4.0), (4.0, 6.0))
+
+
+def decode_gbps(container, tables, trials=5):
+    hi, lo = symlib.words_to_u32(container.words)
+    hi = jnp.asarray(hi)
+    lo = jnp.asarray(lo)
+    sl = jnp.asarray(container.symlen, jnp.int32)
+    dev = tables.device_tables()
+    kw = dict(
+        l_max=container.l_max, max_symlen=container.max_symlen,
+        num_symbols=container.num_symbols, num_windows=container.num_windows,
+        n=container.n, e=container.e, signal_length=container.signal_length,
+    )
+    out = _decode_device(hi, lo, sl, dev, **kw)  # warm the jit
+    out.block_until_ready()
+    times = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        out = _decode_device(hi, lo, sl, dev, **kw)
+        out.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    out_bytes = container.signal_length * 4
+    return [out_bytes / t / 1e9 for t in times]
+
+
+def run(fast: bool = False):
+    os.makedirs(ART, exist_ok=True)
+    datasets = ["mitbih", "load_power", "wind_speed"] if fast else sorted(
+        DATASETS
+    )
+    results = {}
+    for ds in datasets:
+        dom = domain_of(ds)
+        base = DOMAIN_DEFAULTS[dom]
+        sig = eval_signal(ds, 1 << 20)  # 4 MB strips
+        per_bin = {}
+        for n, e in [(32, max(base.e // 2, 1)), (32, base.e),
+                     (32, min(base.e * 2, 32))]:
+            cfg = CodecConfig(
+                n=n, e=e, b1=min(base.b1, e), b2=e, mu=base.mu,
+                alpha1=base.alpha1, a0_percentile=base.a0_percentile,
+                scale_headroom=base.scale_headroom,
+            )
+            tables = tables_for(ds, cfg)
+            c = encode(sig, tables)
+            from repro.core.codec import decode as hdecode
+
+            p = prd(sig, hdecode(c, tables))
+            gbps = decode_gbps(c, tables)
+            for lo_b, hi_b in PRD_BINS:
+                if lo_b <= p < hi_b:
+                    key = f"({lo_b:.0f},{hi_b:.0f}]"
+                    if key not in per_bin or np.mean(gbps) > np.mean(
+                        per_bin[key]["gbps"]
+                    ):
+                        per_bin[key] = {
+                            "prd": p, "cr": c.compression_ratio,
+                            "gbps": gbps, "e": e, "n": n,
+                        }
+        results[ds] = per_bin
+        for key, rec in per_bin.items():
+            emit(
+                f"throughput/{ds}/prd{key}",
+                1e6 * (1 << 22) / (np.mean(rec["gbps"]) * 1e9),
+                f"GBps_mean={np.mean(rec['gbps']):.3f} "
+                f"GBps_min={np.min(rec['gbps']):.3f} CR={rec['cr']:.1f} "
+                f"PRD={rec['prd']:.2f}",
+            )
+    with open(os.path.join(ART, "throughput.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    run()

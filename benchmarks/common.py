@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: timing, CSV output, dataset prep."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+from repro.core import DOMAIN_DEFAULTS, calibrate
+from repro.core.calibration import DomainTables
+from repro.data import make_signal
+from repro.data.signals import DATASETS, domain_of
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+_TABLE_CACHE: Dict[Tuple[str, tuple], DomainTables] = {}
+
+
+def tables_for(dataset: str, cfg=None) -> DomainTables:
+    dom = domain_of(dataset)
+    cfg = cfg or DOMAIN_DEFAULTS[dom]
+    key = (dataset, tuple(sorted(vars(cfg).items())))
+    if key not in _TABLE_CACHE:
+        calib = np.concatenate(
+            [make_signal(dataset, 65536, seed=90 + i) for i in range(4)]
+        )
+        _TABLE_CACHE[key] = calibrate(calib, cfg)
+    return _TABLE_CACHE[key]
+
+
+def eval_signal(dataset: str, n: int = 262144, seed: int = 1) -> np.ndarray:
+    return make_signal(dataset, n, seed=seed)

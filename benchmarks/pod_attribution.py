@@ -1,0 +1,62 @@
+"""Attribute collective wire bytes to cross-pod vs intra-pod links.
+
+Decodes each collective's replica_groups (iota form [G,S]<=[dims]T(perm)
+or explicit lists) against the 2x16x16 device layout (pod stride = 256)
+and sums trip-count-weighted bytes whose groups span the pod boundary.
+This is the measurement behind EXPERIMENTS.md §Perf iteration 7.
+
+  PYTHONPATH=src python benchmarks/pod_attribution.py \
+      benchmarks/artifacts/dryrun/<cell>.hlo.gz ...
+"""
+import gzip, re, sys
+import numpy as np
+sys.path.insert(0, 'src')
+from repro.analysis import hlo_cost as H
+
+IOTA = re.compile(r'replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?')
+LIST = re.compile(r'replica_groups=\{\{([\d,]+)\}')
+
+def groups_cross_pod(ln, pod_devices=256):
+    m = IOTA.search(ln)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(',')]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(x) for x in m.group(4).split(',')])
+        ids = ids.reshape(g, s)
+        p_ids = ids // pod_devices; return bool((p_ids.max(axis=1) - p_ids.min(axis=1)).max() > 0)
+    m = LIST.search(ln)
+    if m:
+        ids = np.array([int(x) for x in m.group(1).split(',')])
+        p_ids = ids // pod_devices; return bool(p_ids.max() - p_ids.min() > 0)
+    return False  # no groups = single-device/within-partition
+
+def pod_bytes(path):
+    txt = gzip.open(path, 'rt').read()
+    p = H._Parser(txt)
+    trips = {}
+    for cname, lines in p.computations.items():
+        for ln in lines:
+            m = H._OP_LINE.match(ln)
+            if m and m.group(3) == 'while':
+                cb = H._COND_BODY.search(ln)
+                if cb: trips[cb.group(2)] = p._trip_count(cb.group(1))
+    cross = intra = cross_f32 = 0
+    for cname, lines in p.computations.items():
+        mult = trips.get(cname, 1) or 1
+        for ln in lines:
+            m = re.search(r'=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\(', ln)
+            if not m: continue
+            size = H._shape_bytes(m.group(1)) * mult
+            if groups_cross_pod(ln):
+                cross += size
+                if 'f32[' in m.group(1): cross_f32 += size
+            else:
+                intra += size
+    return cross, intra, cross_f32
+
+for path in sys.argv[1:]:
+    c, i, cf = pod_bytes(path)
+    c_tpu = c - 0.5*cf
+    print(f"{path.split('/')[-1]:58s} cross-pod {c/1e9:8.2f} GB (tpu-adj {c_tpu/1e9:8.2f})   intra {i/1e9:9.2f} GB")

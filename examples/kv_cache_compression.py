@@ -1,0 +1,78 @@
+"""FPTC KV-cache compression for long-context serving.
+
+Prefills a smoke model, compresses the KV cache blocks with the windowed-DCT
+quantizer, decompresses, and measures (a) cache memory saved and (b) the
+effect on decode logits — the serving-side analog of the paper's
+rate-distortion trade.
+
+  PYTHONPATH=src python examples/kv_cache_compression.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.models.common import init_params
+from repro.serving import (
+    KVCompressionConfig,
+    compress_kv_block,
+    decompress_kv_block,
+)
+
+cfg = get_smoke("granite_8b")
+model = build_model(cfg)
+params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+
+B, S = 2, 64
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32)}
+logits, cache = model.prefill(params, batch, max_len=S + 8)
+
+# Quantization-only here (n == e): a random-init smoke model has a rough
+# KV timeline, so spectral truncation (e < n) is only appropriate for
+# TRAINED models whose adjacent-token keys/values are smooth (the paper's
+# premise applied to caches).  int8 quantization alone halves the cache.
+kcfg = KVCompressionConfig(n=16, e=16)
+raw_bytes = 0
+comp_bytes = 0
+max_rel = 0.0
+new_cache = {}
+for gname, group in cache.items():
+    new_group = dict(group)
+    for key in ("k", "v"):
+        kv = group[key]  # [L, B, T, H, D]
+        L = kv.shape[0]
+        outs = []
+        for l in range(L):
+            block = kv[l][:, :S]  # valid prefix
+            levels, scale = compress_kv_block(block, kcfg)
+            rec = decompress_kv_block(levels, scale, kcfg, dtype=kv.dtype)
+            rel = float(
+                jnp.linalg.norm((rec - block).astype(jnp.float32))
+                / (jnp.linalg.norm(block.astype(jnp.float32)) + 1e-9)
+            )
+            max_rel = max(max_rel, rel)
+            raw_bytes += block.size * 2
+            comp_bytes += levels.size + scale.size * 4
+            padded = jnp.zeros_like(kv[l]).at[:, :S].set(rec)
+            outs.append(padded)
+        new_group[key] = jnp.stack(outs)
+    new_cache[gname] = new_group
+
+print(f"KV cache: {raw_bytes/1e6:.2f} MB -> {comp_bytes/1e6:.2f} MB "
+      f"(CR {raw_bytes/comp_bytes:.2f}x), worst block rel err {max_rel:.4f}")
+
+tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+lg_ref, _ = model.decode_step(params, cache, tok, jnp.int32(S))
+lg_cmp, _ = model.decode_step(params, new_cache, tok, jnp.int32(S))
+agree = float(jnp.mean(
+    (jnp.argmax(lg_ref, -1) == jnp.argmax(lg_cmp, -1)).astype(jnp.float32)
+))
+drift = float(jnp.max(jnp.abs(
+    jax.nn.log_softmax(lg_ref.astype(jnp.float32))
+    - jax.nn.log_softmax(lg_cmp.astype(jnp.float32))
+)))
+print(f"decode with compressed cache: top-1 agreement {agree*100:.0f}%, "
+      f"max log-prob drift {drift:.3f}")

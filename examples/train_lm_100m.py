@@ -1,0 +1,103 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the full distributed stack — FSDP sharding rules, AdamW, deterministic data
+pipeline, fault-tolerant FPTC-compressed checkpoints, straggler timing.
+
+  PYTHONPATH=src python examples/train_lm_100m.py --steps 300
+  (kill it mid-run and relaunch: it resumes from the last checkpoint)
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import TokenPipeline
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.elastic import StepTimer
+from repro.distributed.optimizer import AdamW, AdamWConfig
+from repro.distributed.train import make_train_step
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.models.common import init_params
+from repro.models.config import ArchConfig
+
+CKPT_DIR = os.environ.get("CKPT_DIR", "/tmp/fptc_lm_100m")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    # ~100M params: 12L x d768 x ff3072, 32k vocab (GPT-2-small class)
+    cfg = ArchConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=12, d_ff=3072, vocab_size=32768,
+        head_dim=64,
+    )
+    model = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {n_params/1e6:.1f}M params")
+
+    mesh = make_local_mesh(1, 1)
+    opt = AdamW(AdamWConfig(base_lr=6e-4, warmup=20, total_steps=args.steps))
+    ts = make_train_step(model, opt, mesh)
+    pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq)
+
+    with mesh:
+        params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        start = 0
+        restored = ckpt.restore_latest(
+            CKPT_DIR, {"p": params, "m": opt_state.m, "v": opt_state.v}
+        )
+        if restored:
+            start, tree = restored
+            params = jax.tree_util.tree_map(jnp.asarray, tree["p"])
+            opt_state = opt_state._replace(
+                m=jax.tree_util.tree_map(jnp.asarray, tree["m"]),
+                v=jax.tree_util.tree_map(jnp.asarray, tree["v"]),
+                step=jnp.asarray(start, jnp.int32),
+            )
+            print(f"resumed from step {start}")
+
+        timer = StepTimer()
+        for step in range(start, args.steps):
+            tokens, labels = pipe.batch(step)
+            batch = {"tokens": jnp.asarray(tokens),
+                     "labels": jnp.asarray(labels)}
+            timer.start()
+            params, opt_state, metrics = ts.step_fn(params, opt_state, batch)
+            dt, straggler = timer.stop()
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step:4d} loss {float(metrics['loss']):7.4f} "
+                      f"gnorm {float(metrics['grad_norm']):7.3f} "
+                      f"{dt:6.2f}s" + ("  [straggler]" if straggler else ""),
+                      flush=True)
+            if (step + 1) % args.ckpt_every == 0:
+                host = jax.tree_util.tree_map(
+                    np.asarray,
+                    {"p": params, "m": opt_state.m, "v": opt_state.v},
+                )
+                t0 = time.time()
+                path = ckpt.save_checkpoint(CKPT_DIR, step + 1, host,
+                                            compress=True)
+                raw = sum(x.nbytes for x in jax.tree_util.tree_leaves(host))
+                disk = sum(
+                    os.path.getsize(os.path.join(path, f))
+                    for f in os.listdir(path)
+                )
+                print(f"  ckpt@{step+1}: {raw/1e6:.0f} MB state -> "
+                      f"{disk/1e6:.0f} MB on disk "
+                      f"(FPTC CR {raw/disk:.2f}x, {time.time()-t0:.1f}s)",
+                      flush=True)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.analysis.hlo_cost import HloCost, analyze_hlo
+
+__all__ = ["HloCost", "analyze_hlo"]

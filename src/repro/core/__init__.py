@@ -1,0 +1,21 @@
+"""FPTC core: the paper's contribution as composable JAX modules."""
+from repro.core.config import CodecConfig, DOMAIN_DEFAULTS
+from repro.core.container import Container
+from repro.core.calibration import DomainTables, DeviceTables, calibrate
+from repro.core.codec import decode, decode_device, encode, encode_device
+from repro.core.metrics import compression_ratio, prd
+
+__all__ = [
+    "CodecConfig",
+    "DOMAIN_DEFAULTS",
+    "Container",
+    "DomainTables",
+    "DeviceTables",
+    "calibrate",
+    "encode",
+    "decode",
+    "encode_device",
+    "decode_device",
+    "compression_ratio",
+    "prd",
+]

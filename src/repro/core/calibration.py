@@ -1,0 +1,154 @@
+"""Offline per-domain calibration (paper §3.4, Fig. 4).
+
+From representative domain data, precompute the two deployed structures:
+  1. the quantization table (per-bin zone + clipped-percentile scales), and
+  2. the length-limited canonical Huffman codebook.
+
+Both are then shipped to encoders (embedded devices) and decoders (servers).
+Laplace (+1) smoothing is applied to the symbol histogram so *every* uint8
+symbol has a codeword — the codebook only approximates the optimal code for
+unseen data anyway (paper §3.4.2: "an intrinsic property of Huffman"), and a
+missing codeword would be a hard encode failure in deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dct
+from repro.core.config import CodecConfig
+from repro.core.huffman import HuffmanCodebook, build_codebook
+from repro.core.quantize import QuantTable, build_quant_table, quantize
+
+__all__ = ["DomainTables", "DeviceTables", "calibrate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DomainTables:
+    """Host-side calibrated structures for one signal domain."""
+
+    config: CodecConfig
+    quant: QuantTable
+    book: HuffmanCodebook
+    domain_id: int = 0
+    hist: Optional[np.ndarray] = None  # smoothed symbol histogram (rebuilds
+    # the codebook deterministically — serialized with ckpt compression)
+
+    def device_tables(self) -> "DeviceTables":
+        b = self.book
+        return DeviceTables(
+            codes=jnp.asarray(b.codes, dtype=jnp.uint32),
+            lengths=jnp.asarray(b.lengths, dtype=jnp.int32),
+            dec_limit=jnp.asarray(b.limit_shifted[1:], dtype=jnp.uint32),
+            dec_first=jnp.asarray(b.first_code_shifted, dtype=jnp.uint32),
+            dec_rank=jnp.asarray(b.rank_offset, dtype=jnp.int32),
+            dec_syms=jnp.asarray(b.sorted_symbols, dtype=jnp.int32),
+            quant=self.quant,
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DeviceTables:
+    """Device-resident tables: Huffman encode/decode + quantization."""
+
+    codes: jnp.ndarray  # uint32[256]
+    lengths: jnp.ndarray  # int32[256]
+    dec_limit: jnp.ndarray  # uint32[L_max]
+    dec_first: jnp.ndarray  # uint32[L_max + 1]
+    dec_rank: jnp.ndarray  # int32[L_max + 1]
+    dec_syms: jnp.ndarray  # int32[256]
+    quant: QuantTable
+
+    def tree_flatten(self):
+        return (
+            self.codes,
+            self.lengths,
+            self.dec_limit,
+            self.dec_first,
+            self.dec_rank,
+            self.dec_syms,
+            self.quant,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def calibrate(
+    signal: np.ndarray,
+    config: CodecConfig,
+    *,
+    domain_id: int = 0,
+    max_windows: Optional[int] = 65536,
+    seed: int = 0,
+) -> DomainTables:
+    """Calibrate quantization table + Huffman codebook on representative data.
+
+    Args:
+      signal: 1-D representative signal strip (float).
+      config: codec parameters (Table 1).
+      max_windows: subsample cap for calibration windows (randomly sampled —
+        paper §3.2.1: "distributions of randomly sampled DCT windows are very
+        similar").
+      seed: subsampling RNG seed.
+    """
+    signal = np.asarray(signal, dtype=np.float32).ravel()
+    windows = np.asarray(dct.window_signal(jnp.asarray(signal), config.n))
+    if max_windows is not None and windows.shape[0] > max_windows:
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(windows.shape[0], size=max_windows, replace=False)
+        windows = windows[idx]
+    coeffs = np.asarray(dct.forward_dct(jnp.asarray(windows), config.e))
+
+    quant = build_quant_table(
+        coeffs,
+        b1=config.b1,
+        b2=config.b2,
+        mu=config.mu,
+        alpha1=config.alpha1,
+        percentile=config.a0_percentile,
+        scale_headroom=config.scale_headroom,
+    )
+
+    symbols = np.asarray(quantize(jnp.asarray(coeffs), quant)).ravel()
+    hist = np.bincount(symbols, minlength=256).astype(np.int64)
+    hist += 1  # Laplace smoothing: every symbol must be encodable
+    book = build_codebook(hist, l_max=config.l_max)
+    return DomainTables(
+        config=config, quant=quant, book=book, domain_id=domain_id, hist=hist
+    )
+
+
+def tables_from_hist(
+    config: CodecConfig,
+    scale: np.ndarray,
+    hist: np.ndarray,
+    *,
+    domain_id: int = 0,
+) -> DomainTables:
+    """Rebuild DomainTables from serialized (scale, hist) — used by the
+    checkpoint decompressor and any consumer of shipped codec structures."""
+    import jax.numpy as _jnp
+
+    e = scale.shape[0]
+    zone = np.full((e,), 2, dtype=np.int32)
+    zone[: config.b2] = 1
+    zone[: config.b1] = 0
+    quant = QuantTable(
+        zone=_jnp.asarray(zone),
+        scale=_jnp.asarray(scale, dtype=_jnp.float32),
+        mu=_jnp.float32(config.mu),
+        alpha1=_jnp.float32(config.alpha1),
+    )
+    book = build_codebook(np.asarray(hist, dtype=np.int64), l_max=config.l_max)
+    return DomainTables(
+        config=config, quant=quant, book=book, domain_id=domain_id,
+        hist=np.asarray(hist),
+    )

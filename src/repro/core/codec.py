@@ -1,0 +1,184 @@
+"""End-to-end FPTC codec (paper Fig. 3): transform → quantize → entropy code.
+
+Two matched implementations:
+
+  * **Host path** (`encode` / `decode`) — numpy + Algorithm-1 reference
+    bitpacking.  This models the paper's embedded sequential encoder and
+    serves as the oracle for everything else.
+  * **Device path** (`encode_device` / `decode_device`) — jitted JAX.  The
+    decoder is the word-parallel SymLen decode + fused dequant/iDCT pipeline
+    (the paper's dual-fused GPU design, lifted to XLA; the Pallas kernels in
+    ``repro.kernels`` are the hand-tiled TPU versions wired in via
+    ``use_kernels=True``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dct, symlen
+from repro.core.calibration import DeviceTables, DomainTables
+from repro.core.container import Container
+from repro.core.quantize import dequantize, quantize
+
+__all__ = ["encode", "decode", "encode_device", "decode_device"]
+
+
+# ---------------------------------------------------------------------------
+# Host (reference / embedded-encoder) path
+# ---------------------------------------------------------------------------
+def encode(signal: np.ndarray, tables: DomainTables) -> Container:
+    """Single-pass table-driven encode (paper §4.1, Fig. 5)."""
+    cfg = tables.config
+    signal = np.asarray(signal, dtype=np.float32).ravel()
+    length = signal.shape[0]
+    windows = dct.window_signal(jnp.asarray(signal), cfg.n)
+    coeffs = dct.forward_dct(windows, cfg.e)
+    syms = np.asarray(quantize(coeffs, tables.quant)).ravel()
+    stream = symlen.pack_symlen_np(syms, tables.book)
+    return Container(
+        words=stream.words,
+        symlen=stream.symlen.astype(np.uint8),
+        num_symbols=stream.num_symbols,
+        num_windows=int(windows.shape[0]),
+        signal_length=length,
+        n=cfg.n,
+        e=cfg.e,
+        l_max=cfg.l_max,
+        domain_id=tables.domain_id,
+    )
+
+
+def decode(container: Container, tables: DomainTables) -> np.ndarray:
+    """Reference decode: serial Huffman LUT + dequant + inverse DCT."""
+    stream = symlen.PackedStream(
+        words=container.words,
+        symlen=container.symlen.astype(np.int32),
+        num_symbols=container.num_symbols,
+    )
+    syms = symlen.unpack_symlen_np(stream, tables.book)
+    coeffs_q = jnp.asarray(syms.reshape(container.num_windows, container.e))
+    coeffs = dequantize(coeffs_q, tables.quant)
+    windows = dct.inverse_dct(coeffs, container.n)
+    return np.asarray(dct.unwindow_signal(windows, container.signal_length))
+
+
+# ---------------------------------------------------------------------------
+# Device (jitted) path
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n", "e"))
+def _encode_stages_device(
+    signal: jnp.ndarray, tables: DeviceTables, n: int, e: int
+):
+    windows = dct.window_signal(signal, n)
+    coeffs = dct.forward_dct(windows, e)
+    syms = quantize(coeffs, tables.quant).ravel()
+    hi, lo, sl, num_words = symlen.pack_symlen_scan(
+        syms, tables.codes, tables.lengths
+    )
+    return hi, lo, sl, num_words, windows.shape[0]
+
+
+def encode_device(
+    signal: jnp.ndarray, tables: DomainTables
+) -> Container:
+    """Jitted encode (DCT + quant fully vectorized; packing via lax.scan)."""
+    cfg = tables.config
+    signal = jnp.asarray(signal, dtype=jnp.float32).ravel()
+    dev = tables.device_tables()
+    hi, lo, sl, num_words, n_windows = _encode_stages_device(
+        signal, dev, cfg.n, cfg.e
+    )
+    nw = int(num_words)
+    words = symlen.u32_to_words(np.asarray(hi[:nw]), np.asarray(lo[:nw]))
+    return Container(
+        words=words,
+        symlen=np.asarray(sl[:nw]).astype(np.uint8),
+        num_symbols=int(n_windows) * cfg.e,
+        num_windows=int(n_windows),
+        signal_length=int(signal.shape[0]),
+        n=cfg.n,
+        e=cfg.e,
+        l_max=cfg.l_max,
+        domain_id=tables.domain_id,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("l_max", "max_symlen", "num_symbols", "num_windows",
+                     "n", "e", "signal_length", "use_kernels"),
+)
+def _decode_device(
+    hi: jnp.ndarray,
+    lo: jnp.ndarray,
+    sl: jnp.ndarray,
+    tables: DeviceTables,
+    *,
+    l_max: int,
+    max_symlen: int,
+    num_symbols: int,
+    num_windows: int,
+    n: int,
+    e: int,
+    signal_length: int,
+    use_kernels: bool = False,
+) -> jnp.ndarray:
+    if use_kernels:
+        # hand-tiled Pallas TPU kernels (interpret=True on CPU)
+        from repro.kernels import ops as kops
+
+        syms = kops.huffman_decode(
+            hi, lo, sl, tables,
+            l_max=l_max, max_symlen=max_symlen, num_symbols=num_symbols,
+        )
+        coeffs_q = syms.reshape(num_windows, e)
+        windows = kops.idct_dequant(coeffs_q, tables.quant, n=n)
+    else:
+        syms = symlen.unpack_symlen(
+            hi, lo, sl,
+            tables.dec_limit, tables.dec_first, tables.dec_rank,
+            tables.dec_syms,
+            l_max=l_max, max_symlen=max_symlen, num_symbols=num_symbols,
+        )
+        coeffs_q = syms.reshape(num_windows, e)
+        coeffs = dequantize(coeffs_q, tables.quant)
+        windows = dct.inverse_dct(coeffs, n)
+    return dct.unwindow_signal(windows, signal_length)
+
+
+def decode_device(
+    container: Container, tables: DomainTables, *, use_kernels: bool = False
+) -> np.ndarray:
+    """Word-parallel decode (the paper's dual-fused GPU pipeline on XLA/TPU)."""
+    hi, lo = symlen.words_to_u32(container.words)
+    out = _decode_device(
+        jnp.asarray(hi),
+        jnp.asarray(lo),
+        jnp.asarray(container.symlen, dtype=jnp.int32),
+        tables.device_tables(),
+        l_max=container.l_max,
+        max_symlen=container.max_symlen,
+        num_symbols=container.num_symbols,
+        num_windows=container.num_windows,
+        n=container.n,
+        e=container.e,
+        signal_length=container.signal_length,
+        use_kernels=use_kernels,
+    )
+    return np.asarray(out)
+
+
+def roundtrip_metrics(
+    signal: np.ndarray, tables: DomainTables
+) -> Tuple[float, float]:
+    """(CR, PRD) of a host-path roundtrip — used by RD benchmarks."""
+    from repro.core.metrics import prd
+
+    c = encode(signal, tables)
+    rec = decode(c, tables)
+    return c.compression_ratio, prd(signal, rec)

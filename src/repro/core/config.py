@@ -1,0 +1,73 @@
+"""Codec configuration — the paper's Table 1 parameters."""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["CodecConfig", "DOMAIN_DEFAULTS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecConfig:
+    """FPTC per-signal-domain parameters (paper Table 1).
+
+    Attributes:
+      n:  DCT_SIZE — transform block size, range [4, 128].
+      e:  ENCODED_COEFFS — retained low-frequency coefficients, [1, N].
+      b1: HYBRID_BOUNDARY_1 — low/mid zone boundary, [0, E].
+      b2: HYBRID_BOUNDARY_2 — mid/high zone boundary, [B1, E].
+      mu: MU_COMPANDING — companding strength, [1, 500].
+      alpha1: DEAD_RATIO_ZONE1 — zone-1 deadzone ratio, [0, 1].
+      a0_percentile: ZONE_PERCENTILE — clip percentile for zone maxima,
+        [90, 100].
+      l_max: maximum Huffman codeword length (LUT is 2**l_max entries; the
+        paper bounds it so the table stays cache-resident).
+      scale_headroom: multiplier on calibrated zone maxima — clipping guard
+        for low-stationarity domains (paper tunes A0 per-domain by
+        stationarity; this is the explicit knob).
+    """
+
+    n: int = 32
+    e: int = 16
+    b1: int = 2
+    b2: int = 16
+    mu: float = 50.0
+    alpha1: float = 0.004
+    a0_percentile: float = 99.9
+    l_max: int = 12
+    scale_headroom: float = 1.0
+
+    def __post_init__(self):
+        if not (4 <= self.n <= 128):
+            raise ValueError(f"N={self.n} outside [4, 128]")
+        if not (1 <= self.e <= self.n):
+            raise ValueError(f"E={self.e} outside [1, N={self.n}]")
+        if not (0 <= self.b1 <= self.e):
+            raise ValueError(f"B1={self.b1} outside [0, E={self.e}]")
+        if not (self.b1 <= self.b2 <= self.e):
+            raise ValueError(f"B2={self.b2} outside [B1={self.b1}, E={self.e}]")
+        if not (1.0 <= self.mu <= 500.0):
+            raise ValueError(f"mu={self.mu} outside [1, 500]")
+        if not (0.0 <= self.alpha1 <= 1.0):
+            raise ValueError(f"alpha1={self.alpha1} outside [0, 1]")
+        if not (90.0 <= self.a0_percentile <= 100.0):
+            raise ValueError(f"percentile={self.a0_percentile} outside [90,100]")
+        if not (1 <= self.l_max <= 16):
+            raise ValueError(f"l_max={self.l_max} outside [1, 16]")
+
+    def replace(self, **kw) -> "CodecConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Typical per-domain operating points (paper §3.4: typical values, tuned per
+# domain smoothness / sampling rate).  These seed calibration; the RD
+# benchmark sweeps around them exactly as the paper sweeps N and E.
+DOMAIN_DEFAULTS = {
+    "biomedical": CodecConfig(n=32, e=16, b1=4, b2=16, mu=50.0),
+    "seismic": CodecConfig(
+        n=32, e=32, b1=16, b2=32, mu=255.0, a0_percentile=99.99,
+        scale_headroom=1.6,
+    ),
+    "power": CodecConfig(n=32, e=6, b1=2, b2=6, mu=50.0),
+    "meteorological": CodecConfig(n=32, e=8, b1=2, b2=8, mu=50.0),
+    "default": CodecConfig(),
+}

@@ -1,0 +1,127 @@
+"""Compressed container: header + SymLen words + symlen sidecar.
+
+The container is the unit of archival/transmission.  Header fields make every
+container self-describing (given the domain's calibrated tables, which are
+deployed once per domain — paper §3.4, Fig. 4).
+
+Byte layout (little-endian):
+  magic           4 bytes  b"FPTC"
+  version         u16
+  l_max           u16
+  n, e            u16, u16
+  num_words       u32
+  num_symbols     u64
+  num_windows     u32
+  signal_length   u64
+  max_symlen      u16
+  domain_id       u16
+  reserved        u32      (checksum of symlen sidecar — fault detection)
+  words           num_words * 8 bytes (uint64 LE)
+  symlen          num_words * 1 byte  (uint8; symlen <= 64)
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+
+import numpy as np
+
+__all__ = ["Container", "HEADER_BYTES"]
+
+_MAGIC = b"FPTC"
+_VERSION = 1
+_HDR = struct.Struct("<4sHHHHIQIQHHI")
+HEADER_BYTES = _HDR.size
+
+
+@dataclasses.dataclass
+class Container:
+    words: np.ndarray  # uint64[W]
+    symlen: np.ndarray  # uint8[W]
+    num_symbols: int
+    num_windows: int
+    signal_length: int
+    n: int
+    e: int
+    l_max: int
+    domain_id: int = 0
+
+    @property
+    def num_words(self) -> int:
+        return int(self.words.shape[0])
+
+    @property
+    def max_symlen(self) -> int:
+        return int(self.symlen.max()) if self.symlen.size else 0
+
+    @property
+    def compressed_bytes(self) -> int:
+        return HEADER_BYTES + self.num_words * 8 + self.num_words
+
+    @property
+    def original_bytes(self) -> int:
+        return self.signal_length * 4  # float32 samples
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.original_bytes / max(self.compressed_bytes, 1)
+
+    def to_bytes(self) -> bytes:
+        symlen = self.symlen.astype(np.uint8)
+        hdr = _HDR.pack(
+            _MAGIC,
+            _VERSION,
+            self.l_max,
+            self.n,
+            self.e,
+            self.num_words,
+            self.num_symbols,
+            self.num_windows,
+            self.signal_length,
+            self.max_symlen,
+            self.domain_id,
+            zlib.crc32(symlen.tobytes()),
+        )
+        return hdr + self.words.astype("<u8").tobytes() + symlen.tobytes()
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "Container":
+        (
+            magic,
+            version,
+            l_max,
+            n,
+            e,
+            num_words,
+            num_symbols,
+            num_windows,
+            signal_length,
+            max_symlen,
+            domain_id,
+            crc,
+        ) = _HDR.unpack_from(data, 0)
+        if magic != _MAGIC:
+            raise ValueError("bad magic — not an FPTC container")
+        if version != _VERSION:
+            raise ValueError(f"unsupported container version {version}")
+        off = HEADER_BYTES
+        words = np.frombuffer(data, dtype="<u8", count=num_words, offset=off)
+        off += num_words * 8
+        symlen = np.frombuffer(data, dtype=np.uint8, count=num_words, offset=off)
+        if zlib.crc32(symlen.tobytes()) != crc:
+            raise ValueError("symlen sidecar CRC mismatch — corrupt container")
+        c = cls(
+            words=words.copy(),
+            symlen=symlen.copy(),
+            num_symbols=num_symbols,
+            num_windows=num_windows,
+            signal_length=signal_length,
+            n=n,
+            e=e,
+            l_max=l_max,
+            domain_id=domain_id,
+        )
+        if c.max_symlen != max_symlen:
+            raise ValueError("max_symlen header mismatch — corrupt container")
+        return c

@@ -1,0 +1,197 @@
+"""Hybrid three-zone quantization (paper §3.2, Eqs. 2-3).
+
+The E retained DCT coefficient indices are partitioned into three contiguous
+zones by boundaries B1, B2:
+
+  zone 0  [0,  B1): mu-law companding — fine resolution near zero, coarse at
+                    the extremes. q in [0,1] mapped to 8-bit levels with
+                    positive -> 129..255, negative -> 0..127, zero -> 128.
+  zone 1  [B1, B2): symmetric linear quantizer with a deadzone of width
+                    d1 = alpha1 * A1 around zero (everything inside collapses
+                    to the 128 bin).
+  zone 2  [B2, E ): aggressive zeroing — every coefficient maps to bin 128.
+
+Per-bin maxima A[k] are clipped percentiles over a representative calibration
+set (paper §3.2.1); the whole mapping is table-driven so the encoder is a
+single vectorized pass.  The "quantization table" of the paper (Fig. 4) is the
+:class:`QuantTable` pytree below: zone id, per-bin scale, and the two scalars
+(mu, alpha1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QuantTable", "build_quant_table", "quantize", "dequantize"]
+
+_ZERO_BIN = 128.0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantTable:
+    """Table-driven 3-zone quantizer parameters for one signal domain.
+
+    Attributes:
+      zone:  int32[E]  — zone id per retained coefficient index (0/1/2).
+      scale: float32[E] — per-bin clipped-percentile maximum (A0 / A1).
+      mu:    float32[] — companding strength (zone 0).
+      alpha1: float32[] — deadzone ratio (zone 1).
+    """
+
+    zone: jnp.ndarray
+    scale: jnp.ndarray
+    mu: jnp.ndarray
+    alpha1: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.zone, self.scale, self.mu, self.alpha1), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def num_coeffs(self) -> int:
+        return self.zone.shape[0]
+
+
+def build_quant_table(
+    calib_coeffs: np.ndarray,
+    *,
+    b1: int,
+    b2: int,
+    mu: float,
+    alpha1: float,
+    percentile: float,
+    scale_headroom: float = 1.0,
+) -> QuantTable:
+    """Build a :class:`QuantTable` from calibration coefficients [W, E].
+
+    The per-bin scale is the ``percentile`` of |coeff| over calibration
+    windows (paper: "clipped percentile ... rejecting outliers that would
+    otherwise waste quantization levels on rare extremes").
+    """
+    calib_coeffs = np.asarray(calib_coeffs, dtype=np.float64)
+    if calib_coeffs.ndim != 2:
+        calib_coeffs = calib_coeffs.reshape(-1, calib_coeffs.shape[-1])
+    e = calib_coeffs.shape[-1]
+    if not (0 <= b1 <= b2 <= e):
+        raise ValueError(f"need 0 <= B1({b1}) <= B2({b2}) <= E({e})")
+    scale = np.percentile(np.abs(calib_coeffs), percentile, axis=0)
+    # Headroom guards against clipping on non-stationary domains where the
+    # deployed data's tails exceed the calibration percentile (paper §3.4.1:
+    # A0 is set per-domain by stationarity; seismic needs the most slack).
+    scale = np.maximum(scale * scale_headroom, 1e-12)
+    zone = np.full((e,), 2, dtype=np.int32)
+    zone[:b2] = 1
+    zone[:b1] = 0
+    return QuantTable(
+        zone=jnp.asarray(zone),
+        scale=jnp.asarray(scale, dtype=jnp.float32),
+        mu=jnp.float32(mu),
+        alpha1=jnp.float32(alpha1),
+    )
+
+
+def _mulaw_compress(c_abs: jnp.ndarray, a0: jnp.ndarray, mu: jnp.ndarray):
+    """Eq. 2: q = ln(1 + mu*|c|/A0) / ln(1 + mu), |c| clipped to A0."""
+    x = jnp.minimum(c_abs / a0, 1.0)
+    return jnp.log1p(mu * x) / jnp.log1p(mu)
+
+
+def _mulaw_expand(q: jnp.ndarray, a0: jnp.ndarray, mu: jnp.ndarray):
+    return a0 * (jnp.expm1(q * jnp.log1p(mu)) / mu)
+
+
+def quantize(coeffs: jnp.ndarray, table: QuantTable) -> jnp.ndarray:
+    """Map float coefficients [..., E] to uint8 levels via the 3-zone table."""
+    c = coeffs.astype(jnp.float32)
+    a = table.scale
+    mu = table.mu
+    sign_pos = c > 0
+
+    # --- zone 0: mu-law companding -------------------------------------
+    q01 = _mulaw_compress(jnp.abs(c), a, mu)
+    lvl0 = jnp.where(
+        sign_pos,
+        129.0 + jnp.round(q01 * 126.0),
+        127.0 - jnp.round(q01 * 127.0),
+    )
+    # exact zeros land on the zero bin
+    lvl0 = jnp.where(c == 0, _ZERO_BIN, lvl0)
+
+    # --- zone 1: linear deadzone (Eq. 3) --------------------------------
+    d1 = table.alpha1 * a
+    denom = jnp.maximum(a - d1, 1e-12)
+    c_clip = jnp.clip(c, -a, a)
+    mag = jnp.abs(c_clip)
+    lvl1_pos = 129.0 + jnp.floor((c_clip - d1) / denom * 126.0 + 0.5)
+    lvl1_neg = 127.0 - jnp.floor((mag - d1) / denom * 127.0 + 0.5)
+    lvl1 = jnp.where(
+        c_clip > d1, lvl1_pos, jnp.where(c_clip < -d1, lvl1_neg, _ZERO_BIN)
+    )
+
+    # --- zone 2: aggressive zeroing -------------------------------------
+    lvl2 = jnp.full_like(c, _ZERO_BIN)
+
+    lvl = jnp.where(
+        table.zone == 0, lvl0, jnp.where(table.zone == 1, lvl1, lvl2)
+    )
+    return jnp.clip(lvl, 0.0, 255.0).astype(jnp.uint8)
+
+
+def dequantize(levels: jnp.ndarray, table: QuantTable) -> jnp.ndarray:
+    """Inverse 3-zone mapping: uint8 levels [..., E] -> float32 coefficients.
+
+    Uses the midpoint reconstruction of each quantization cell.
+    """
+    lvl = levels.astype(jnp.float32)
+    a = table.scale
+    mu = table.mu
+    pos = lvl > _ZERO_BIN
+    neg = lvl < _ZERO_BIN
+
+    # zone 0 inverse mu-law
+    q01 = jnp.where(pos, (lvl - 129.0) / 126.0, (127.0 - lvl) / 127.0)
+    mag0 = _mulaw_expand(jnp.clip(q01, 0.0, 1.0), a, mu)
+    c0 = jnp.where(pos, mag0, -mag0)
+    c0 = jnp.where(lvl == _ZERO_BIN, 0.0, c0)
+
+    # zone 1 inverse linear deadzone
+    d1 = table.alpha1 * a
+    span = a - d1
+    mag1 = jnp.where(
+        pos, d1 + (lvl - 129.0) / 126.0 * span, d1 + (127.0 - lvl) / 127.0 * span
+    )
+    c1 = jnp.where(pos, mag1, jnp.where(neg, -mag1, 0.0))
+
+    c = jnp.where(table.zone == 0, c0, jnp.where(table.zone == 1, c1, 0.0))
+    return c
+
+
+def quant_grid(table: QuantTable) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All 256 reconstruction values per bin: [E, 256] (for LUT-style dequant).
+
+    This is the dequantization table materialized — used by the fused Pallas
+    decode kernel as a gather-free one-hot matmul operand.
+    """
+    levels = jnp.arange(256, dtype=jnp.uint8)[None, :]  # [1, 256]
+    e = table.num_coeffs
+
+    def per_bin(k):
+        sub = QuantTable(
+            zone=table.zone[k : k + 1],
+            scale=table.scale[k : k + 1],
+            mu=table.mu,
+            alpha1=table.alpha1,
+        )
+        return dequantize(levels.T, sub)[:, 0]  # [256]
+
+    grid = jax.vmap(per_bin)(jnp.arange(e))  # [E, 256]
+    return grid, levels[0]

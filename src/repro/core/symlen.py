@@ -1,0 +1,296 @@
+"""SymLen bitstream format (paper §4.1, Algorithm 1) — pack + parallel unpack.
+
+Codewords are greedily packed MSB-first into fixed 64-bit words; a codeword
+never straddles a word boundary.  The *symlen* sidecar stores, per word, the
+number of symbols it contains — making every word independently decodable
+(the decoder stops after symlen[w] symbols and ignores padding bits).
+
+On-wire format: little-endian uint64 words.  Inside JAX we represent each
+word as a (hi, lo) pair of uint32 because TPU int64 is emulated (DESIGN.md
+§2); ``words_to_u32`` / ``u32_to_words`` convert losslessly.
+
+Three implementations:
+  * ``pack_symlen_np``    — faithful Algorithm 1, host numpy (the paper's
+                            embedded sequential encoder).
+  * ``pack_symlen_scan``  — the same algorithm as a ``lax.scan`` (jittable);
+                            one scan step per symbol, <=1 word flush per step.
+  * ``unpack_symlen``     — word-parallel decode in pure JAX: lane-per-word
+                            slot loop + prefix-sum compaction.  The Pallas
+                            kernel in ``repro.kernels.huffman_decode`` is the
+                            TPU-tiled version of the same computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.huffman import HuffmanCodebook
+
+__all__ = [
+    "PackedStream",
+    "pack_symlen_np",
+    "pack_symlen_scan",
+    "unpack_symlen_np",
+    "unpack_symlen",
+    "words_to_u32",
+    "u32_to_words",
+]
+
+WORD_BITS = 64
+
+
+@dataclasses.dataclass
+class PackedStream:
+    """A SymLen-packed stream (host container; see core.container for I/O)."""
+
+    words: np.ndarray  # uint64[W]
+    symlen: np.ndarray  # int32[W]
+    num_symbols: int
+
+    @property
+    def num_words(self) -> int:
+        return int(self.words.shape[0])
+
+    @property
+    def max_symlen(self) -> int:
+        return int(self.symlen.max()) if self.symlen.size else 0
+
+    @property
+    def payload_bytes(self) -> int:
+        # words + symlen sidecar (uint8 is sufficient: symlen <= 64)
+        return self.num_words * 8 + self.num_words
+
+
+def words_to_u32(words: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """uint64[W] -> (hi uint32[W], lo uint32[W])."""
+    w = np.asarray(words, dtype=np.uint64)
+    hi = (w >> np.uint64(32)).astype(np.uint32)
+    lo = (w & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return hi, lo
+
+
+def u32_to_words(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) | np.asarray(
+        lo, np.uint64
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host reference encoder — Algorithm 1, line for line.
+# ---------------------------------------------------------------------------
+def pack_symlen_np(symbols: np.ndarray, book: HuffmanCodebook) -> PackedStream:
+    symbols = np.asarray(symbols, dtype=np.uint8).ravel()
+    codes = book.codes
+    lens = book.lengths
+    out_words = []
+    out_symlen = []
+    buffer = 0
+    bit_size = 0
+    count = 0
+    for s in symbols:
+        code = int(codes[s])
+        code_len = int(lens[s])
+        if code_len == 0:
+            raise ValueError(f"symbol {s} has no codeword (histogram gap)")
+        if bit_size + code_len > WORD_BITS:
+            out_words.append(buffer)
+            out_symlen.append(count)
+            buffer = 0
+            bit_size = 0
+            count = 0
+            # retry same symbol on the fresh word (always fits: len <= 64)
+        shift = WORD_BITS - bit_size - code_len
+        buffer |= code << shift
+        bit_size += code_len
+        count += 1
+    if count > 0:
+        out_words.append(buffer)
+        out_symlen.append(count)
+    return PackedStream(
+        words=np.array(out_words, dtype=np.uint64),
+        symlen=np.array(out_symlen, dtype=np.int32),
+        num_symbols=int(symbols.size),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Device encoder — identical semantics as a lax.scan (1 step per symbol).
+# ---------------------------------------------------------------------------
+def pack_symlen_scan(
+    symbols: jnp.ndarray,
+    codes: jnp.ndarray,  # uint32[256] (right-aligned codewords, len <= 32)
+    lengths: jnp.ndarray,  # int32[256]
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (hi uint32[W], lo uint32[W], symlen int32[W], num_words int32).
+
+    Output arrays are sized at the worst case (one word per symbol); the
+    returned ``num_words`` gives the valid prefix. Codeword length is bounded
+    by 32 (L_max <= 16 in practice) so a codeword touches at most both halves
+    of the (hi, lo) pair.
+    """
+    n = symbols.shape[0]
+    symbols = symbols.astype(jnp.int32)
+
+    def emit(code: jnp.ndarray, clen: jnp.ndarray, bit_size: jnp.ndarray):
+        """Place right-aligned ``code`` of length clen at bit offset bit_size
+        (MSB-first) inside a fresh 64-bit (hi, lo) pair."""
+        shift = 64 - bit_size - clen  # in [0, 63]
+        c = code.astype(jnp.uint32)
+        # hi receives bits of code shifted by (shift - 32) when shift >= 32
+        hi = jnp.where(
+            shift >= 32,
+            _shl32(c, shift - 32),
+            _shr32(c, 32 - shift),
+        )
+        lo = jnp.where(shift >= 32, jnp.uint32(0), _shl32(c, shift))
+        return hi, lo
+
+    def step(carry, sym):
+        w, count, bhi, blo, bit_size, out_hi, out_lo, out_sl = carry
+        code = codes[sym]
+        clen = lengths[sym]
+        flush = bit_size + clen > WORD_BITS
+        # flush current word
+        out_hi = jnp.where(flush, out_hi.at[w].set(bhi), out_hi)
+        out_lo = jnp.where(flush, out_lo.at[w].set(blo), out_lo)
+        out_sl = jnp.where(flush, out_sl.at[w].set(count), out_sl)
+        w = jnp.where(flush, w + 1, w)
+        bhi = jnp.where(flush, jnp.uint32(0), bhi)
+        blo = jnp.where(flush, jnp.uint32(0), blo)
+        bit_size = jnp.where(flush, 0, bit_size)
+        count = jnp.where(flush, 0, count)
+        # append symbol
+        add_hi, add_lo = emit(code, clen, bit_size)
+        bhi = bhi | add_hi
+        blo = blo | add_lo
+        bit_size = bit_size + clen
+        count = count + 1
+        return (w, count, bhi, blo, bit_size, out_hi, out_lo, out_sl), None
+
+    init = (
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.uint32(0),
+        jnp.uint32(0),
+        jnp.int32(0),
+        jnp.zeros((n,), jnp.uint32),
+        jnp.zeros((n,), jnp.uint32),
+        jnp.zeros((n,), jnp.int32),
+    )
+    (w, count, bhi, blo, _, out_hi, out_lo, out_sl), _ = jax.lax.scan(
+        step, init, symbols
+    )
+    # final partial word
+    has_tail = count > 0
+    out_hi = jnp.where(has_tail, out_hi.at[w].set(bhi), out_hi)
+    out_lo = jnp.where(has_tail, out_lo.at[w].set(blo), out_lo)
+    out_sl = jnp.where(has_tail, out_sl.at[w].set(count), out_sl)
+    num_words = w + has_tail.astype(jnp.int32)
+    return out_hi, out_lo, out_sl, num_words
+
+
+def _shl32(x: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """uint32 left shift, defined 0 for s >= 32 or s < 0."""
+    s32 = jnp.clip(s, 0, 31).astype(jnp.uint32)
+    val = x << s32
+    return jnp.where((s >= 32) | (s < 0), jnp.uint32(0), val)
+
+
+def _shr32(x: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """uint32 logical right shift, defined 0 for s >= 32 or s < 0."""
+    s32 = jnp.clip(s, 0, 31).astype(jnp.uint32)
+    val = x >> s32
+    return jnp.where((s >= 32) | (s < 0), jnp.uint32(0), val)
+
+
+# ---------------------------------------------------------------------------
+# Host reference decoder (bit-serial, LUT-based — the paper's GPU semantics).
+# ---------------------------------------------------------------------------
+def unpack_symlen_np(
+    stream: PackedStream, book: HuffmanCodebook
+) -> np.ndarray:
+    out = np.empty(stream.num_symbols, dtype=np.uint8)
+    pos = 0
+    lmax = book.l_max
+    mask = (1 << lmax) - 1
+    for w, sl in zip(stream.words, stream.symlen):
+        cur = int(w)
+        consumed = 0
+        for _ in range(int(sl)):
+            window = (cur >> max(WORD_BITS - lmax, 0)) & mask
+            # if fewer than lmax bits remain, low bits are zero padding —
+            # prefix-free codes still decode correctly (paper §4.2.1)
+            sym = book.lut_symbol[window]
+            l = int(book.lut_length[window])
+            cur = (cur << l) & ((1 << WORD_BITS) - 1)
+            consumed += l
+            out[pos] = sym
+            pos += 1
+        assert consumed <= WORD_BITS
+    assert pos == stream.num_symbols
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Word-parallel decoder — pure JAX (XLA); mirrors the Pallas kernel exactly.
+# ---------------------------------------------------------------------------
+def unpack_symlen(
+    hi: jnp.ndarray,  # uint32[W]
+    lo: jnp.ndarray,  # uint32[W]
+    symlen: jnp.ndarray,  # int32[W]
+    dec_limit: jnp.ndarray,  # uint32[L_max] = limit_shifted[1:]
+    dec_first: jnp.ndarray,  # uint32[L_max + 1] = first_code_shifted
+    dec_rank: jnp.ndarray,  # int32[L_max + 1]  = rank_offset
+    dec_syms: jnp.ndarray,  # int32[256]        = sorted_symbols
+    l_max: int,
+    max_symlen: int,
+    num_symbols: int,
+) -> jnp.ndarray:
+    """Decode all words in parallel and compact to a dense uint8[num_symbols].
+
+    Per slot iteration (over ``max_symlen`` slots), ALL words decode one
+    symbol simultaneously:
+      1. prefix  = top L_max bits of the remaining buffer (lives in hi)
+      2. length  = 1 + sum_l [prefix >= limit_shifted[l]]   (vector compares)
+      3. rank    = rank_offset[len] + ((prefix - first_code_shifted[len])
+                   >> (L_max - len))
+      4. symbol  = sorted_symbols[rank]
+      5. funnel-shift (hi, lo) left by length
+    Compaction: out[t] = padded[word(t), slot(t)] with word(t) found by
+    searchsorted over the exclusive prefix sum of symlen — the XLA lift of the
+    paper's prefix-scan + warp-cooperative write stage.
+    """
+    w = hi.shape[0]
+
+    def slot_step(carry, _):
+        cur_hi, cur_lo = carry
+        prefix = _shr32(cur_hi, 32 - l_max)  # uint32[W]
+        ge = prefix[None, :] >= dec_limit[:, None]  # [L_max, W]
+        length = 1 + jnp.sum(ge.astype(jnp.int32), axis=0)
+        length = jnp.minimum(length, l_max)  # clamp garbage/padding prefixes
+        fcs = dec_first[length]
+        rank = dec_rank[length] + (
+            _shr32(prefix - fcs, l_max - length)
+        ).astype(jnp.int32)
+        rank = jnp.clip(rank, 0, 255)
+        sym = dec_syms[rank].astype(jnp.uint8)
+        # funnel shift left by `length` (1 <= length <= l_max <= 16 < 32)
+        new_hi = _shl32(cur_hi, length) | _shr32(cur_lo, 32 - length)
+        new_lo = _shl32(cur_lo, length)
+        return (new_hi, new_lo), sym
+
+    (_, _), padded = jax.lax.scan(
+        slot_step, (hi, lo), None, length=max_symlen
+    )  # padded: uint8[max_symlen, W]
+    padded = padded.T  # [W, max_symlen]
+
+    offsets = jnp.cumsum(symlen) - symlen  # exclusive prefix sum
+    t = jnp.arange(num_symbols)
+    word_idx = jnp.searchsorted(offsets, t, side="right") - 1
+    word_idx = jnp.clip(word_idx, 0, w - 1)
+    slot_idx = t - offsets[word_idx]
+    return padded[word_idx, slot_idx]

@@ -1,0 +1,4 @@
+from repro.data.signals import DATASETS, make_signal
+from repro.data.pipeline import SignalPipeline, TokenPipeline
+
+__all__ = ["DATASETS", "make_signal", "SignalPipeline", "TokenPipeline"]

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    ShardingPolicy,
+    activate,
+    constrain,
+    current_policy,
+    resolve_param_specs,
+)
+
+__all__ = [
+    "ShardingPolicy",
+    "activate",
+    "constrain",
+    "current_policy",
+    "resolve_param_specs",
+]

@@ -1,0 +1,188 @@
+"""Fault-tolerant checkpointing with optional FPTC compression.
+
+Layout:  <dir>/step_<k>/
+            manifest.json        — step, leaf index, shapes/dtypes, CRCs
+            <leaf-hash>.npy      — raw leaf (default)
+            <leaf-hash>.fptc     — FPTC container (compress=True, float
+                                   leaves; quantization-light config so the
+                                   checkpoint roundtrip is visually lossless)
+Writes are atomic: a temp dir is populated, fsync'd, then renamed; a restart
+that died mid-write can never observe a torn checkpoint.  ``restore_latest``
+scans for the newest complete manifest (fault tolerance: crash -> restart ->
+resume from last durable step).  Every leaf's CRC is verified on load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.calibration import calibrate
+from repro.core.codec import decode as fptc_decode, encode as fptc_encode
+from repro.core.config import CodecConfig
+from repro.core.container import Container
+
+PyTree = Any
+
+__all__ = ["save_checkpoint", "restore_latest", "restore_checkpoint",
+           "latest_step", "CKPT_CODEC_CONFIG"]
+
+# near-lossless operating point for state compression: full retention, heavy
+# mu-law resolution.  PRD on optimizer state ~0.1%, CR ~2-3x on smooth
+# accumulators (bench_checkpoint_compression reports the exact numbers).
+CKPT_CODEC_CONFIG = CodecConfig(
+    n=64, e=64, b1=64, b2=64, mu=255.0, a0_percentile=100.0,
+    scale_headroom=1.05, l_max=12,
+)
+
+
+def _leaf_paths(tree: PyTree):
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        out.append((key, leaf))
+    return out
+
+
+def _fname(key: str) -> str:
+    return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    *, compress: bool = False) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:012d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "version": 1}
+    try:
+        for key, leaf in _leaf_paths(tree):
+            arr = np.asarray(leaf)
+            name = _fname(key)
+            entry = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "file": name,
+            }
+            if (
+                compress
+                and arr.dtype in (np.float32, np.float16)
+                and arr.size >= 4096
+            ):
+                flat = arr.astype(np.float32).ravel()
+                tables = calibrate(flat, CKPT_CODEC_CONFIG, max_windows=4096)
+                cont = fptc_encode(flat, tables)
+                blob = cont.to_bytes()
+                # serialize the calibrated structures: per-bin scales + the
+                # smoothed histogram (codebook rebuilds deterministically)
+                entry["codec"] = "fptc"
+                entry["aux"] = {
+                    "scale": np.asarray(tables.quant.scale).tolist(),
+                    "hist": np.asarray(tables.hist).tolist(),
+                }
+                path = os.path.join(tmp, name + ".fptc")
+                with open(path, "wb") as f:
+                    f.write(blob)
+                entry["crc"] = zlib.crc32(blob)
+            else:
+                path = os.path.join(tmp, name + ".npy")
+                np.save(path, arr)
+                with open(path, "rb") as f:
+                    entry["crc"] = zlib.crc32(f.read())
+            manifest["leaves"][key] = entry
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(
+            os.path.join(directory, name, "manifest.json")
+        ):
+            try:
+                steps.append(int(name.split("_")[1]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, tree_like: PyTree) -> PyTree:
+    """Restore into the structure of ``tree_like`` (shapes/dtypes verified)."""
+    base = os.path.join(directory, f"step_{step:012d}")
+    with open(os.path.join(base, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    out = []
+    for path, proto in leaves:
+        key = jax.tree_util.keystr(path)
+        entry = manifest["leaves"].get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        name = entry["file"]
+        if entry.get("codec") == "fptc":
+            fpath = os.path.join(base, name + ".fptc")
+            with open(fpath, "rb") as f:
+                blob = f.read()
+            if zlib.crc32(blob) != entry["crc"]:
+                raise ValueError(f"CRC mismatch for {key}")
+            cont = Container.from_bytes(blob)
+            from repro.core.calibration import tables_from_hist
+
+            tables = tables_from_hist(
+                CKPT_CODEC_CONFIG,
+                np.asarray(entry["aux"]["scale"], np.float32),
+                np.asarray(entry["aux"]["hist"], np.int64),
+            )
+            arr = fptc_decode(cont, tables).astype(
+                np.dtype(entry["dtype"])
+            ).reshape(entry["shape"])
+        else:
+            fpath = os.path.join(base, name + ".npy")
+            with open(fpath, "rb") as f:
+                raw = f.read()
+            if zlib.crc32(raw) != entry["crc"]:
+                raise ValueError(f"CRC mismatch for {key}")
+            arr = np.load(fpath)
+            if arr.dtype.kind == "V":
+                # numpy round-trips ml_dtypes (bfloat16, fp8) as raw void
+                # bytes; re-view through the manifest dtype
+                import ml_dtypes
+
+                arr = arr.view(np.dtype(entry["dtype"]))
+        expected_shape = tuple(entry["shape"])
+        if tuple(arr.shape) != expected_shape:
+            raise ValueError(
+                f"{key}: shape {arr.shape} != manifest {expected_shape}"
+            )
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest(directory: str, tree_like: PyTree
+                   ) -> Optional[Tuple[int, PyTree]]:
+    step = latest_step(directory)
+    if step is None:
+        return None
+    return step, restore_checkpoint(directory, step, tree_like)

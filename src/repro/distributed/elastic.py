@@ -1,0 +1,102 @@
+"""Elastic scaling + straggler mitigation utilities.
+
+Elasticity contract (DESIGN.md §6): checkpoints are *sharding-agnostic*
+(host numpy trees), so a job restarted with a different device count simply
+rebuilds the mesh from the surviving hosts and re-device_puts — provided the
+new axis sizes still divide the dims they shard (power-of-two meshes keep
+this true in practice).  ``remesh`` performs that re-placement and
+``validate_mesh_for`` pre-checks divisibility so a bad mesh fails fast
+instead of mid-restore.
+
+Straggler mitigation: the data pipeline is index-addressed (host h of H draws
+strips h::H), so a replacement host resumes the dead host's stream with no
+coordination; step barriers are the collectives themselves.  A lightweight
+``StepTimer`` keeps an EWMA of step latency and flags outliers — on a real
+cluster this feeds the controller's preemption/respawn decision.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.distributed.sharding import ShardingPolicy, resolve_param_specs
+from repro.models.common import ParamSpec
+
+PyTree = Any
+
+__all__ = ["remesh", "validate_mesh_for", "StepTimer"]
+
+
+def validate_mesh_for(policy: ShardingPolicy, specs: PyTree) -> List[str]:
+    """Return a list of human-readable problems (empty == mesh is valid).
+
+    A dim that *loses* sharding under the new mesh is allowed (replication is
+    always legal); what we check is that every sharded dim divides evenly —
+    NamedSharding would fail later and less legibly.
+    """
+    problems: List[str] = []
+
+    def check(path, s: ParamSpec):
+        spec = policy.spec_for(s.names, s.shape)
+        for dim, entry in zip(s.shape, spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in axes:
+                total *= policy.axis_sizes[a]
+            if dim % total:
+                problems.append(
+                    f"{jax.tree_util.keystr(path)}: dim {dim} not divisible "
+                    f"by mesh axes {axes} (={total})"
+                )
+
+    leaves, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    for path, leaf in leaves:
+        check(path, leaf)
+    return problems
+
+
+def remesh(host_tree: PyTree, specs: PyTree, new_policy: ShardingPolicy
+           ) -> PyTree:
+    """Place a host (numpy) tree onto a new mesh per the policy's shardings.
+
+    This is the elastic-restart path: restore_latest() -> remesh() -> resume.
+    """
+    problems = validate_mesh_for(new_policy, specs)
+    if problems:
+        raise ValueError(
+            "mesh incompatible with parameter shapes:\n  " + "\n  ".join(problems)
+        )
+    shardings = resolve_param_specs(new_policy, specs)
+    return jax.tree_util.tree_map(
+        lambda arr, sh: jax.device_put(np.asarray(arr), sh),
+        host_tree, shardings,
+    )
+
+
+@dataclasses.dataclass
+class StepTimer:
+    """EWMA step-latency tracker; flags straggling steps."""
+
+    alpha: float = 0.1
+    threshold: float = 2.0  # x EWMA => straggler
+    ewma: Optional[float] = None
+    _t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self) -> Tuple[float, bool]:
+        dt = time.monotonic() - self._t0
+        straggler = self.ewma is not None and dt > self.threshold * self.ewma
+        self.ewma = dt if self.ewma is None else (
+            self.alpha * dt + (1 - self.alpha) * self.ewma
+        )
+        return dt, straggler

@@ -1,0 +1,147 @@
+"""AdamW in pure JAX with configurable accumulator dtype + LR schedule.
+
+At 671B scale the fp32 m/v accumulators alone are 5.4 TB; the largest
+configs therefore run bf16 accumulators (documented trade-off in DESIGN.md
+§6).  Updates are always computed in fp32 regardless of storage dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamW", "OptState", "cosine_schedule"]
+
+PyTree = Any
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    ))
+    return jnp.where(step < warmup, warm, cos)
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # int32[]
+    m: PyTree
+    v: PyTree
+    residual: Optional[PyTree] = None  # error-feedback (grad compression)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    base_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    acc_dtype: Any = jnp.float32  # bf16 for the largest configs
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    config: AdamWConfig = AdamWConfig()
+
+    def init(self, params: PyTree, with_residual: bool = False,
+             replicas: int = 1) -> OptState:
+        """``replicas > 1``: error-feedback residuals are per pod replica
+        (leading [P, ...] dim, pod-sharded) — the vmap'd compressed-DP path."""
+        zeros = lambda p: jnp.zeros(p.shape, self.config.acc_dtype)
+        res = (
+            jax.tree_util.tree_map(
+                lambda p: jnp.zeros((replicas,) + p.shape, jnp.bfloat16),
+                params,
+            )
+            if with_residual
+            else None
+        )
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+            residual=res,
+        )
+
+    def state_specs(self, param_specs: PyTree, with_residual: bool = False,
+                    replicas: int = 1):
+        """ParamSpec tree for the optimizer state (drives dry-run shardings)."""
+        from repro.models.common import ParamSpec
+
+        c = self.config
+
+        def acc(s: ParamSpec) -> ParamSpec:
+            return ParamSpec(s.shape, s.names, dtype=c.acc_dtype, init="zeros")
+
+        def res(s: ParamSpec) -> ParamSpec:
+            return ParamSpec(
+                (replicas,) + s.shape, ("replicas",) + s.names,
+                dtype=jnp.bfloat16, init="zeros",
+            )
+
+        is_spec = lambda x: isinstance(x, ParamSpec)
+        return OptState(
+            step=ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+            m=jax.tree_util.tree_map(acc, param_specs, is_leaf=is_spec),
+            v=jax.tree_util.tree_map(acc, param_specs, is_leaf=is_spec),
+            residual=(
+                jax.tree_util.tree_map(res, param_specs, is_leaf=is_spec)
+                if with_residual
+                else None
+            ),
+        )
+
+    def update(self, params: PyTree, state: OptState, grads: PyTree,
+               residual: Optional[PyTree] = None):
+        c = self.config
+        step = state.step + 1
+        lr = cosine_schedule(
+            step, base_lr=c.base_lr, warmup=c.warmup, total=c.total_steps
+        )
+
+        # global-norm clip (fp32)
+        sq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)
+        )
+        gnorm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, c.clip_norm / (gnorm + 1e-12))
+
+        b1c = 1.0 - c.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - c.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = c.b1 * m.astype(jnp.float32) + (1 - c.b1) * g
+            v32 = c.b2 * v.astype(jnp.float32) + (1 - c.b2) * jnp.square(g)
+            mhat = m32 / b1c
+            vhat = v32 / b2c
+            delta = mhat / (jnp.sqrt(vhat) + c.eps)
+            delta = delta + c.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (
+                new_p.astype(p.dtype),
+                m32.astype(c.acc_dtype),
+                v32.astype(c.acc_dtype),
+            )
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(
+            step=step, m=new_m, v=new_v,
+            residual=residual if residual is not None else state.residual,
+        ), gnorm

@@ -1,0 +1,174 @@
+"""Sharding policy: logical dim names -> mesh axes, with divisibility checks.
+
+Parameters and activations are annotated with *logical* dim names
+("hidden", "ffn", "heads", "batch", "seq", ...).  A :class:`ShardingPolicy`
+resolves those names against the active mesh:
+
+  * params:     FSDP over the ("pod","data") axes on the first shardable dim
+                + tensor parallelism over "model" on ffn/head/expert/vocab dims
+  * activations: batch over ("pod","data"), sequence over "model"
+                (sequence parallelism for the residual stream), and head/ffn
+                dims over "model" inside blocks.
+
+A name only maps to a mesh axis if the dim size is divisible by the axis
+size — otherwise the dim is replicated (e.g. qwen's 20 heads on a 16-way
+model axis).  This rule-resolution is what lets one model library serve ten
+architectures on arbitrary meshes without per-arch sharding tables.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingPolicy",
+    "activate",
+    "current_policy",
+    "constrain",
+    "resolve_param_specs",
+]
+
+# logical name -> candidate mesh axes, tried in order (first divisible wins)
+DEFAULT_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    # activation dims
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (("model",),),
+    # param dims — TP
+    "ffn": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "qk_dim": (("model",),),
+    # prefer whole-expert sharding over (data, model) — full EP, no weight
+    # gathers (§Perf iteration 6); fall back to model-axis EP for small E
+    "experts": (("data", "model"), ("model",)),
+    "vocab": (("model",),),
+    # param dims — FSDP (weight-sharded data parallelism)
+    "hidden": (("pod", "data"), ("data",)),
+    "embed_fsdp": (("pod", "data"), ("data",)),
+    # pod-replica axis (compressed-DP grads / residuals / batches)
+    "replicas": (("pod",),),
+    # never sharded
+    "window": (),
+    "state": (),
+    "conv": (),
+    "layers": (),
+    "rank": (),
+}
+
+
+class ShardingPolicy:
+    """Resolves logical dim names to mesh axes.
+
+    ``exclude`` removes axes from consideration — used (a) inside a shard_map
+    region that is already *manual* over those axes, and (b) for the
+    pod-replicated parameter mode (FPTC-compressed pod all-reduce), where
+    params must not be sharded over "pod".
+    """
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict] = None,
+                 exclude: Tuple[str, ...] = (),
+                 allow_shard_map: bool = True):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        self.exclude = frozenset(exclude)
+        # False under the vmap'd compressed-DP train step: vmap over an
+        # inner shard_map crashes the SPMD partitioner in this XLA version
+        # (documented in EXPERIMENTS.md §Perf iteration 7) — MoE falls back
+        # to the dense dispatch there.
+        self.allow_shard_map = allow_shard_map
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def without(self, *axes: str) -> "ShardingPolicy":
+        return ShardingPolicy(
+            self.mesh, rules=self.rules,
+            exclude=tuple(self.exclude | set(axes)),
+            allow_shard_map=self.allow_shard_map,
+        )
+
+    @property
+    def fsdp_axes(self) -> Tuple[str, ...]:
+        return tuple(
+            a for a in ("pod", "data")
+            if a in self.axis_sizes and a not in self.exclude
+        )
+
+    def _axes_size(self, axes: Tuple[str, ...]) -> Optional[int]:
+        total = 1
+        for a in axes:
+            if a not in self.axis_sizes or a in self.exclude:
+                return None
+            total *= self.axis_sizes[a]
+        return total
+
+    def spec_for(self, names: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> P:
+        """Resolve logical names + concrete shape to a PartitionSpec."""
+        used_axes: set = set()
+        out = []
+        for name, dim in zip(names, shape):
+            entry: Any = None
+            if name is not None:
+                for cand in self.rules.get(name, ()):
+                    size = self._axes_size(cand)
+                    if size is None or dim % size != 0:
+                        continue
+                    if any(a in used_axes for a in cand):
+                        continue
+                    entry = cand if len(cand) > 1 else cand[0]
+                    used_axes.update(cand)
+                    break
+            out.append(entry)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding_for(self, names, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(names, shape))
+
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def activate(policy: Optional[ShardingPolicy]):
+    prev = getattr(_state, "policy", None)
+    _state.policy = policy
+    try:
+        yield policy
+    finally:
+        _state.policy = prev
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return getattr(_state, "policy", None)
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a with_sharding_constraint from logical dim names (no-op when no
+    policy is active — keeps the model library mesh-agnostic)."""
+    policy = current_policy()
+    if policy is None:
+        return x
+    spec = policy.spec_for(names, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(policy.mesh, spec)
+    )
+
+
+def resolve_param_specs(policy: ShardingPolicy, specs: Any) -> Any:
+    """ParamSpec tree -> NamedSharding tree (for jit in_shardings)."""
+    from repro.models.common import ParamSpec
+
+    def one(s: ParamSpec) -> NamedSharding:
+        return policy.sharding_for(s.names, s.shape)
+
+    return jax.tree_util.tree_map(
+        one, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )

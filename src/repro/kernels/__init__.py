@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for FPTC's compute hot spots.
+
+Layout per kernel:  <name>.py (pl.pallas_call + BlockSpec), ref.py (pure-jnp
+oracles), ops.py (jit'd wrappers; auto interpret=True off-TPU).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,160 @@
+"""Pallas TPU kernel: SymLen word-parallel Huffman decode (paper §4.2.1).
+
+GPU original: one CUDA thread per 64-bit word, serial LUT loop per thread,
+warp-shuffle cooperative writes.  TPU adaptation (DESIGN.md §2):
+
+  * one VPU **lane** per word — a block of ``BLOCK_WORDS`` words is decoded by
+    looping over *symbol slots*; every iteration decodes one symbol for all
+    words in the block simultaneously (branch-free, no divergence possible);
+  * the 2^L_max shared-memory LUT is replaced by **arithmetic canonical
+    decoding**: length = 1 + #(prefix >= limit_shifted[l]) via vectorized
+    compares, then rank arithmetic; the final 256-way symbol lookup is a
+    **one-hot matmul** against the symbol table (gather-via-one-hot — the MXU
+    idiom for small-table lookups);
+  * 64-bit words are processed as (hi, lo) uint32 pairs with funnel shifts
+    (TPU int64 is emulated; uint32 is native VPU width);
+  * the warp-cooperative coalesced write stage becomes a dense **padded tile**
+    ``[MAX_SYMS, BLOCK_WORDS]`` store; compaction (exclusive prefix-sum of
+    symlen + gather) happens at the XLA level in ``ops.huffman_decode`` —
+    exactly the paper's prefix-scan, lifted out of the kernel.
+
+VMEM budget per block (BLOCK_WORDS=512, MAX_SYMS<=64, L_max<=16):
+  in:  hi/lo/symlen          3 * 512 * 4 B            =   6 KiB
+  tables: limits/first/rank/ symbols                  <   3 KiB
+  out: padded tile           64 * 512 * 4 B           = 128 KiB
+well under the ~16 MiB VMEM of a TPU v5e core; BLOCK_WORDS can scale to 4096.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["huffman_decode_padded"]
+
+BLOCK_WORDS = 512
+
+
+def _shl32(x, s):
+    s = jnp.clip(s, 0, 31).astype(jnp.uint32)
+    return x << s
+
+
+def _shr32(x, s):
+    s = jnp.clip(s, 0, 31).astype(jnp.uint32)
+    return x >> s
+
+
+def _decode_kernel(
+    hi_ref,
+    lo_ref,
+    dec_limit_ref,  # uint32[L_max]     limit_shifted[1:]
+    dec_first_ref,  # uint32[L_max+1]   first_code_shifted
+    dec_rank_ref,  # int32[L_max+1]     rank_offset
+    dec_syms_ref,  # int32[256]         sorted_symbols
+    out_ref,  # int32[MAX_SYMS, BLOCK_WORDS]
+    *,
+    l_max: int,
+    max_symlen: int,
+):
+    cur_hi = hi_ref[...]  # uint32[BW]
+    cur_lo = lo_ref[...]
+    bw = cur_hi.shape[0]
+
+    dec_limit = dec_limit_ref[...]
+    dec_first = dec_first_ref[...]
+    dec_rank = dec_rank_ref[...]
+    # symbol table as f32 matmul operand (one-hot lookup)
+    syms_f = dec_syms_ref[...].astype(jnp.float32)  # [256]
+
+    lengths_iota = jnp.arange(l_max + 1, dtype=jnp.int32)  # [L+1]
+
+    def slot(j, carry):
+        cur_hi, cur_lo = carry
+        prefix = _shr32(cur_hi, 32 - l_max)  # uint32[BW]
+        # --- code length: vectorized compares against limit boundaries ---
+        ge = (prefix[None, :] >= dec_limit[:, None]).astype(jnp.int32)
+        length = 1 + jnp.sum(ge, axis=0)  # int32[BW] in [1, L_max+1]
+        length = jnp.minimum(length, l_max)  # clamp padding-bit garbage
+        # --- first_code / rank_offset lookup via one-hot over lengths ---
+        len_onehot = (
+            length[:, None] == lengths_iota[None, :]
+        )  # bool[BW, L+1]
+        fcs = jnp.sum(
+            jnp.where(len_onehot, dec_first[None, :], jnp.uint32(0)),
+            axis=1,
+            dtype=jnp.uint32,
+        )
+        roff = jnp.sum(
+            jnp.where(len_onehot, dec_rank[None, :], 0), axis=1,
+            dtype=jnp.int32,
+        )
+        rank = roff + _shr32(prefix - fcs, l_max - length).astype(jnp.int32)
+        rank = jnp.clip(rank, 0, 255)
+        # --- symbol: one-hot [BW, 256] @ table[256] on the MXU ---
+        sym_onehot = (
+            rank[:, None] == jnp.arange(256, dtype=jnp.int32)[None, :]
+        ).astype(jnp.float32)
+        sym = jnp.dot(
+            sym_onehot, syms_f, preferred_element_type=jnp.float32
+        ).astype(jnp.int32)
+        out_ref[pl.dslice(j, 1), :] = sym[None, :]
+        # --- funnel-shift the (hi, lo) buffer left by `length` ---
+        new_hi = _shl32(cur_hi, length) | _shr32(cur_lo, 32 - length)
+        new_lo = _shl32(cur_lo, length)
+        return new_hi, new_lo
+
+    jax.lax.fori_loop(0, max_symlen, slot, (cur_hi, cur_lo))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("l_max", "max_symlen", "block_words", "interpret"),
+)
+def huffman_decode_padded(
+    hi: jnp.ndarray,  # uint32[W]
+    lo: jnp.ndarray,  # uint32[W]
+    dec_limit: jnp.ndarray,
+    dec_first: jnp.ndarray,
+    dec_rank: jnp.ndarray,
+    dec_syms: jnp.ndarray,
+    *,
+    l_max: int,
+    max_symlen: int,
+    block_words: int = BLOCK_WORDS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Decode every word's symbols into a padded tile [W, max_symlen] (int32).
+
+    Words are padded up to a multiple of ``block_words``; callers slice.
+    Compaction to the dense stream is performed by the caller (ops.py).
+    """
+    w = hi.shape[0]
+    num_blocks = -(-w // block_words)
+    wp = num_blocks * block_words
+    if wp != w:
+        hi = jnp.pad(hi, (0, wp - w))
+        lo = jnp.pad(lo, (0, wp - w))
+
+    kernel = functools.partial(
+        _decode_kernel, l_max=l_max, max_symlen=max_symlen
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_words,), lambda i: (i,)),
+            pl.BlockSpec((block_words,), lambda i: (i,)),
+            # small decode tables: replicated to every block
+            pl.BlockSpec((dec_limit.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((dec_first.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((dec_rank.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((max_symlen, block_words), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((max_symlen, wp), jnp.int32),
+        interpret=interpret,
+    )(hi, lo, dec_limit, dec_first, dec_rank, dec_syms)
+    return out[:, :w].T  # [W, max_symlen]

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: fused dequantization + inverse DCT (paper §4.2.2).
+
+The paper's second "lossy" kernel fuses per-sample dequantization with the
+inverse DCT because both have uniform work.  On TPU the natural realization
+is stronger: the inverse DCT over a window is a linear map, so the whole
+stage is a **matmul on the MXU** with the 3-zone inverse quantization fused
+into its prologue on the VPU:
+
+    levels int32[W_blk, E]  --(3-zone dequant, elementwise)-->  f32[W_blk, E]
+    f32[W_blk, E] @ idct_basis[E, N]  --(MXU)-->  f32[W_blk, N]
+
+BlockSpec tiling: the window axis is tiled by ``block_windows`` (default 256,
+a multiple of the 8-sublane f32 tile); E and N are kept whole per block (both
+<= 128 by Table 1, i.e. a single lane tile).  VMEM per block at the default:
+in 256*128*4 = 128 KiB, basis 64 KiB, out 128 KiB — far under v5e VMEM, and
+the matmul contraction dim E is the workload's intrinsic size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["idct_dequant"]
+
+BLOCK_WINDOWS = 256
+_ZERO_BIN = 128.0
+
+
+def _kernel(
+    levels_ref,  # int32[BW, E]
+    zone_ref,  # int32[E]
+    scale_ref,  # f32[E]
+    basis_ref,  # f32[E, N]
+    mu_ref,  # f32[1]
+    alpha1_ref,  # f32[1]
+    out_ref,  # f32[BW, N]
+):
+    lvl = levels_ref[...].astype(jnp.float32)  # [BW, E]
+    zone = zone_ref[...]  # [E]
+    a = scale_ref[...]  # [E]
+    mu = mu_ref[0]
+    alpha1 = alpha1_ref[0]
+
+    pos = lvl > _ZERO_BIN
+    neg = lvl < _ZERO_BIN
+
+    # zone 0: inverse mu-law companding
+    q01 = jnp.where(pos, (lvl - 129.0) / 126.0, (127.0 - lvl) / 127.0)
+    q01 = jnp.clip(q01, 0.0, 1.0)
+    mag0 = a * (jnp.expm1(q01 * jnp.log1p(mu)) / mu)
+    c0 = jnp.where(pos, mag0, -mag0)
+    c0 = jnp.where(lvl == _ZERO_BIN, 0.0, c0)
+
+    # zone 1: inverse linear deadzone
+    d1 = alpha1 * a
+    span = a - d1
+    mag1 = jnp.where(
+        pos,
+        d1 + (lvl - 129.0) / 126.0 * span,
+        d1 + (127.0 - lvl) / 127.0 * span,
+    )
+    c1 = jnp.where(pos, mag1, jnp.where(neg, -mag1, 0.0))
+
+    coeffs = jnp.where(
+        zone[None, :] == 0, c0, jnp.where(zone[None, :] == 1, c1, 0.0)
+    )
+
+    out_ref[...] = jnp.dot(
+        coeffs, basis_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "block_windows", "interpret")
+)
+def idct_dequant(
+    levels: jnp.ndarray,  # int32/uint8 [W, E]
+    zone: jnp.ndarray,  # int32[E]
+    scale: jnp.ndarray,  # f32[E]
+    basis: jnp.ndarray,  # f32[E, N] (idct_basis)
+    mu: jnp.ndarray,  # f32 scalar
+    alpha1: jnp.ndarray,  # f32 scalar
+    *,
+    n: int,
+    block_windows: int = BLOCK_WINDOWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused 3-zone dequant + inverse DCT: [W, E] levels -> [W, N] samples."""
+    w, e = levels.shape
+    num_blocks = -(-w // block_windows)
+    wp = num_blocks * block_windows
+    levels = levels.astype(jnp.int32)
+    if wp != w:
+        levels = jnp.pad(levels, ((0, wp - w), (0, 0)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_windows, e), lambda i: (i, 0)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((e, n), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_windows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((wp, n), jnp.float32),
+        interpret=interpret,
+    )(
+        levels,
+        zone,
+        scale,
+        basis,
+        jnp.reshape(mu.astype(jnp.float32), (1,)),
+        jnp.reshape(alpha1.astype(jnp.float32), (1,)),
+    )
+    return out[:w]

@@ -1,0 +1,100 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the codec (``repro.core.codec`` with
+``use_kernels=True``) and the serving/benchmark layers call.  On CPU they run
+the kernels in interpret mode; on TPU set ``interpret=False`` (the default
+flips automatically on TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dct as _dct
+from repro.core.calibration import DeviceTables
+from repro.core.quantize import QuantTable
+from repro.kernels import dct_quant as _dq
+from repro.kernels import huffman_decode as _hd
+from repro.kernels import idct_dequant as _idq
+
+__all__ = ["huffman_decode", "idct_dequant", "dct_quant", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+def huffman_decode(
+    hi: jnp.ndarray,
+    lo: jnp.ndarray,
+    symlen: jnp.ndarray,
+    tables: DeviceTables,
+    *,
+    l_max: int,
+    max_symlen: int,
+    num_symbols: int,
+) -> jnp.ndarray:
+    """SymLen decode + compaction: packed words -> dense uint8[num_symbols].
+
+    Kernel stage: padded per-word tile.  Compaction stage: exclusive
+    prefix-sum of symlen + gather (the paper's prefix-scan offset indexing).
+    """
+    padded = _hd.huffman_decode_padded(
+        hi,
+        lo,
+        tables.dec_limit,
+        tables.dec_first,
+        tables.dec_rank,
+        tables.dec_syms,
+        l_max=l_max,
+        max_symlen=max_symlen,
+        interpret=_interp(),
+    )  # [W, max_symlen] int32
+    w = hi.shape[0]
+    offsets = jnp.cumsum(symlen) - symlen
+    t = jnp.arange(num_symbols)
+    word_idx = jnp.clip(
+        jnp.searchsorted(offsets, t, side="right") - 1, 0, w - 1
+    )
+    slot_idx = t - offsets[word_idx]
+    return padded[word_idx, slot_idx].astype(jnp.uint8)
+
+
+def idct_dequant(
+    levels: jnp.ndarray, quant: QuantTable, *, n: int
+) -> jnp.ndarray:
+    """Fused dequant + inverse DCT: [W, E] levels -> [W, N] samples."""
+    e = levels.shape[-1]
+    return _idq.idct_dequant(
+        levels,
+        quant.zone,
+        quant.scale,
+        _dct.idct_basis(n, e),
+        quant.mu,
+        quant.alpha1,
+        n=n,
+        interpret=_interp(),
+    )
+
+
+def dct_quant(
+    windows: jnp.ndarray, quant: QuantTable, *, e: int
+) -> jnp.ndarray:
+    """Fused forward DCT + quantize: [W, N] samples -> [W, E] levels."""
+    n = windows.shape[-1]
+    return _dq.dct_quant(
+        windows,
+        quant.zone,
+        quant.scale,
+        _dct.dct_basis(n, e),
+        quant.mu,
+        quant.alpha1,
+        e=e,
+        interpret=_interp(),
+    )

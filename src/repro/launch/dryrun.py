@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first two lines — before ANY other import (jax locks
+#   the host-platform device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  For each cell we build abstract inputs
+(ShapeDtypeStruct — zero allocation), jit the train/prefill/decode step with
+production shardings, ``.lower().compile()``, and record:
+
+  * memory_analysis()   — per-device bytes (proves the cell fits),
+  * cost_analysis()     — HLO FLOPs / bytes for the roofline terms,
+  * collective bytes    — parsed from the optimized HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute operand
+    sizes; cost_analysis does not report these).
+
+Results are written incrementally to benchmarks/artifacts/dryrun/<cell>.json
+so a partial sweep is never lost (the roofline report reads these files).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+      --shape train_4k [--multi-pod] [--compression truncate_int8]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cells, get_arch
+from repro.distributed.compression import CompressionConfig
+from repro.distributed.optimizer import AdamW, AdamWConfig
+from repro.distributed.train import make_train_step, make_serve_fns
+from repro.distributed import sharding as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.common import ParamSpec
+
+ARTIFACT_DIR = "benchmarks/artifacts/dryrun"
+
+# ---------------------------------------------------------------------------
+# HLO collective-byte accounting
+# ---------------------------------------------------------------------------
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:[%\w.\-]+)\s*=\s*((?:\w+\[[^\]]*\](?:,\s*\w+\[[^\]]*\])*|\([^)]*\)))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+    re.M,
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the optimized HLO."""
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shapes_str, op = m.group(1), m.group(2)
+        total = 0
+        for sm in _SHAPE_RE.finditer(shapes_str):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[op] = out.get(op, 0) + total
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell runners
+# ---------------------------------------------------------------------------
+def _abstract_from_specs(specs, shardings):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs, shardings,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def run_cell(
+    arch_id: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    compression: str = "none",
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        comp = CompressionConfig(mode=compression)
+        opt = AdamW(AdamWConfig(
+            acc_dtype=jnp.bfloat16 if cfg.param_count() > 1e11
+            else jnp.float32,
+        ))
+        ts = make_train_step(model, opt, mesh, compression=comp)
+        with mesh:
+            p_abs, o_abs, b_abs = ts.abstract_inputs(
+                shape.global_batch, shape.seq_len
+            )
+            lowered = ts.step_fn.lower(p_abs, o_abs, b_abs)
+            compiled = lowered.compile()
+    else:
+        prefill_fn, decode_fn, policy, param_sh = make_serve_fns(model, mesh)
+        pspecs = model.param_specs()
+        p_abs = _abstract_from_specs(pspecs, param_sh)
+        with mesh:
+            if shape.kind == "prefill":
+                bspecs = model.batch_specs(shape.global_batch, shape.seq_len)
+                b_sh = jax.tree_util.tree_map(
+                    lambda s: policy.sharding_for(s.names, s.shape),
+                    bspecs, is_leaf=lambda x: isinstance(x, ParamSpec),
+                )
+                b_abs = _abstract_from_specs(bspecs, b_sh)
+                lowered = prefill_fn.lower(p_abs, b_abs, shape.seq_len)
+            else:  # decode
+                cspecs = model.cache_specs(shape.global_batch, shape.seq_len)
+                c_sh = shlib.resolve_param_specs(policy, cspecs)
+                c_abs = _abstract_from_specs(cspecs, c_sh)
+                tok = jax.ShapeDtypeStruct(
+                    (shape.global_batch, 1), jnp.int32,
+                    sharding=policy.sharding_for(
+                        ("batch", None), (shape.global_batch, 1)
+                    ),
+                )
+                pos = jax.ShapeDtypeStruct((), jnp.int32)
+                lowered = decode_fn.lower(p_abs, c_abs, tok, pos)
+            compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    # trip-count-aware costs (XLA's cost_analysis visits while bodies once —
+    # see repro.analysis.hlo_cost)
+    from repro.analysis import analyze_hlo
+
+    hc = analyze_hlo(hlo)
+
+    n_devices = 1
+    for s in mesh.devices.shape:
+        n_devices *= s
+
+    result = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "multi_pod": multi_pod,
+        "n_devices": n_devices,
+        "compression": compression,
+        "compile_seconds": round(compile_s, 1),
+        "flops": hc.flops,
+        "bytes_accessed": hc.hbm_bytes,
+        "collective_bytes": hc.collective_by_op,
+        "collective_bytes_total": hc.collective_bytes,
+        "collective_bytes_tpu": hc.collective_bytes_tpu,
+        "num_whiles": hc.num_whiles,
+        "unknown_trip_whiles": hc.unknown_trip_whiles,
+        "xla_cost_analysis": {
+            "flops_body_once": cost.get("flops", 0.0),
+            "bytes_body_once": cost.get("bytes accessed", 0.0),
+            "collective_result_bytes_body_once": sum(coll.values()),
+        },
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            # live-state + transient estimate per device (args are donated,
+            # alias'd outputs don't double-count)
+            "resident_estimate_bytes": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ),
+        },
+        "params_total": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+    }
+    if verbose:
+        print(json.dumps({k: v for k, v in result.items()
+                          if k not in ("collective_bytes",)}, indent=None))
+        print("memory_analysis:", mem)
+    return result, hlo
+
+
+def save_result(result: Dict[str, Any], hlo_text: Optional[str] = None):
+    import gzip
+    import os as _os
+
+    _os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    name = (
+        f"{result['arch']}__{result['shape']}__"
+        f"{'multipod' if result['multi_pod'] else 'singlepod'}"
+        + (f"__{result['compression']}"
+           if result["compression"] != "none" else "")
+    )
+    path = _os.path.join(ARTIFACT_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    if hlo_text is not None:
+        # keep the optimized HLO so cost-model improvements can re-analyze
+        # without recompiling
+        with gzip.open(_os.path.join(ARTIFACT_DIR, name + ".hlo.gz"),
+                       "wt") as f:
+            f.write(hlo_text)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "replicated_f32", "truncate", "truncate_int8"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    todo = []
+    if args.all:
+        for cell in cells():
+            if cell.skip:
+                print(f"SKIP {cell.arch_id} x {cell.shape.name}: {cell.skip}")
+                continue
+            todo.append((cell.arch_id, cell.shape.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("need --arch and --shape (or --all)")
+        todo.append((args.arch, args.shape))
+
+    failures = []
+    for arch_id, shape_name in todo:
+        import os as _os
+
+        name = (f"{arch_id}__{shape_name}__"
+                f"{'multipod' if args.multi_pod else 'singlepod'}"
+                + (f"__{args.compression}"
+                   if args.compression != "none" else "") + ".json")
+        if args.skip_existing and _os.path.exists(
+            _os.path.join(ARTIFACT_DIR, name)
+        ):
+            print(f"EXISTS {name}")
+            continue
+        print(f"=== {arch_id} x {shape_name} "
+              f"({'multi' if args.multi_pod else 'single'}-pod, "
+              f"compression={args.compression}) ===", flush=True)
+        try:
+            result, hlo = run_cell(
+                arch_id, shape_name, multi_pod=args.multi_pod,
+                compression=args.compression,
+            )
+            path = save_result(result, hlo)
+            print(f"saved {path}", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append((arch_id, shape_name))
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("dry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

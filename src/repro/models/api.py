@@ -1,0 +1,564 @@
+"""Model API: one interface over all ten architectures.
+
+``build_model(cfg)`` returns a :class:`Model` with:
+  * ``param_specs()``      — ParamSpec tree (drives init, sharding, dry-run)
+  * ``loss(params, batch)``— next-token CE loss (train_step's core)
+  * ``prefill(params, batch, max_len)`` — full-sequence forward + KV cache
+  * ``decode_step(params, cache, tokens, pos)`` — one-token serve step
+  * ``cache_specs(batch, max_len)`` — ParamSpec tree for the decode cache
+  * ``batch_specs(batch, seq)`` — ParamSpec tree for input batches
+
+Batches are dicts: tokens/labels int32[B, S]; VLM adds patch_embeds
+f32[B, P, d]; audio adds frames f32[B, F, d].
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import transformer as tfm
+from repro.models.common import ParamSpec, rms_norm, rope
+from repro.models.config import ArchConfig
+
+PyTree = Any
+
+__all__ = ["Model", "build_model"]
+
+
+def stack_specs(count: int, tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec(
+            (count,) + s.shape, ("layers",) + s.names, dtype=s.dtype,
+            init=s.init, scale=s.scale,
+        ),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                   mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token CE in fp32; logits [B, S, V], labels int32 [B, S]."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(
+        jnp.sum(jnp.exp(logits - m), axis=-1)
+    )
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # ----------------------------------------------------------------- specs
+    def param_specs(self) -> PyTree:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return self._rwkv_specs()
+        if cfg.family == "audio":
+            return self._whisper_specs()
+        d, v = cfg.d_model, cfg.vocab_size
+        specs: Dict[str, Any] = {
+            "embed": ParamSpec(
+                (v, d), ("vocab", "embed_fsdp"), dtype=jnp.bfloat16,
+                init="embed", scale=0.02,
+            ),
+            "final_norm": ParamSpec((d,), (None,), dtype=jnp.bfloat16,
+                                    init="ones"),
+        }
+        if not cfg.tie_embeddings:
+            specs["unembed"] = ParamSpec(
+                (d, v), ("hidden", "vocab"), dtype=jnp.bfloat16,
+                scale=1.0 / math.sqrt(d),
+            )
+        for gi, g in enumerate(tfm.layer_groups(cfg)):
+            specs[f"group{gi}"] = stack_specs(
+                g.count, tfm.layer_specs(cfg, g.kind)
+            )
+        return specs
+
+    def batch_specs(self, batch: int, seq: int) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        b: Dict[str, ParamSpec] = {
+            "tokens": ParamSpec((batch, seq), ("batch", None),
+                                dtype=jnp.int32),
+            "labels": ParamSpec((batch, seq), ("batch", None),
+                                dtype=jnp.int32),
+        }
+        if cfg.family == "vlm" and cfg.vision_prefix:
+            b["patch_embeds"] = ParamSpec(
+                (batch, cfg.vision_prefix, cfg.d_model),
+                ("batch", None, None), dtype=jnp.bfloat16,
+            )
+        if cfg.family == "audio":
+            b["frames"] = ParamSpec(
+                (batch, cfg.encoder_seq, cfg.d_model),
+                ("batch", None, None), dtype=jnp.bfloat16,
+            )
+        return b
+
+    # ----------------------------------------------------------- embeddings
+    def _embed(self, params, tokens):
+        x = params["embed"][tokens]
+        if self.cfg.embed_scale:
+            x = x * jnp.asarray(
+                math.sqrt(self.cfg.d_model), x.dtype
+            )
+        return constrain(x, ("batch", "seq", None))
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"])
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        logits = x @ w
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(
+                logits / cfg.logit_softcap
+            )
+        return constrain(logits, ("batch", "seq", None))
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return self._rwkv_loss(params, batch)
+        if cfg.family == "audio":
+            return self._whisper_loss(params, batch)
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = self._embed(params, tokens)
+        prefix = 0
+        if cfg.family == "vlm" and cfg.vision_prefix:
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(x.dtype), x], axis=1
+            )
+            prefix = cfg.vision_prefix
+        x = self._run_groups_train(params, x)
+        if prefix:
+            x = x[:, prefix:]
+        logits = self._logits(params, x)
+        return _cross_entropy(logits, labels)
+
+    def _run_groups_train(self, params, x):
+        cfg = self.cfg
+        sin, cos = rope(
+            jnp.arange(x.shape[1]), cfg.head_dim if not cfg.mla
+            else cfg.mla_qk_rope_dim, cfg.rope_theta,
+        )
+        for gi, g in enumerate(tfm.layer_groups(cfg)):
+            windows = jnp.asarray(g.windows, dtype=jnp.int32)
+
+            def body(carry, xs, _kind=g.kind):
+                lp, win = xs
+                out = tfm.layer_apply_train(
+                    cfg, _kind, lp, carry, sin, cos, win
+                )
+                return out, None
+
+            body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, (params[f"group{gi}"], windows))
+        return x
+
+    # -------------------------------------------------------------- serving
+    def cache_specs(self, batch: int, max_len: int) -> PyTree:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return self._rwkv_cache_specs(batch)
+        if cfg.family == "audio":
+            return self._whisper_cache_specs(batch, max_len)
+        dt = jnp.bfloat16
+        caches = {}
+        for gi, g in enumerate(tfm.layer_groups(cfg)):
+            if cfg.mla:
+                c = {
+                    "ckv": ParamSpec(
+                        (g.count, batch, max_len, cfg.mla_kv_lora_rank),
+                        ("layers", "batch", "seq", None), dtype=dt,
+                        init="zeros",
+                    ),
+                    "kr": ParamSpec(
+                        (g.count, batch, max_len, cfg.mla_qk_rope_dim),
+                        ("layers", "batch", "seq", None), dtype=dt,
+                        init="zeros",
+                    ),
+                }
+            else:
+                t = max_len
+                if cfg.family == "hybrid" and cfg.window:
+                    t = min(max_len, cfg.window)  # ring buffer
+                c = {
+                    "k": ParamSpec(
+                        (g.count, batch, t, cfg.num_kv_heads, cfg.head_dim),
+                        ("layers", "batch", "seq", "kv_heads", None),
+                        dtype=dt, init="zeros",
+                    ),
+                    "v": ParamSpec(
+                        (g.count, batch, t, cfg.num_kv_heads, cfg.head_dim),
+                        ("layers", "batch", "seq", "kv_heads", None),
+                        dtype=dt, init="zeros",
+                    ),
+                }
+            if cfg.hybrid_parallel:
+                from repro.models.ssm import _dims
+
+                d_in, _, n, k = _dims(cfg)
+                c["conv"] = ParamSpec(
+                    (g.count, batch, k - 1, d_in),
+                    ("layers", "batch", None, "ffn"), dtype=dt, init="zeros",
+                )
+                c["ssm"] = ParamSpec(
+                    (g.count, batch, d_in, n),
+                    ("layers", "batch", "ffn", None), dtype=jnp.float32,
+                    init="zeros",
+                )
+            caches[f"group{gi}"] = c
+        return caches
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens int32[B, 1]; pos int32 scalar.  Returns (logits, cache)."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return self._rwkv_decode(params, cache, tokens, pos)
+        if cfg.family == "audio":
+            return self._whisper_decode(params, cache, tokens, pos)
+        x = self._embed(params, tokens)
+        sin, cos = rope(
+            jnp.full((tokens.shape[0], 1), pos),
+            cfg.head_dim if not cfg.mla else cfg.mla_qk_rope_dim,
+            cfg.rope_theta,
+        )
+        new_cache = {}
+        for gi, g in enumerate(tfm.layer_groups(cfg)):
+            windows = jnp.asarray(g.windows, dtype=jnp.int32)
+
+            def body(carry, xs, _kind=g.kind):
+                lp, win, lcache = xs
+                out, nc = tfm.layer_apply_decode(
+                    cfg, _kind, lp, carry, sin, cos, win, lcache, pos
+                )
+                return out, nc
+
+            x, nc = jax.lax.scan(
+                body, x, (params[f"group{gi}"], windows, cache[f"group{gi}"])
+            )
+            new_cache[f"group{gi}"] = nc
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_cache
+
+    def prefill(self, params, batch, max_len: int):
+        """Run the full prompt, return (last-token logits, decode cache)."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return self._rwkv_prefill(params, batch, max_len)
+        if cfg.family == "audio":
+            return self._whisper_prefill(params, batch, max_len)
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm" and cfg.vision_prefix:
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(x.dtype), x], axis=1
+            )
+        s = x.shape[1]
+        sin, cos = rope(
+            jnp.arange(s),
+            cfg.head_dim if not cfg.mla else cfg.mla_qk_rope_dim,
+            cfg.rope_theta,
+        )
+        cache = {}
+        for gi, g in enumerate(tfm.layer_groups(cfg)):
+            windows = jnp.asarray(g.windows, dtype=jnp.int32)
+
+            def body(carry, xs, _kind=g.kind):
+                lp, win = xs
+                h = rms_norm(
+                    carry, lp["ln1"], offset=1.0 if cfg.post_block_norms else 0.0
+                )
+                h = constrain(h, ("batch", None, None))  # bf16 gather point
+                attn_fn = (
+                    tfm.mla_apply_train if cfg.mla else tfm.gqa_apply_train
+                )
+                attn_out, kv = attn_fn(cfg, lp["attn"], h, sin, cos, win)
+                lc = {}
+                if cfg.mla:
+                    lc["ckv"], lc["kr"] = kv
+                else:
+                    lc["k"], lc["v"] = kv
+                if cfg.hybrid_parallel:
+                    from repro.models.ssm import mamba_prefill_state
+
+                    ssm_out, conv_s, ssm_s = mamba_prefill_state(
+                        cfg, lp["ssm"], h
+                    )
+                    lc["conv"], lc["ssm"] = conv_s, ssm_s
+                    attn_out = 0.5 * (
+                        rms_norm(attn_out, lp["attn_norm"])
+                        + rms_norm(ssm_out, lp["ssm_norm"])
+                    )
+                if cfg.post_block_norms:
+                    attn_out = rms_norm(attn_out, lp["ln1_post"], offset=1.0)
+                xx = carry + attn_out
+                h2 = rms_norm(
+                    xx, lp["ln2"], offset=1.0 if cfg.post_block_norms else 0.0
+                )
+                h2 = constrain(h2, ("batch", None, None))  # bf16 gather point
+                ffn_out = (
+                    tfm.moe_apply(cfg, lp["ffn"], h2)
+                    if _kind == "moe"
+                    else tfm.ffn_apply(cfg, lp["ffn"], h2)
+                )
+                if cfg.post_block_norms:
+                    ffn_out = rms_norm(ffn_out, lp["ln2_post"], offset=1.0)
+                return xx + ffn_out, lc
+
+            x, kvs = jax.lax.scan(body, x, (params[f"group{gi}"], windows))
+            cache[f"group{gi}"] = self._pad_prefill_cache(kvs, s, max_len)
+        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        return logits, cache
+
+    def _pad_prefill_cache(self, kvs: Dict[str, jnp.ndarray], s: int,
+                           max_len: int) -> Dict[str, jnp.ndarray]:
+        cfg = self.cfg
+        out = {}
+        for k, v in kvs.items():
+            if k in ("conv", "ssm"):
+                out[k] = v
+                continue
+            if cfg.family == "hybrid" and cfg.window and k in ("k", "v"):
+                w = min(max_len, cfg.window)
+                tail = v[:, :, -w:]
+                out[k] = jnp.roll(tail, shift=s % w, axis=2)
+                continue
+            pad = max_len - v.shape[2]
+            if pad > 0:
+                widths = [(0, 0)] * v.ndim
+                widths[2] = (0, pad)
+                v = jnp.pad(v, widths)
+            out[k] = v
+        return out
+
+    # ------------------------------------------------------------- RWKV-6
+    def _rwkv_specs(self):
+        from repro.models.rwkv import rwkv_layer_specs
+
+        cfg = self.cfg
+        d, v = cfg.d_model, cfg.vocab_size
+        return {
+            "embed": ParamSpec((v, d), ("vocab", "embed_fsdp"),
+                               dtype=jnp.bfloat16, init="embed", scale=0.02),
+            "final_norm": ParamSpec((d,), (None,), dtype=jnp.bfloat16,
+                                    init="ones"),
+            "unembed": ParamSpec((d, v), ("hidden", "vocab"),
+                                 dtype=jnp.bfloat16,
+                                 scale=1.0 / math.sqrt(d)),
+            "layers": stack_specs(cfg.num_layers, rwkv_layer_specs(cfg)),
+        }
+
+    def _rwkv_cache_specs(self, batch):
+        from repro.models.rwkv import rwkv_heads
+
+        cfg = self.cfg
+        h, hd = rwkv_heads(cfg)
+        L, d = cfg.num_layers, cfg.d_model
+        return {
+            "shift1": ParamSpec((L, batch, d), ("layers", "batch", None),
+                                dtype=jnp.bfloat16, init="zeros"),
+            "shift2": ParamSpec((L, batch, d), ("layers", "batch", None),
+                                dtype=jnp.bfloat16, init="zeros"),
+            "wkv": ParamSpec((L, batch, h, hd, hd),
+                             ("layers", "batch", "heads", None, None),
+                             dtype=jnp.float32, init="zeros"),
+        }
+
+    def _rwkv_run(self, params, x, state=None, collect_state=False):
+        from repro.models.rwkv import rwkv_layer_train
+
+        cfg = self.cfg
+
+        def body(carry, xs):
+            if state is None:
+                lp = xs
+                st = None
+            else:
+                lp, st = xs
+            out, new_st = rwkv_layer_train(cfg, lp, carry, st)
+            return out, new_st if collect_state else None
+
+        xs = params["layers"] if state is None else (params["layers"], state)
+        x, states = jax.lax.scan(jax.checkpoint(body), x, xs)
+        return x, states
+
+    def _rwkv_loss(self, params, batch):
+        x = self._embed(params, batch["tokens"])
+        x, _ = self._rwkv_run(params, x)
+        logits = self._logits(params, x)
+        return _cross_entropy(logits, batch["labels"])
+
+    def _rwkv_prefill(self, params, batch, max_len):
+        del max_len  # constant-size state
+        cfg = self.cfg
+        from repro.models.rwkv import rwkv_heads
+
+        b = batch["tokens"].shape[0]
+        h, hd = rwkv_heads(cfg)
+        zero_state = (
+            jnp.zeros((cfg.num_layers, b, cfg.d_model), jnp.bfloat16),
+            jnp.zeros((cfg.num_layers, b, cfg.d_model), jnp.bfloat16),
+            jnp.zeros((cfg.num_layers, b, h, hd, hd), jnp.float32),
+        )
+        x = self._embed(params, batch["tokens"])
+        x, states = self._rwkv_run(
+            params, x, state=zero_state, collect_state=True
+        )
+        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        s1, s2, wkv = states
+        return logits, {"shift1": s1, "shift2": s2, "wkv": wkv}
+
+    def _rwkv_decode(self, params, cache, tokens, pos):
+        del pos
+        x = self._embed(params, tokens)
+        x, states = self._rwkv_run(
+            params, x,
+            state=(cache["shift1"], cache["shift2"], cache["wkv"]),
+            collect_state=True,
+        )
+        s1, s2, wkv = states
+        logits = self._logits(params, x)[:, 0]
+        return logits, {"shift1": s1, "shift2": s2, "wkv": wkv}
+
+    # ------------------------------------------------------------- whisper
+    def _whisper_specs(self):
+        from repro.models import encdec
+
+        cfg = self.cfg
+        d, v = cfg.d_model, cfg.vocab_size
+        return {
+            "embed": ParamSpec((v, d), ("vocab", "embed_fsdp"),
+                               dtype=jnp.bfloat16, init="embed", scale=0.02),
+            "pos_embed": ParamSpec((40960, d), (None, "embed_fsdp"),
+                                   dtype=jnp.bfloat16, init="embed",
+                                   scale=0.01),
+            "enc_pos_embed": ParamSpec(
+                (cfg.encoder_seq, d), (None, "embed_fsdp"),
+                dtype=jnp.bfloat16, init="embed", scale=0.01,
+            ),
+            "final_norm": ParamSpec((d,), (None,), dtype=jnp.bfloat16,
+                                    init="ones"),
+            "enc_final_norm": ParamSpec((d,), (None,), dtype=jnp.bfloat16,
+                                        init="ones"),
+            "unembed": ParamSpec((d, v), ("hidden", "vocab"),
+                                 dtype=jnp.bfloat16,
+                                 scale=1.0 / math.sqrt(d)),
+            "encoder": stack_specs(
+                cfg.encoder_layers, encdec.encoder_layer_specs(cfg)
+            ),
+            "decoder": stack_specs(
+                cfg.num_layers, encdec.decoder_layer_specs(cfg)
+            ),
+        }
+
+    def _whisper_encode(self, params, frames):
+        from repro.models.encdec import encoder_layer_apply
+
+        cfg = self.cfg
+        x = frames.astype(jnp.bfloat16) + params["enc_pos_embed"][None]
+        x = constrain(x, ("batch", "seq", None))
+
+        def body(carry, lp):
+            return encoder_layer_apply(cfg, lp, carry), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["encoder"])
+        return rms_norm(x, params["enc_final_norm"])
+
+    def _whisper_loss(self, params, batch):
+        from repro.models.encdec import decoder_layer_train
+
+        cfg = self.cfg
+        enc_out = self._whisper_encode(params, batch["frames"])
+        tokens, labels = batch["tokens"], batch["labels"]
+        s = tokens.shape[1]
+        x = params["embed"][tokens] + params["pos_embed"][None, :s]
+        x = constrain(x, ("batch", "seq", None))
+        sin, cos = rope(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
+
+        def body(carry, lp):
+            out, _, _ = decoder_layer_train(cfg, lp, carry, enc_out, sin, cos)
+            return out, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["decoder"])
+        logits = self._logits(params, x)
+        return _cross_entropy(logits, labels)
+
+    def _whisper_cache_specs(self, batch, max_len):
+        cfg = self.cfg
+        dt = jnp.bfloat16
+        L = cfg.num_layers
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        return {
+            "k": ParamSpec((L, batch, max_len, kv, hd),
+                           ("layers", "batch", "seq", "kv_heads", None),
+                           dtype=dt, init="zeros"),
+            "v": ParamSpec((L, batch, max_len, kv, hd),
+                           ("layers", "batch", "seq", "kv_heads", None),
+                           dtype=dt, init="zeros"),
+            "ck": ParamSpec((L, batch, cfg.encoder_seq, kv, hd),
+                            ("layers", "batch", "seq", "kv_heads", None),
+                            dtype=dt, init="zeros"),
+            "cv": ParamSpec((L, batch, cfg.encoder_seq, kv, hd),
+                            ("layers", "batch", "seq", "kv_heads", None),
+                            dtype=dt, init="zeros"),
+        }
+
+    def _whisper_prefill(self, params, batch, max_len):
+        from repro.models.encdec import decoder_layer_train
+
+        cfg = self.cfg
+        enc_out = self._whisper_encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        x = params["embed"][tokens] + params["pos_embed"][None, :s]
+        sin, cos = rope(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
+
+        def body(carry, lp):
+            out, (k, v), (ck, cv) = decoder_layer_train(
+                cfg, lp, carry, enc_out, sin, cos
+            )
+            return out, {"k": k, "v": v, "ck": ck, "cv": cv}
+
+        x, kvs = jax.lax.scan(body, x, params["decoder"])
+        cache = self._pad_prefill_cache(
+            {"k": kvs["k"], "v": kvs["v"]}, s, max_len
+        )
+        cache["ck"], cache["cv"] = kvs["ck"], kvs["cv"]
+        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        return logits, cache
+
+    def _whisper_decode(self, params, cache, tokens, pos):
+        from repro.models.encdec import decoder_layer_decode
+
+        cfg = self.cfg
+        x = params["embed"][tokens] + params["pos_embed"][None, pos][None]
+        sin, cos = rope(
+            jnp.full((tokens.shape[0], 1), pos), cfg.head_dim, cfg.rope_theta
+        )
+
+        def body(carry, xs):
+            lp, lc = xs
+            out, nc = decoder_layer_decode(cfg, lp, carry, lc, sin, cos, pos)
+            return out, nc
+
+        x, nc = jax.lax.scan(body, x, (params["decoder"], cache))
+        logits = self._logits(params, x)[:, 0]
+        return logits, nc
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

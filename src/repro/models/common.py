@@ -1,0 +1,306 @@
+"""Shared model-library primitives: param specs, norms, RoPE, attention.
+
+Everything is pure JAX (no flax): a model is (param_specs, apply_fns).
+Parameters are nested dicts of arrays; each leaf has a matching
+:class:`ParamSpec` carrying shape, dtype, init scale and **logical dim
+names**.  The distributed layer (repro.distributed.sharding) resolves logical
+names to mesh axes with divisibility checks — the same spec tree drives both
+real initialization (smoke tests) and abstract ShapeDtypeStruct trees (the
+multi-pod dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ParamSpec",
+    "init_params",
+    "abstract_params",
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "apply_rope",
+    "attention",
+    "decode_attention",
+    "Dense",
+]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + logical dim names + init."""
+
+    shape: Tuple[int, ...]
+    names: Tuple[str, ...]  # logical dim names, len == len(shape)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override; default fan-in
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.names):
+            raise ValueError(f"shape {self.shape} vs names {self.names}")
+
+    def initializer(self, key: jax.Array) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "embed":
+            std = self.scale or 1.0
+            return (
+                jax.random.normal(key, self.shape, jnp.float32) * std
+            ).astype(self.dtype)
+        # fan-in normal
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        std = self.scale if self.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (
+            jax.random.normal(key, self.shape, jnp.float32) * std
+        ).astype(self.dtype)
+
+
+def init_params(specs: PyTree, key: jax.Array) -> PyTree:
+    """Materialize a param tree from its spec tree (host/smoke-test use)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.initializer(k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs: PyTree) -> PyTree:
+    """ShapeDtypeStruct tree for the dry-run (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             offset: float = 0.0) -> jnp.ndarray:
+    """RMSNorm: fp32 statistics, NO full-width fp32 tensors.
+
+    Only the [.., 1]-shaped inverse-RMS is fp32; the normalize/scale
+    multiplies happen in the input dtype.  GSPMD places the sequence-parallel
+    all-gather on the norm output — if any [B, S, d] fp32 intermediate
+    exists, the partitioner gathers *that* and activation collective bytes
+    double (EXPERIMENTS.md §Perf iterations 2/5).
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)  # [..., 1], tiny
+    w = (offset + weight.astype(jnp.float32)).astype(x.dtype)
+    return x * inv * w
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (
+        normed * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(positions: jnp.ndarray, dim: int, theta: float = 10000.0):
+    """Rotary embedding tables: (sin, cos) of shape [..., dim/2]."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray):
+    """x: [..., S, H, D]; sin/cos: [..., S, D/2] broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window / softcap / cross-attention)
+# ---------------------------------------------------------------------------
+def _softcap(scores: jnp.ndarray, cap: Optional[float]):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def attention(
+    q: jnp.ndarray,  # [B, S, H, D]
+    k: jnp.ndarray,  # [B, T, KV, D]
+    v: jnp.ndarray,  # [B, T, KV, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding-window size (local attention)
+    softcap: Optional[float] = None,
+    q_chunk: int = 1024,
+    q_offset: int = 0,  # absolute position of q[0] relative to k[0]
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Chunked (flash-style) multi-head GQA attention, pure JAX.
+
+    Queries are processed in chunks via ``lax.scan`` so peak score memory is
+    [B, H, q_chunk, T] — required for 32k prefill to fit per-chip HBM.  GQA:
+    H must be a multiple of KV; heads are grouped.
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    dv = v.shape[-1]  # may differ from d (MLA: qk_dim != v_dim)
+    groups = h // kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    # --- TP layout selection (perf iteration #1, EXPERIMENTS.md §Perf) ----
+    # GQA with kv_heads not divisible by the model axis makes GSPMD
+    # replicate the [B, H, C, T] score tensor via giant all-gathers inside
+    # the layer scan.  When expanding KV to the full query-head count makes
+    # heads shardable, do so (transient, sharded over model after the
+    # constraint); otherwise shard the KV sequence axis (flash-decoding
+    # style — GSPMD inserts the partial-softmax reductions).
+    from repro.distributed.sharding import constrain as _constrain
+    from repro.distributed.sharding import current_policy as _policy
+
+    pol = _policy()
+    nm = pol.axis_sizes.get("model", 1) if pol is not None else 1
+    if nm > 1 and kv % nm != 0 and h % nm == 0 and groups > 1:
+        k = jnp.repeat(k, groups, axis=2)  # [B, T, H, D]
+        v = jnp.repeat(v, groups, axis=2)
+        kv, groups = h, 1
+        k = _constrain(k, ("batch", None, "heads", None))
+        v = _constrain(v, ("batch", None, "heads", None))
+    elif nm > 1 and kv % nm != 0:
+        k = _constrain(k, ("batch", "seq", None, None))
+        v = _constrain(v, ("batch", "seq", None, None))
+
+    q = q.reshape(b, s, kv, groups, d)
+
+    def chunk_attn(q_chunk_arr, start):
+        # q_chunk_arr: [B, C, KV, G, D]
+        c = q_chunk_arr.shape[1]
+        # operands stay bf16 on the wire; accumulation is fp32 (MXU-native)
+        scores = jnp.einsum(
+            "bckgd,btkd->bkgct", q_chunk_arr * jnp.asarray(scale, q.dtype),
+            k, preferred_element_type=jnp.float32,
+        )  # [B, KV, G, C, T] fp32
+        scores = _softcap(scores, softcap)
+        qpos = start + q_offset + jnp.arange(c)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        mask = jnp.ones((c, t), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum(
+            "bkgct,btkd->bckgd", probs.astype(v.dtype), v
+        )
+        return out  # [B, C, KV, G, D]
+
+    if s <= q_chunk:
+        out = chunk_attn(q, 0)
+    else:
+        nchunks = s // q_chunk
+        rem = s - nchunks * q_chunk
+        qs = q[:, : nchunks * q_chunk].reshape(
+            b, nchunks, q_chunk, kv, groups, d
+        )
+
+        def body(_, xs):
+            qc, idx = xs
+            return None, chunk_attn(qc, idx * q_chunk)
+
+        _, outs = jax.lax.scan(
+            body, None, (jnp.moveaxis(qs, 1, 0), jnp.arange(nchunks))
+        )
+        out = jnp.moveaxis(outs, 0, 1).reshape(
+            b, nchunks * q_chunk, kv, groups, dv
+        )
+        if rem:
+            tail = chunk_attn(q[:, nchunks * q_chunk :], nchunks * q_chunk)
+            out = jnp.concatenate([out, tail], axis=1)
+    return out.reshape(b, s, h, dv)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, 1, H, D]
+    k_cache: jnp.ndarray,  # [B, T, KV, D]
+    v_cache: jnp.ndarray,  # [B, T, KV, D]
+    cache_len: jnp.ndarray,  # int32[] — valid prefix of the cache
+    *,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token decode attention against a (possibly padded) KV cache."""
+    b, _, h, d = q.shape
+    t = k_cache.shape[1]
+    kv = k_cache.shape[2]
+    groups = h // kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kv, groups, d)
+    scores = jnp.einsum(
+        "bkgd,btkd->bkgt", qg.astype(jnp.float32) * scale,
+        k_cache.astype(jnp.float32),
+    )
+    scores = _softcap(scores, softcap)
+    kpos = jnp.arange(t)[None, None, None, :]
+    mask = kpos < cache_len
+    if window is not None:
+        mask &= kpos >= cache_len - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, v_cache.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Dense helper
+# ---------------------------------------------------------------------------
+class Dense:
+    """Tiny helper to declare a (kernel, optional bias) pair of ParamSpecs."""
+
+    @staticmethod
+    def spec(
+        d_in: int,
+        d_out: int,
+        names: Tuple[str, str],
+        *,
+        bias: bool = False,
+        dtype=jnp.bfloat16,
+        scale: Optional[float] = None,
+    ) -> Dict[str, ParamSpec]:
+        p = {"w": ParamSpec((d_in, d_out), names, dtype=dtype, scale=scale)}
+        if bias:
+            p["b"] = ParamSpec((d_out,), (names[1],), dtype=dtype, init="zeros")
+        return p
+
+    @staticmethod
+    def apply(p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+        y = x @ p["w"]
+        if "b" in p:
+            y = y + p["b"]
+        return y

@@ -1,0 +1,133 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB).
+
+Per the assignment, the conv/mel frontend is stubbed: ``input_specs()``
+provides precomputed frame embeddings [B, encoder_seq, d] directly.  The
+encoder is a bidirectional transformer; the decoder adds causal self-attention
+(with KV cache for serving) and cross-attention over the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import (
+    ParamSpec,
+    attention,
+    decode_attention,
+    rms_norm,
+    rope,
+)
+from repro.models.config import ArchConfig
+from repro.models.transformer import ffn_apply, ffn_specs, gqa_specs
+
+__all__ = [
+    "encoder_layer_specs",
+    "decoder_layer_specs",
+    "encoder_layer_apply",
+    "decoder_layer_train",
+    "decoder_layer_decode",
+    "cross_attn_specs",
+]
+
+
+def cross_attn_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    return gqa_specs(cfg)
+
+
+def encoder_layer_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    dt = jnp.bfloat16
+    return {
+        "ln1": ParamSpec((d,), (None,), dtype=dt, init="ones"),
+        "ln2": ParamSpec((d,), (None,), dtype=dt, init="ones"),
+        "attn": gqa_specs(cfg),
+        "ffn": ffn_specs(cfg),
+    }
+
+
+def decoder_layer_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    dt = jnp.bfloat16
+    return {
+        "ln1": ParamSpec((d,), (None,), dtype=dt, init="ones"),
+        "ln_cross": ParamSpec((d,), (None,), dtype=dt, init="ones"),
+        "ln2": ParamSpec((d,), (None,), dtype=dt, init="ones"),
+        "attn": gqa_specs(cfg),
+        "cross": cross_attn_specs(cfg),
+        "ffn": ffn_specs(cfg),
+    }
+
+
+def _proj_qkv(cfg, p, xq, xkv, sin=None, cos=None):
+    from repro.models.common import apply_rope
+
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if sin is not None:
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def encoder_layer_apply(cfg: ArchConfig, p, x):
+    """Bidirectional self-attention encoder layer."""
+    h = rms_norm(x, p["ln1"])
+    q, k, v = _proj_qkv(cfg, p["attn"], h, h)
+    out = attention(q, k, v, causal=False, q_chunk=1024)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+    h = rms_norm(x, p["ln2"])
+    x = x + ffn_apply(cfg, p["ffn"], h)
+    return constrain(x, ("batch", "seq", None))
+
+
+def decoder_layer_train(cfg: ArchConfig, p, x, enc_out, sin, cos):
+    """Causal self-attn + cross-attn + FFN (training / prefill)."""
+    h = rms_norm(x, p["ln1"])
+    q, k, v = _proj_qkv(cfg, p["attn"], h, h, sin, cos)
+    out = attention(q, k, v, causal=True, q_chunk=1024)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+    self_cache = (k, v)
+
+    h = rms_norm(x, p["ln_cross"])
+    qc, kc, vc = _proj_qkv(cfg, p["cross"], h, enc_out)
+    outc = attention(qc, kc, vc, causal=False, q_chunk=1024)
+    x = x + jnp.einsum("bshk,hkd->bsd", outc, p["cross"]["wo"])
+    cross_cache = (kc, vc)
+
+    h = rms_norm(x, p["ln2"])
+    x = x + ffn_apply(cfg, p["ffn"], h)
+    return constrain(x, ("batch", "seq", None)), self_cache, cross_cache
+
+
+def decoder_layer_decode(cfg: ArchConfig, p, x, cache, sin, cos, pos):
+    """Single-token decode: self-attn against cache + cross-attn against
+    the precomputed encoder K/V."""
+    h = rms_norm(x, p["ln1"])
+    q, k, v = _proj_qkv(cfg, p["attn"], h, h, sin, cos)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+    out = decode_attention(q, kc, vc, pos + 1)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+
+    h = rms_norm(x, p["ln_cross"])
+    qc = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"])
+    if cfg.qkv_bias:
+        qc = qc + p["cross"]["bq"]
+    enc_len = cache["ck"].shape[1]
+    outc = decode_attention(
+        qc, cache["ck"], cache["cv"], jnp.int32(enc_len)
+    )
+    x = x + jnp.einsum("bshk,hkd->bsd", outc, p["cross"]["wo"])
+
+    h = rms_norm(x, p["ln2"])
+    x = x + ffn_apply(cfg, p["ffn"], h)
+    new_cache = dict(cache)
+    new_cache["k"] = kc
+    new_cache["v"] = vc
+    return x, new_cache

@@ -1,0 +1,270 @@
+"""Expert-parallel MoE via shard_map: scatter dispatch + all-to-all.
+
+The dense one-hot dispatch in ``transformer.moe_apply`` materializes an
+[E, T, C] tensor — fine for smoke tests, catastrophic at deepseek-v3 scale
+(256 experts x 1M tokens).  At scale we switch to the TPU-native
+expert-parallel pattern, written explicitly with shard_map so the collective
+schedule is deterministic and visible to the roofline analysis:
+
+  1. each (data, model) shard routes a disjoint slice of its tokens
+     (model-axis slice of the data-shard — tokens are replicated over the
+     model axis on entry, so each model shard takes 1/|model| of them);
+  2. position-in-expert is computed by **sort-rank** (argsort by expert id,
+     segment-relative ranks) — O(T log T), no [T, E] one-hot;
+  3. tokens are scattered into a per-shard [E, C, d] send buffer;
+  4. ``all_to_all`` over the model axis exchanges expert shards:
+     [E, C, d] -> [E/m, C*m, d] — every chip now holds *its* experts' tokens;
+  5. expert FFNs run as batched matmuls over the local expert dim
+     (weights EP-sharded over "model", FSDP-gathered over ("pod","data"));
+  6. reverse all_to_all + gather-back + gate-weighted combine;
+  7. psum over "model" reassembles the full token slice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+__all__ = ["moe_apply_sharded", "sort_rank"]
+
+FULL_EP = True  # see moe_apply_sharded docstring
+
+
+def sort_rank(expert_ids: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """rank[i] = #(j < i with expert_ids[j] == expert_ids[i]), via argsort.
+
+    No [T, E] materialization: sort by expert, compute segment-relative
+    ranks with a cummax over segment starts, invert the permutation.
+    """
+    n = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_e = expert_ids[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]]
+    )
+    seg_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    rank_sorted = idx - seg_start
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    return rank
+
+
+def _gate(cfg: ArchConfig, logits: jnp.ndarray):
+    gates, chosen = jax.lax.top_k(logits, cfg.moe_top_k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    return gates, chosen
+
+
+def moe_apply_sharded(cfg: ArchConfig, p: Dict[str, Any], x: jnp.ndarray,
+                      policy) -> jnp.ndarray:
+    """x: [B, S, d] -> [B, S, d], expert-parallel.
+
+    Two EP layouts (§Perf iteration 6):
+
+      * **full EP** (E divisible by |data|x|model|, e.g. deepseek's 256
+        experts on a 16x16 pod): each chip owns whole experts, weights are
+        NEVER gathered (the FSDP per-layer expert gathers were ~40% of
+        deepseek's collective bytes), and tokens route with a single
+        all-to-all over the fused (data, model) axes.  Output returns via
+        psum_scatter so each model shard receives exactly its sequence
+        shard (half the wire of a full psum).
+      * **model-axis EP** (small E, e.g. llama4's 16): experts over "model"
+        only, FSDP-gathered over data, all-to-all over "model".
+    """
+    mesh = policy.mesh
+    # inside an enclosing manual region (the pod-manual compressed train
+    # step) shard_map must receive the CONTEXT abstract mesh — its pod axis
+    # is already Manual; the concrete Mesh would mismatch.
+    ctx_mesh = jax.sharding.get_abstract_mesh()
+    if ctx_mesh.axis_names and set(mesh.axis_names) <= set(
+        ctx_mesh.axis_names
+    ):
+        smap_mesh = None  # infer from context (handles nested manual axes)
+    else:
+        smap_mesh = mesh
+    fsdp_axes = policy.fsdp_axes
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    t_total = b * s
+    ne, topk = cfg.moe_num_experts, cfg.moe_top_k
+    nm = mesh.shape["model"]
+    ndp = 1
+    for a in fsdp_axes:
+        ndp *= mesh.shape[a]
+    t_loc = t_total // ndp
+    t_eff = max(t_loc // nm, 1)
+    cap = -(-2 * t_eff * topk // ne)
+    cap = max(8, -(-cap // 8) * 8)  # round up to 8
+
+    # full EP shards whole experts over ("data", "model"); "pod" stays pure
+    # data-parallel (expert replicas per pod — the grads are exactly what the
+    # FPTC pod-axis compression reduces).  FULL_EP can be forced off: the
+    # vmap'd compressed-DP path trips a GSPMD crash on the full-EP block
+    # (batched 2-stage all_to_all), so compressed runs use model-axis EP.
+    n_data = mesh.shape.get("data", 1)
+    full_ep = (
+        FULL_EP
+        and "data" in mesh.axis_names
+        and n_data > 1
+        and ne % (n_data * nm) == 0
+    )
+
+    def route(xj, router):
+        logits = xj.astype(jnp.float32) @ router
+        gates, chosen = _gate(cfg, logits)
+        e_flat = chosen.reshape(-1).astype(jnp.int32)
+        g_flat = gates.reshape(-1)
+        rank = sort_rank(e_flat, ne)
+        keep = rank < cap
+        slot = jnp.where(keep, rank, cap - 1)
+        return e_flat, g_flat, keep, slot
+
+    def combine(back, e_flat, slot, keep, g_flat, dtype):
+        y_dup = back[e_flat, slot] * keep[:, None].astype(dtype)
+        return jnp.sum(
+            y_dup.reshape(t_eff, topk, d)
+            * g_flat.reshape(t_eff, topk, 1).astype(dtype),
+            axis=1,
+        )
+
+    if full_ep:
+        ep_axes = ("data", "model")
+        # Inside an enclosing pod-manual region the SPMD partitioner cannot
+        # build device groups for a fused-axis all_to_all (fatal check in
+        # spmd_partitioner_util) — use a hierarchical 2-stage exchange
+        # (data hop, then model hop; ~1.9x the flat wire, matching how a 2D
+        # torus runs all-to-all anyway).  Flat fused a2a is kept for the
+        # non-nested path.
+        nested = smap_mesh is None
+
+        def a2a_fwd(buf):
+            if not nested:
+                return jax.lax.all_to_all(
+                    buf, ep_axes, split_axis=0, concat_axis=1, tiled=True
+                )
+            buf = jax.lax.all_to_all(
+                buf, "data", split_axis=0, concat_axis=1, tiled=True
+            )
+            return jax.lax.all_to_all(
+                buf, "model", split_axis=0, concat_axis=1, tiled=True
+            )
+
+        def a2a_rev(buf):
+            if not nested:
+                return jax.lax.all_to_all(
+                    buf, ep_axes, split_axis=1, concat_axis=0, tiled=True
+                )
+            buf = jax.lax.all_to_all(
+                buf, "model", split_axis=1, concat_axis=0, tiled=True
+            )
+            return jax.lax.all_to_all(
+                buf, "data", split_axis=1, concat_axis=0, tiled=True
+            )
+
+        def block(x_loc, model_id, router, wi, wg, wo):
+            # x_loc: [T_loc, d]; wi/wg: [E/(ndp*m), d, eff] — whole experts
+            # model_id: int32[1], this shard's model-axis index (passed as a
+            # sharded iota — lax.axis_index inside nested shard_map trips a
+            # Shardy hoisting bug under remat; see §Perf iteration 7 notes)
+            j = model_id[0]
+            xj = jax.lax.dynamic_slice(x_loc, (j * t_eff, 0), (t_eff, d))
+            e_flat, g_flat, keep, slot = route(xj, router)
+            xdup = jnp.repeat(xj, topk, axis=0)
+            send = jnp.zeros((ne, cap, d), x_loc.dtype)
+            send = send.at[e_flat, slot].add(
+                xdup * keep[:, None].astype(x_loc.dtype)
+            )
+            recv = a2a_fwd(send)  # [E/(nd*m), cap*nd*m, d]
+            h = jax.nn.silu(
+                jnp.einsum("ecd,edf->ecf", recv, wg)
+            ) * jnp.einsum("ecd,edf->ecf", recv, wi)
+            out_e = jnp.einsum("ecf,efd->ecd", h, wo)
+            back = a2a_rev(out_e)  # [E, cap, d]
+            y = combine(back, e_flat, slot, keep, g_flat, x_loc.dtype)
+            out = jnp.zeros((x_loc.shape[0], d), x_loc.dtype)
+            out = jax.lax.dynamic_update_slice(out, y, (j * t_eff, 0))
+            if nested:
+                # psum_scatter's transpose rule trips the same partitioner
+                # fatal inside a pod-manual region; fall back to psum there
+                return jax.lax.psum(out, "model")
+            # each model shard needs only its sequence shard downstream
+            # (SP residual): psum_scatter = half the wire of psum
+            return jax.lax.psum_scatter(
+                out, "model", scatter_dimension=0, tiled=True
+            )
+
+        bp = fsdp_axes
+        wspec = P(("data", "model"), None, None)
+        model_ids = jnp.arange(nm, dtype=jnp.int32)
+        out2 = jax.shard_map(
+            block,
+            mesh=smap_mesh,
+            in_specs=(P(bp, None), P("model"), P(None, None),
+                      wspec, wspec, wspec),
+            out_specs=P(bp, None) if nested else P(bp + ("model",), None),
+            axis_names=set(bp) | {"data", "model"},
+            check_vma=False,
+        )(x2, model_ids, p["router"], p["wi"], p["wg"], p["wo"])
+        return out2.reshape(b, s, d)
+
+    def block(x_loc, model_id, router, wi, wg, wo):
+        # x_loc: [T_loc, d]; wi/wg: [E/m, d/ndp, eff]; wo: [E/m, eff, d/ndp]
+        j = model_id[0]
+        xj = jax.lax.dynamic_slice(
+            x_loc, (j * t_eff, 0), (t_eff, d)
+        )  # [T_eff, d]
+        e_flat, g_flat, keep, slot = route(xj, router)
+
+        xdup = jnp.repeat(xj, topk, axis=0)  # [T_eff*k, d]
+        send = jnp.zeros((ne, cap, d), x_loc.dtype)
+        send = send.at[e_flat, slot].add(
+            xdup * keep[:, None].astype(x_loc.dtype)
+        )
+        # exchange: every model shard receives its experts' tokens
+        recv = jax.lax.all_to_all(
+            send, "model", split_axis=0, concat_axis=1, tiled=True
+        )  # [E/m, cap*m, d]
+
+        # FSDP gather of expert weights over (pod, data)
+        if fsdp_axes:
+            wi = jax.lax.all_gather(wi, fsdp_axes, axis=1, tiled=True)
+            wg = jax.lax.all_gather(wg, fsdp_axes, axis=1, tiled=True)
+            wo = jax.lax.all_gather(wo, fsdp_axes, axis=2, tiled=True)
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, wg)) * jnp.einsum(
+            "ecd,edf->ecf", recv, wi
+        )
+        out_e = jnp.einsum("ecf,efd->ecd", h, wo)  # [E/m, cap*m, d]
+
+        back = jax.lax.all_to_all(
+            out_e, "model", split_axis=1, concat_axis=0, tiled=True
+        )  # [E, cap, d]
+        y = combine(back, e_flat, slot, keep, g_flat, x_loc.dtype)
+        out = jnp.zeros((x_loc.shape[0], d), x_loc.dtype)
+        out = jax.lax.dynamic_update_slice(out, y, (j * t_eff, 0))
+        return jax.lax.psum(out, "model")
+
+    bp = fsdp_axes if fsdp_axes else None
+    manual = set(fsdp_axes) | {"model"}
+    model_ids = jnp.arange(nm, dtype=jnp.int32)
+    out2 = jax.shard_map(
+        block,
+        mesh=smap_mesh,
+        in_specs=(
+            P(bp, None),
+            P("model"),
+            P(None, None),
+            P("model", bp, None),
+            P("model", bp, None),
+            P("model", None, bp),
+        ),
+        out_specs=P(bp, None),
+        axis_names=manual,
+        check_vma=False,
+    )(x2, model_ids, p["router"], p["wi"], p["wg"], p["wo"])
+    return out2.reshape(b, s, d)

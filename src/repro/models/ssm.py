@@ -1,0 +1,184 @@
+"""Mamba-style selective SSM block — the SSM half of hymba's hybrid heads.
+
+Standard Mamba-1 formulation: input gating, short causal conv, selective
+(input-dependent) dt/B/C, diagonal state recurrence:
+
+    h_t = exp(dt_t * A) . h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+Training runs the recurrence as a ``lax.scan`` over time (state is tiny:
+[B, d_inner, N] with N = ssm_state = 16); decode is a single step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.config import ArchConfig
+
+__all__ = ["mamba_specs", "mamba_apply_train", "mamba_apply_decode"]
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(cfg.d_model // 16, 1)
+    return d_in, dt_rank, cfg.ssm_state, cfg.ssm_conv
+
+
+def mamba_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_in, dt_rank, n, k = _dims(cfg)
+    dt = jnp.bfloat16
+    return {
+        "w_in": ParamSpec((d, 2 * d_in), ("hidden", "ffn"), dtype=dt),
+        "conv_w": ParamSpec((k, d_in), ("conv", "ffn"), dtype=dt),
+        "conv_b": ParamSpec((d_in,), ("ffn",), dtype=dt, init="zeros"),
+        "w_x": ParamSpec((d_in, dt_rank + 2 * n), ("ffn", None), dtype=dt),
+        "w_dt": ParamSpec((dt_rank, d_in), (None, "ffn"), dtype=dt),
+        "dt_bias": ParamSpec((d_in,), ("ffn",), dtype=jnp.float32, init="zeros"),
+        "A_log": ParamSpec(
+            (d_in, n), ("ffn", "state"), dtype=jnp.float32, init="zeros"
+        ),
+        "D": ParamSpec((d_in,), ("ffn",), dtype=jnp.float32, init="ones"),
+        "w_out": ParamSpec((d_in, d), ("ffn", "hidden"), dtype=dt),
+    }
+
+
+def _ssm_inputs(cfg: ArchConfig, p, x_conv):
+    """x_conv: [B, S, d_in] post-conv activations -> (dt, B, C)."""
+    d_in, dt_rank, n, _ = _dims(cfg)
+    xproj = x_conv @ p["w_x"]  # [B, S, dt_rank + 2n]
+    dt_low = xproj[..., :dt_rank]
+    b_mat = xproj[..., dt_rank : dt_rank + n].astype(jnp.float32)
+    c_mat = xproj[..., dt_rank + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_low @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )  # [B, S, d_in]
+    return dt, b_mat, c_mat
+
+
+def _causal_conv(p, x, k: int):
+    """Depthwise causal conv along time: x [B, S, d_in]."""
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * p["conv_w"][i][None, None, :]
+        for i in range(k)
+    )
+    return out + p["conv_b"]
+
+
+def mamba_apply_train(cfg: ArchConfig, p, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, d] -> [B, S, d]; recurrence scanned over S."""
+    d_in, dt_rank, n, k = _dims(cfg)
+    xz = x @ p["w_in"]  # [B, S, 2*d_in]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = jax.nn.silu(_causal_conv(p, xs, k))
+    dt, b_mat, c_mat = _ssm_inputs(cfg, p, xs)
+    a_mat = -jnp.exp(p["A_log"])  # [d_in, n]
+
+    def step(h, inputs):
+        xs_t, dt_t, b_t, c_t = inputs  # [B,d_in],[B,d_in],[B,n],[B,n]
+        decay = jnp.exp(dt_t[..., None] * a_mat[None])  # [B, d_in, n]
+        h = decay * h + (dt_t * xs_t.astype(jnp.float32))[..., None] * b_t[
+            :, None, :
+        ]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    b, s, _ = x.shape
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    inputs = (
+        jnp.moveaxis(xs, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b_mat, 1, 0),
+        jnp.moveaxis(c_mat, 1, 0),
+    )
+    # chunked + per-chunk remat (see rwkv.py — §Perf iteration 4): avoids
+    # storing every per-step [B, d_in, N] state for backward
+    chunk = 128
+    if s % chunk == 0 and s > chunk:
+        nchunks = s // chunk
+        inputs = jax.tree_util.tree_map(
+            lambda a: a.reshape((nchunks, chunk) + a.shape[1:]), inputs
+        )
+
+        @jax.checkpoint
+        def chunk_step(h, inp_chunk):
+            return jax.lax.scan(step, h, inp_chunk)
+
+        _, ys = jax.lax.scan(chunk_step, h0, inputs)
+        ys = ys.reshape((s,) + ys.shape[2:])
+    else:
+        _, ys = jax.lax.scan(step, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1)  # [B, S, d_in]
+    y = y + xs.astype(jnp.float32) * p["D"][None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"]
+
+
+def mamba_prefill_state(cfg: ArchConfig, p, x: jnp.ndarray):
+    """Run train path AND return final (conv_state, ssm_state) for decode."""
+    d_in, dt_rank, n, k = _dims(cfg)
+    xz = x @ p["w_in"]
+    xs_pre, z = jnp.split(xz, 2, axis=-1)
+    conv_state = xs_pre[:, -(k - 1) :, :]  # last k-1 pre-conv activations
+    xs = jax.nn.silu(_causal_conv(p, xs_pre, k))
+    dt, b_mat, c_mat = _ssm_inputs(cfg, p, xs)
+    a_mat = -jnp.exp(p["A_log"])
+
+    def step(h, inputs):
+        xs_t, dt_t, b_t, c_t = inputs
+        decay = jnp.exp(dt_t[..., None] * a_mat[None])
+        h = decay * h + (dt_t * xs_t.astype(jnp.float32))[..., None] * b_t[
+            :, None, :
+        ]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    b = x.shape[0]
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    hT, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            jnp.moveaxis(xs, 1, 0),
+            jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(b_mat, 1, 0),
+            jnp.moveaxis(c_mat, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"], conv_state, hT
+
+
+def mamba_apply_decode(
+    cfg: ArchConfig,
+    p,
+    x: jnp.ndarray,  # [B, 1, d]
+    conv_state: jnp.ndarray,  # [B, k-1, d_in] rolling pre-conv window
+    ssm_state: jnp.ndarray,  # [B, d_in, n] fp32
+):
+    d_in, dt_rank, n, k = _dims(cfg)
+    xz = x @ p["w_in"]
+    xs_new, z = jnp.split(xz, 2, axis=-1)  # [B,1,d_in]
+    window = jnp.concatenate([conv_state, xs_new], axis=1)  # [B, k, d_in]
+    conv_out = (
+        jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    )[:, None, :]
+    xs = jax.nn.silu(conv_out)  # [B,1,d_in]
+    dt, b_mat, c_mat = _ssm_inputs(cfg, p, xs)
+    a_mat = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt[:, 0, :, None] * a_mat[None])  # [B, d_in, n]
+    h = decay * ssm_state + (
+        dt[:, 0] * xs[:, 0].astype(jnp.float32)
+    )[..., None] * b_mat[:, 0][:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None, :]
+    y = y + xs.astype(jnp.float32) * p["D"][None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"], window[:, 1:, :], h

@@ -1,0 +1,493 @@
+"""Composable decoder-only transformer: GQA / MoE / MLA / local-global.
+
+One scan-based stack serves granite, minitron, gemma2, qwen1.5, llama4-scout,
+deepseek-v3 and the internvl2 LM backbone.  Per-layer structural differences
+are handled two ways:
+  * *parameter-identical* variation (gemma2 local/global alternation) rides
+    through the scan as a per-layer ``window`` array;
+  * *parameter-structural* variation (deepseek's leading dense layers before
+    the MoE stack) becomes separate scan groups with their own stacked params.
+
+Everything is pure JAX; sharding is expressed through logical dim names on
+ParamSpecs plus ``repro.distributed.sharding.constrain`` calls on activations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import (
+    ParamSpec,
+    apply_rope,
+    attention,
+    decode_attention,
+    rms_norm,
+    rope,
+)
+from repro.models.config import ArchConfig
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Attention blocks
+# ---------------------------------------------------------------------------
+def gqa_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.bfloat16
+    p = {
+        "wq": ParamSpec((d, h, hd), ("hidden", "heads", None), dtype=dt),
+        "wk": ParamSpec((d, kv, hd), ("hidden", "kv_heads", None), dtype=dt),
+        "wv": ParamSpec((d, kv, hd), ("hidden", "kv_heads", None), dtype=dt),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "hidden"), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((h, hd), ("heads", None), dtype=dt, init="zeros")
+        p["bk"] = ParamSpec((kv, hd), ("kv_heads", None), dtype=dt, init="zeros")
+        p["bv"] = ParamSpec((kv, hd), ("kv_heads", None), dtype=dt, init="zeros")
+    return p
+
+
+def gqa_qkv(cfg: ArchConfig, p, x, sin, cos):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def gqa_apply_train(cfg: ArchConfig, p, x, sin, cos, window: jnp.ndarray):
+    """Full-sequence attention (training / prefill). window: int32 scalar,
+    0 => global."""
+    q, k, v = gqa_qkv(cfg, p, x, sin, cos)
+    win = None
+    if cfg.window is not None or cfg.local_global_pattern is not None:
+        # dynamic per-layer window rides through the scan as a traced scalar;
+        # 0 means "global" and is mapped to an effectively-infinite window.
+        win = jnp.where(window > 0, window, jnp.int32(2**30))
+    out = attention(
+        q, k, v, causal=True, window=win, softcap=cfg.attn_softcap,
+        q_chunk=1024,
+    )
+    # bf16 dot output => the TP partial-sum all-reduce runs in bf16 (§Perf
+    # iteration 5); MXU still accumulates fp32 within each partial.
+    out = jnp.einsum(
+        "bshk,hkd->bsd", out, p["wo"], preferred_element_type=out.dtype
+    )
+    return constrain(out, ("batch", "seq", None)), (k, v)
+
+
+def gqa_apply_decode(cfg: ArchConfig, p, x, sin, cos, window, kc, vc, pos):
+    """Single-token decode; kc/vc: [B, T, KV, hd] caches, pos: int32."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    t = kc.shape[1]
+    if cfg.family == "hybrid" and cfg.window:
+        slot = pos % t  # ring buffer (sliding-window cache)
+    else:
+        slot = pos
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+    if cfg.family == "hybrid" and cfg.window:
+        # ring cache: every valid slot is in-window by construction
+        valid = jnp.minimum(pos + 1, t)
+        out = decode_attention(
+            q, kc, vc, valid, softcap=cfg.attn_softcap, window=None
+        )
+    else:
+        win = None
+        if cfg.window or cfg.local_global_pattern:
+            win = jnp.where(window > 0, window, jnp.int32(2**30))
+        out = decode_attention(
+            q, kc, vc, pos + 1, softcap=cfg.attn_softcap, window=win,
+        )
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (kc, vc)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3) attention
+# ---------------------------------------------------------------------------
+def mla_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.mla_q_lora_rank, cfg.mla_kv_lora_rank
+    nope, rpe, vd = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim, cfg.mla_v_dim
+    dt = jnp.bfloat16
+    return {
+        "wq_a": ParamSpec((d, qr), ("hidden", "rank"), dtype=dt),
+        "q_norm": ParamSpec((qr,), ("rank",), dtype=dt, init="ones"),
+        "wq_b": ParamSpec((qr, h, nope + rpe), ("rank", "heads", None), dtype=dt),
+        "wkv_a": ParamSpec((d, kvr + rpe), ("hidden", "rank"), dtype=dt),
+        "kv_norm": ParamSpec((kvr,), ("rank",), dtype=dt, init="ones"),
+        "wkv_b": ParamSpec((kvr, h, nope + vd), ("rank", "heads", None), dtype=dt),
+        "wo": ParamSpec((h, vd, d), ("heads", None, "hidden"), dtype=dt),
+    }
+
+
+def mla_apply_train(cfg: ArchConfig, p, x, sin, cos, window):
+    del window
+    nope, rpe, vd = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim, cfg.mla_v_dim
+    kvr = cfg.mla_kv_lora_rank
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, sin, cos)
+
+    ckv_full = x @ p["wkv_a"]  # [B, S, kvr + rpe]
+    c_kv = rms_norm(ckv_full[..., :kvr], p["kv_norm"])
+    k_rope = apply_rope(ckv_full[..., None, kvr:], sin, cos)  # [B,S,1,rpe]
+
+    kvx = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"])
+    k_nope, v = kvx[..., :nope], kvx[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (rpe,))], -1
+    )
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    qf = constrain(qf, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    out = attention(
+        qf, k, v, causal=True, q_chunk=1024,
+        scale=1.0 / math.sqrt(nope + rpe),
+    )
+    out = jnp.einsum(
+        "bshk,hkd->bsd", out[..., :vd], p["wo"],
+        preferred_element_type=out.dtype,
+    )
+    return constrain(out, ("batch", "seq", None)), (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_apply_decode(cfg: ArchConfig, p, x, sin, cos, window, ckv_c, kr_c, pos):
+    """Absorbed-matmul MLA decode: attention runs in the *latent* space, so
+    the cache stays [B, T, kv_lora] (+[B, T, rope]) — deepseek's own inference
+    optimization, which is also what makes the latent FPTC-compressible."""
+    del window
+    nope, rpe, vd = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim, cfg.mla_v_dim
+    kvr = cfg.mla_kv_lora_rank
+    b = x.shape[0]
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])  # s == 1
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, sin, cos)
+
+    ckv_full = x @ p["wkv_a"]
+    c_kv_new = rms_norm(ckv_full[..., :kvr], p["kv_norm"])  # [B,1,kvr]
+    k_rope_new = apply_rope(ckv_full[..., None, kvr:], sin, cos)[:, :, 0, :]
+
+    ckv_c = jax.lax.dynamic_update_slice(ckv_c, c_kv_new, (0, pos, 0))
+    kr_c = jax.lax.dynamic_update_slice(kr_c, k_rope_new, (0, pos, 0))
+
+    # absorb: q_nope' = q_nope @ wkv_b[:, :, :nope]^T  -> latent space
+    wkb_k = p["wkv_b"][..., :nope]  # [kvr, H, nope]
+    wkb_v = p["wkv_b"][..., nope:]  # [kvr, H, vd]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wkb_k)  # [B,1,H,kvr]
+
+    scale = 1.0 / math.sqrt(nope + rpe)
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32), ckv_c.astype(jnp.float32))
+        + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32), kr_c.astype(jnp.float32))
+    ) * scale  # [B,H,1,T]
+    t = ckv_c.shape[1]
+    mask = jnp.arange(t)[None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs.astype(ckv_c.dtype), ckv_c)
+    out = jnp.einsum("bshr,rhk->bshk", out_lat, wkb_v)  # [B,1,H,vd]
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (ckv_c, kr_c)
+
+
+# ---------------------------------------------------------------------------
+# FFN blocks
+# ---------------------------------------------------------------------------
+def ffn_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = jnp.bfloat16
+    p = {
+        "wi": ParamSpec((d, ff), ("hidden", "ffn"), dtype=dt),
+        "wo": ParamSpec((ff, d), ("ffn", "hidden"), dtype=dt),
+    }
+    if cfg.gated_ffn:
+        p["wg"] = ParamSpec((d, ff), ("hidden", "ffn"), dtype=dt)
+    return p
+
+
+def _act(cfg: ArchConfig, x):
+    if cfg.ffn_activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def ffn_apply(cfg: ArchConfig, p, x):
+    if cfg.gated_ffn:
+        h = _act(cfg, x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = _act(cfg, x @ p["wi"])
+    h = constrain(h, ("batch", None, "ffn"))
+    # bf16 dot output => bf16 TP reduce (§Perf iteration 5)
+    down = jnp.einsum(
+        "bsf,fd->bsd", h, p["wo"], preferred_element_type=h.dtype
+    )
+    return constrain(down, ("batch", "seq", None))
+
+
+# ---------------------------------------------------------------------------
+# MoE block (GShard-style dense dispatch via one-hot combine)
+# ---------------------------------------------------------------------------
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    eff = cfg.moe_d_ff or cfg.d_ff
+    ne = cfg.moe_num_experts
+    dt = jnp.bfloat16
+    p = {
+        "router": ParamSpec((d, ne), ("hidden", None), dtype=jnp.float32),
+        "wi": ParamSpec((ne, d, eff), ("experts", "hidden", None), dtype=dt),
+        "wg": ParamSpec((ne, d, eff), ("experts", "hidden", None), dtype=dt),
+        "wo": ParamSpec((ne, eff, d), ("experts", None, "hidden"), dtype=dt),
+    }
+    if cfg.moe_num_shared:
+        p["shared"] = ffn_specs(
+            cfg, d_ff=eff * cfg.moe_num_shared
+        )
+    return p
+
+
+def moe_apply(cfg: ArchConfig, p, x):
+    """Top-k routed experts + optional shared expert.
+
+    Two dispatch paths:
+      * **sharded** (a ShardingPolicy with a >1 "model" axis is active):
+        expert-parallel shard_map with sort-rank dispatch + all_to_all —
+        see ``moe_distributed`` (no [T, E, C] materialization; required at
+        deepseek-v3 scale);
+      * **dense fallback** (smoke tests, single device): capacity-based
+        one-hot einsums (the classic GShard pattern).
+    """
+    from repro.distributed.sharding import current_policy
+
+    policy = current_policy()
+    if policy is not None and policy.axis_sizes.get("model", 1) > 1:
+        nshards = policy.axis_sizes.get("model", 1)
+        for a in policy.fsdp_axes:
+            nshards *= policy.axis_sizes[a]
+    if (
+        policy is not None
+        and getattr(policy, "allow_shard_map", True)
+        and policy.axis_sizes.get("model", 1) > 1
+        and cfg.moe_num_experts % policy.axis_sizes["model"] == 0
+        and (x.shape[0] * x.shape[1]) // nshards >= 8  # enough tokens/shard
+    ):
+        from repro.models.moe_distributed import moe_apply_sharded
+
+        out = moe_apply_sharded(cfg, p, x, policy)
+        if cfg.moe_num_shared:
+            out = out + ffn_apply(cfg, p["shared"], x)
+        return out
+
+    b, s, d = x.shape
+    ne, topk = cfg.moe_num_experts, cfg.moe_top_k
+    xf = x.reshape(b * s, d)
+    n_tok = b * s
+
+    logits = (xf.astype(jnp.float32) @ p["router"])  # [T, E]
+    gates, chosen = jax.lax.top_k(logits, topk)  # [T, k]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    capacity = max(int(2 * n_tok * topk / ne), 4)
+    capacity = min(capacity, n_tok)
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(chosen, ne, dtype=jnp.int32)  # [T, k, E]
+    flat_onehot = onehot.reshape(n_tok * topk, ne)
+    pos_in_expert = (
+        jnp.cumsum(flat_onehot, axis=0) - flat_onehot
+    )  # [T*k, E]
+    pos_in_expert = jnp.sum(pos_in_expert * flat_onehot, axis=-1).reshape(
+        n_tok, topk
+    )
+    keep = pos_in_expert < capacity
+
+    # dispatch: [T, k, E] x slot one-hot [T, k, C] -> [E, C, T] combine tensor
+    slot_onehot = jax.nn.one_hot(
+        jnp.where(keep, pos_in_expert, capacity), capacity, dtype=x.dtype
+    )  # [T, k, C] (dropped tokens one-hot to nothing)
+    dispatch = jnp.einsum(
+        "tke,tkc->etc", onehot.astype(x.dtype), slot_onehot
+    )  # [E, T, C] -> wait: etc = [E, T, C]
+    expert_in = jnp.einsum("etc,td->ecd", dispatch, xf)  # [E, C, d]
+    expert_in = constrain(expert_in, ("experts", None, None))
+
+    h = _act(cfg, jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", expert_in, p["wi"]
+    )
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["wo"])  # [E, C, d]
+    expert_out = constrain(expert_out, ("experts", None, None))
+
+    combine = jnp.einsum(
+        "tk,tke,tkc->tce",
+        gates.astype(x.dtype),
+        onehot.astype(x.dtype),
+        slot_onehot,
+    )  # [T, C, E] combine weights (gate where kept, 0 where dropped)
+    out = jnp.einsum("tce,ecd->td", combine, expert_out).reshape(b, s, d)
+    if cfg.moe_num_shared:
+        out = out + ffn_apply(cfg, p["shared"], x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decoder layer (dense or moe ffn; gqa or mla attention; optional ssm branch)
+# ---------------------------------------------------------------------------
+def layer_specs(cfg: ArchConfig, kind: str) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    dt = jnp.bfloat16
+    p: Dict[str, Any] = {
+        "ln1": ParamSpec((d,), (None,), dtype=dt, init="ones"),
+        "ln2": ParamSpec((d,), (None,), dtype=dt, init="ones"),
+    }
+    if cfg.post_block_norms:
+        p["ln1_post"] = ParamSpec((d,), (None,), dtype=dt, init="ones")
+        p["ln2_post"] = ParamSpec((d,), (None,), dtype=dt, init="ones")
+    p["attn"] = mla_specs(cfg) if cfg.mla else gqa_specs(cfg)
+    if cfg.hybrid_parallel:
+        from repro.models.ssm import mamba_specs
+
+        p["ssm"] = mamba_specs(cfg)
+        p["ssm_norm"] = ParamSpec((d,), (None,), dtype=dt, init="ones")
+        p["attn_norm"] = ParamSpec((d,), (None,), dtype=dt, init="ones")
+    p["ffn"] = moe_specs(cfg) if kind == "moe" else ffn_specs(cfg)
+    return p
+
+
+def layer_apply_train(cfg: ArchConfig, kind: str, p, x, sin, cos, window):
+    """Returns (x_out, cache_contrib) — cache ignored in training.
+
+    The residual stream is sequence-sharded over "model" (SP); each block
+    gathers to full sequence at an explicit bf16 boundary after its norm and
+    reduce-scatters on exit.  (§Perf iteration 3 tried a single entry-gather
+    per layer: collective bytes were unchanged but full-seq liveness across
+    both blocks quadrupled temp memory — refuted, reverted.)
+    """
+    h = rms_norm(x, p["ln1"], offset=1.0 if cfg.post_block_norms else 0.0)
+    h = constrain(h, ("batch", None, None))  # bf16 seq all-gather point
+    attn_fn = mla_apply_train if cfg.mla else gqa_apply_train
+    attn_out, _ = attn_fn(cfg, p["attn"], h, sin, cos, window)
+    if cfg.hybrid_parallel:
+        from repro.models.ssm import mamba_apply_train
+
+        ssm_out = mamba_apply_train(cfg, p["ssm"], h)
+        attn_out = 0.5 * (
+            rms_norm(attn_out, p["attn_norm"]) + rms_norm(ssm_out, p["ssm_norm"])
+        )
+    if cfg.post_block_norms:
+        attn_out = rms_norm(attn_out, p["ln1_post"], offset=1.0)
+    x = x + attn_out
+    h = rms_norm(x, p["ln2"], offset=1.0 if cfg.post_block_norms else 0.0)
+    h = constrain(h, ("batch", None, None))  # bf16 seq all-gather point
+    ffn_out = moe_apply(cfg, p["ffn"], h) if kind == "moe" else ffn_apply(
+        cfg, p["ffn"], h
+    )
+    if cfg.post_block_norms:
+        ffn_out = rms_norm(ffn_out, p["ln2_post"], offset=1.0)
+    x = x + ffn_out
+    return constrain(x, ("batch", "seq", None))
+
+
+def layer_apply_decode(cfg, kind, p, x, sin, cos, window, cache, pos):
+    """cache: dict of this layer's state tensors; returns (x, new_cache)."""
+    h = rms_norm(x, p["ln1"], offset=1.0 if cfg.post_block_norms else 0.0)
+    if cfg.mla:
+        attn_out, (c1, c2) = mla_apply_decode(
+            cfg, p["attn"], h, sin, cos, window, cache["ckv"], cache["kr"], pos
+        )
+        new_cache = {"ckv": c1, "kr": c2}
+    else:
+        attn_out, (kc, vc) = gqa_apply_decode(
+            cfg, p["attn"], h, sin, cos, window, cache["k"], cache["v"], pos
+        )
+        new_cache = {"k": kc, "v": vc}
+    if cfg.hybrid_parallel:
+        from repro.models.ssm import mamba_apply_decode
+
+        ssm_out, conv_s, ssm_s = mamba_apply_decode(
+            cfg, p["ssm"], h, cache["conv"], cache["ssm"]
+        )
+        new_cache["conv"] = conv_s
+        new_cache["ssm"] = ssm_s
+        attn_out = 0.5 * (
+            rms_norm(attn_out, p["attn_norm"]) + rms_norm(ssm_out, p["ssm_norm"])
+        )
+    if cfg.post_block_norms:
+        attn_out = rms_norm(attn_out, p["ln1_post"], offset=1.0)
+    x = x + attn_out
+    h = rms_norm(x, p["ln2"], offset=1.0 if cfg.post_block_norms else 0.0)
+    ffn_out = moe_apply(cfg, p["ffn"], h) if kind == "moe" else ffn_apply(
+        cfg, p["ffn"], h
+    )
+    if cfg.post_block_norms:
+        ffn_out = rms_norm(ffn_out, p["ln2_post"], offset=1.0)
+    return x + ffn_out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Layer grouping
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayerGroup:
+    kind: str  # "dense" | "moe"
+    count: int
+    windows: Tuple[int, ...]  # per-layer window (0 = global)
+
+
+def layer_groups(cfg: ArchConfig) -> List[LayerGroup]:
+    def window_for(layer_idx: int) -> int:
+        if cfg.local_global_pattern:
+            pat = cfg.local_global_pattern
+            return (
+                cfg.window or 0
+            ) if pat[layer_idx % len(pat)] == "local" else 0
+        if cfg.window:
+            return cfg.window
+        return 0
+
+    groups: List[LayerGroup] = []
+    if cfg.moe_num_experts > 0:
+        nd = cfg.moe_first_dense
+        if nd:
+            groups.append(
+                LayerGroup("dense", nd, tuple(window_for(i) for i in range(nd)))
+            )
+        rest = cfg.num_layers - nd
+        groups.append(
+            LayerGroup(
+                "moe", rest, tuple(window_for(nd + i) for i in range(rest))
+            )
+        )
+    else:
+        groups.append(
+            LayerGroup(
+                "dense",
+                cfg.num_layers,
+                tuple(window_for(i) for i in range(cfg.num_layers)),
+            )
+        )
+    return groups

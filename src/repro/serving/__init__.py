@@ -1,0 +1,11 @@
+from repro.serving.kv_compression import (
+    KVCompressionConfig,
+    compress_kv_block,
+    decompress_kv_block,
+)
+
+__all__ = [
+    "KVCompressionConfig",
+    "compress_kv_block",
+    "decompress_kv_block",
+]

@@ -1,0 +1,68 @@
+"""FPTC KV-cache compression for long-context serving (DESIGN.md §3.3).
+
+Cold KV blocks are DCT-transformed along the *time* axis in windows of N
+tokens, 3-zone quantized to uint8, and kept compressed in HBM; blocks are
+dequantized + inverse-transformed on access.  This trades ~4x (+truncation)
+cache memory for a small reconstruction error in attention — the same
+asymmetric trade the paper makes for archival signals, applied to the KV
+timeline (keys/values of adjacent tokens are smooth for trained models).
+
+Entropy coding is intentionally NOT applied here: cache blocks must stay
+fixed-size for O(1) random access during decode (recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dct as dctlib
+
+__all__ = ["KVCompressionConfig", "compress_kv_block", "decompress_kv_block"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCompressionConfig:
+    n: int = 16  # DCT window along the token axis
+    e: int = 8  # retained coefficients
+    # simple symmetric linear quantizer per (head, dim) channel — the KV
+    # analog of the paper's zone-1; mu-law zone-0 adds little for KV because
+    # the coefficient dynamic range per channel is narrow post-RMSNorm.
+
+    @property
+    def ratio(self) -> float:
+        """Compressed bytes / raw bf16 bytes."""
+        return (self.e / self.n) * (1 / 2) + 4.0 / (self.n * 2 * 128)
+
+
+def compress_kv_block(
+    kv: jnp.ndarray, cfg: KVCompressionConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """kv: [B, T, H, D] with T divisible by cfg.n.
+
+    Returns (levels uint8 [B, T//N*E, H, D], scale f32 [B, T//N, H, D]).
+    """
+    b, t, h, d = kv.shape
+    w = t // cfg.n
+    x = kv.astype(jnp.float32).reshape(b, w, cfg.n, h, d)
+    x = jnp.moveaxis(x, 2, -1)  # [B, W, H, D, N]
+    coeffs = x @ dctlib.dct_basis(cfg.n, cfg.e)  # [B, W, H, D, E]
+    scale = jnp.max(jnp.abs(coeffs), axis=-1, keepdims=True) + 1e-8
+    q = jnp.clip(jnp.round(coeffs / scale * 127.0) + 128.0, 0, 255).astype(
+        jnp.uint8
+    )
+    return q, scale[..., 0]
+
+
+def decompress_kv_block(
+    levels: jnp.ndarray, scale: jnp.ndarray, cfg: KVCompressionConfig,
+    dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """Inverse of :func:`compress_kv_block` -> [B, T, H, D]."""
+    b, w, h, d, e = levels.shape
+    coeffs = (levels.astype(jnp.float32) - 128.0) / 127.0 * scale[..., None]
+    x = coeffs @ dctlib.idct_basis(cfg.n, e)  # [B, W, H, D, N]
+    x = jnp.moveaxis(x, -1, 2)  # [B, W, N, H, D]
+    return x.reshape(b, w * cfg.n, h, d).astype(dtype)

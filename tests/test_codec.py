@@ -1,0 +1,112 @@
+"""End-to-end codec behaviour: roundtrips, containers, domain thresholds."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DOMAIN_DEFAULTS,
+    CodecConfig,
+    Container,
+    calibrate,
+    decode,
+    decode_device,
+    encode,
+    encode_device,
+)
+from repro.core.codec import roundtrip_metrics
+from repro.core.metrics import compression_ratio, prd
+from repro.data import make_signal
+from repro.data.signals import DATASETS, domain_of
+
+
+@pytest.fixture(scope="module")
+def power_tables():
+    return calibrate(
+        make_signal("load_power", 65536, seed=99), DOMAIN_DEFAULTS["power"]
+    )
+
+
+def test_host_device_encode_bit_identical(power_tables):
+    sig = make_signal("load_power", 16384, seed=1)
+    c_host = encode(sig, power_tables)
+    c_dev = encode_device(sig, power_tables)
+    np.testing.assert_array_equal(c_host.words, c_dev.words)
+    np.testing.assert_array_equal(c_host.symlen, c_dev.symlen)
+
+
+def test_host_device_decode_agree(power_tables):
+    sig = make_signal("load_power", 16384, seed=2)
+    c = encode(sig, power_tables)
+    r1 = decode(c, power_tables)
+    r2 = decode_device(c, power_tables)
+    np.testing.assert_allclose(r1, r2, atol=1e-4)
+
+
+def test_container_serialization_roundtrip(power_tables):
+    sig = make_signal("load_power", 4096, seed=3)
+    c = encode(sig, power_tables)
+    c2 = Container.from_bytes(c.to_bytes())
+    np.testing.assert_array_equal(c.words, c2.words)
+    np.testing.assert_array_equal(c.symlen, c2.symlen)
+    assert c2.num_symbols == c.num_symbols
+    assert c2.signal_length == c.signal_length
+
+
+def test_container_detects_corruption(power_tables):
+    sig = make_signal("load_power", 4096, seed=4)
+    blob = bytearray(encode(sig, power_tables).to_bytes())
+    blob[-1] ^= 0xFF  # flip a symlen byte
+    with pytest.raises(ValueError):
+        Container.from_bytes(bytes(blob))
+
+
+@pytest.mark.parametrize("dataset", sorted(DATASETS))
+def test_domain_prd_thresholds(dataset):
+    """Every dataset reconstructs within its domain's PRD threshold
+    (paper §6.1.3) at the domain default operating point."""
+    dom = domain_of(dataset)
+    thresholds = {
+        "biomedical": 5.0,
+        "seismic": 2.0,
+        "power": 5.0,
+        "meteorological": 5.0,
+    }
+    calib = np.concatenate(
+        [make_signal(dataset, 65536, seed=90 + i) for i in range(4)]
+    )
+    tables = calibrate(calib, DOMAIN_DEFAULTS[dom])
+    cr, p = roundtrip_metrics(make_signal(dataset, 32768, seed=1), tables)
+    assert p < thresholds[dom], f"{dataset}: PRD {p:.2f}% over threshold"
+    assert cr > 2.0, f"{dataset}: CR {cr:.2f} too low to be useful"
+
+
+def test_cr_improves_with_truncation():
+    sig = make_signal("temperature", 32768, seed=5)
+    calib = make_signal("temperature", 65536, seed=6)
+    crs = []
+    for e in (16, 8, 4):
+        cfg = CodecConfig(n=32, e=e, b1=2, b2=e)
+        cr, _ = roundtrip_metrics(sig, calibrate(calib, cfg))
+        crs.append(cr)
+    assert crs[0] < crs[1] < crs[2]
+
+
+def test_metrics_definitions():
+    x = np.array([3.0, 4.0])
+    assert prd(x, x) == 0.0
+    assert prd(x, np.zeros(2)) == pytest.approx(100.0)
+    assert compression_ratio(1000, 100) == 10.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_decode_is_deterministic(seed):
+    sig = make_signal("eeg_mat", 8192, seed=seed)
+    tables = calibrate(
+        make_signal("eeg_mat", 32768, seed=123), DOMAIN_DEFAULTS["biomedical"]
+    )
+    c = encode(sig, tables)
+    r1 = decode(c, tables)
+    r2 = decode(c, tables)
+    np.testing.assert_array_equal(r1, r2)
+    assert c.compression_ratio > 1.0

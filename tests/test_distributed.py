@@ -1,0 +1,183 @@
+"""Sharding policy, gradient compression, and multi-device train step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.compression import CompressionConfig, GradCompressor
+from repro.distributed.sharding import DEFAULT_RULES, ShardingPolicy
+from repro.models.common import ParamSpec
+
+
+class FakeMesh:
+    """Axis-size stand-in for spec resolution tests (no devices needed)."""
+
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        import numpy as _np
+
+        self.devices = _np.empty(tuple(sizes.values()), dtype=object)
+
+
+def test_policy_divisibility_fallback():
+    policy = ShardingPolicy(FakeMesh({"data": 16, "model": 16}))
+    # 20 heads on a 16-way model axis -> replicated
+    spec = policy.spec_for(("hidden", "heads", None), (2560, 20, 128))
+    assert spec == jax.sharding.PartitionSpec("data")
+    # 32 heads -> sharded
+    spec = policy.spec_for(("hidden", "heads", None), (4096, 32, 128))
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_policy_no_axis_reuse():
+    policy = ShardingPolicy(FakeMesh({"data": 4, "model": 4}))
+    # both dims want "model": only the first gets it
+    spec = policy.spec_for(("seq", "ffn"), (64, 64))
+    assert spec == jax.sharding.PartitionSpec("model")
+
+
+def test_policy_exclude():
+    mesh = FakeMesh({"pod": 2, "data": 8, "model": 16})
+    full = ShardingPolicy(mesh)
+    nopod = full.without("pod")
+    s_full = full.spec_for(("hidden",), (4096,))
+    s_nopod = nopod.spec_for(("hidden",), (4096,))
+    assert s_full == jax.sharding.PartitionSpec(("pod", "data"))
+    assert s_nopod == jax.sharding.PartitionSpec(("data",))
+    assert nopod.fsdp_axes == ("data",)
+
+
+def test_compressor_spectrum_roundtrip_smooth():
+    """Smooth gradients survive DCT truncation nearly unchanged."""
+    comp = GradCompressor(CompressionConfig(mode="truncate", n=64, e=32))
+    t = np.linspace(0, 20, 8192)
+    g = jnp.asarray(np.sin(t) + 0.3 * np.sin(3 * t), jnp.float32)
+    spec, size = comp._to_spectrum(g)
+    back = comp._from_spectrum(spec, size, g.shape, g.dtype)
+    rel = float(jnp.linalg.norm(back - g) / jnp.linalg.norm(g))
+    assert rel < 0.05
+
+
+def test_compressor_wire_bytes_accounting():
+    comp = GradCompressor(CompressionConfig(mode="truncate_int8", n=64, e=16))
+    n = 64 * 1000
+    assert comp.wire_bytes(n) == 1000 * 16  # int8 * E per window
+    assert comp.wire_bytes(n) / (n * 4) == pytest.approx(1 / 16.0)
+
+
+def test_error_feedback_recovers_quantization_error():
+    """EF fully recovers the (state-dependent) int8 quantization error:
+    the mean applied update converges to the true gradient when the only
+    lossy stage is quantization (n == e: no truncation)."""
+    n = 32
+    rng = np.random.default_rng(0)
+    g_true = np.random.default_rng(0).standard_normal(2048).astype(np.float32)
+    g_true = jnp.asarray(g_true)
+
+    from repro.core import dct as dctlib
+
+    residual = jnp.zeros_like(g_true)
+    applied = jnp.zeros_like(g_true)
+    steps = 40
+    for _ in range(steps):
+        g_eff = g_true + residual
+        spec = dctlib.forward_dct(g_eff.reshape(-1, n), n)
+        scale = (jnp.max(jnp.abs(spec)) + 1e-12) / 127.0
+        q = jnp.clip(jnp.round(spec / scale), -127, 127)
+        g_hat = dctlib.inverse_dct(q * scale, n).reshape(-1)
+        residual = 0.9 * (g_eff - g_hat)
+        applied = applied + g_hat
+    rel = float(
+        jnp.linalg.norm(applied / steps - g_true) / jnp.linalg.norm(g_true)
+    )
+    one_shot = dctlib.inverse_dct(
+        jnp.round(
+            dctlib.forward_dct(g_true.reshape(-1, n), n) / scale
+        ) * scale, n,
+    ).reshape(-1)
+    one_rel = float(jnp.linalg.norm(one_shot - g_true) / jnp.linalg.norm(g_true))
+    assert rel < one_rel * 0.7  # EF beats one-shot quantization
+    assert rel < 0.01
+
+
+def test_truncation_is_fixed_projection_and_residual_bounded():
+    """Spectral truncation is a FIXED projection: the applied update equals
+    the projected gradient (the orthogonal part is permanently filtered —
+    the smooth-gradient prior), and the decayed residual stays bounded."""
+    comp = GradCompressor(CompressionConfig(mode="truncate", n=32, e=8,
+                                            ef_decay=0.9))
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(2048), jnp.float32)
+
+    spec, size = comp._to_spectrum(g_true)
+    proj = comp._from_spectrum(spec, size, g_true.shape, jnp.float32)
+
+    residual = jnp.zeros_like(g_true)
+    norms = []
+    applied = jnp.zeros_like(g_true)
+    for _ in range(50):
+        g_eff = g_true + residual
+        s, _ = comp._to_spectrum(g_eff)
+        g_hat = comp._from_spectrum(s, size, g_true.shape, jnp.float32)
+        residual = 0.9 * (g_eff - g_hat)
+        applied = applied + g_hat
+        norms.append(float(jnp.linalg.norm(residual)))
+    # applied/k == projection of g (orthogonal part never passes the wire)
+    rel = float(jnp.linalg.norm(applied / 50 - proj) / jnp.linalg.norm(proj))
+    assert rel < 1e-4
+    # residual converges to the geometric limit beta/(1-beta)*|(I-P)g| —
+    # bounded, not linear growth (without decay it grows without bound)
+    orth = float(jnp.linalg.norm(g_true - proj))
+    assert norms[-1] <= 9.0 * orth * 1.05
+    assert norms[-1] - norms[-5] < 0.02 * norms[-1]  # plateaued
+
+
+def test_train_step_single_device_mesh():
+    """make_train_step end to end on a 1x1 mesh: loss decreases."""
+    from repro.configs import get_smoke
+    from repro.distributed.optimizer import AdamW, AdamWConfig
+    from repro.distributed.train import make_train_step
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+    from repro.models.common import init_params
+
+    cfg = get_smoke("granite_8b")
+    model = build_model(cfg)
+    mesh = make_local_mesh(1, 1)
+    opt = AdamW(AdamWConfig(base_lr=3e-3, warmup=2, total_steps=40))
+    ts = make_train_step(model, opt, mesh)
+    rng = np.random.default_rng(0)
+    with mesh:
+        params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+        state = opt.init(params)
+        # one repeated batch: loss must drop (memorization)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)
+        batch = {"tokens": tokens, "labels": tokens}
+        losses = []
+        for _ in range(15):
+            params, state, metrics = ts.step_fn(params, state, batch)
+            losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_moe_sort_rank():
+    from repro.models.moe_distributed import sort_rank
+
+    e = jnp.asarray([2, 0, 2, 1, 2, 0], jnp.int32)
+    rank = np.asarray(sort_rank(e, 3))
+    np.testing.assert_array_equal(rank, [0, 0, 1, 0, 2, 1])
+
+
+def test_validate_mesh_for_catches_indivisible():
+    from repro.distributed.elastic import validate_mesh_for
+
+    policy = ShardingPolicy(FakeMesh({"data": 3, "model": 5}))
+    specs = {"w": ParamSpec((16, 10), ("hidden", "ffn"))}
+    problems = validate_mesh_for(policy, specs)
+    # 16 % 3 != 0 -> hidden won't shard (replicated, fine); 10 % 5 == 0 ->
+    # ffn shards cleanly; no problems expected
+    assert problems == []
+    # force a bad rule: dim sharded but indivisible can't happen through
+    # spec_for (divisibility-checked), so validate passes by construction
+    specs2 = {"w": ParamSpec((15, 64), ("hidden", "ffn"))}
+    assert validate_mesh_for(policy, specs2) == []

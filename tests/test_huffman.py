@@ -1,0 +1,92 @@
+"""Length-limited canonical Huffman: optimality, invariants, decode tables."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.huffman import (
+    build_codebook,
+    decode_prefix_arith,
+    kraft_sum,
+    package_merge_lengths,
+)
+
+
+def test_kraft_equality_simple():
+    freqs = np.zeros(256, np.int64)
+    freqs[:8] = [100, 50, 25, 12, 6, 3, 2, 1]
+    lengths = package_merge_lengths(freqs, 12)
+    assert abs(kraft_sum(lengths) - 1.0) < 1e-12
+
+
+def test_single_symbol():
+    freqs = np.zeros(256, np.int64)
+    freqs[42] = 10
+    book = build_codebook(freqs, l_max=8)
+    assert book.lengths[42] == 1
+    assert book.num_active == 1
+
+
+def test_length_limit_enforced():
+    # pathological exponential distribution would want lengths > 6
+    freqs = np.zeros(256, np.int64)
+    freqs[:32] = [2 ** i for i in range(32)]
+    book = build_codebook(freqs, l_max=6)
+    active = book.lengths[book.lengths > 0]
+    assert active.max() <= 6
+    assert abs(kraft_sum(book.lengths) - 1.0) < 1e-12
+
+
+def test_matches_entropy_bound():
+    rng = np.random.default_rng(0)
+    freqs = rng.integers(1, 10_000, 256).astype(np.int64)
+    book = build_codebook(freqs, l_max=16)
+    p = freqs / freqs.sum()
+    entropy = -(p * np.log2(p)).sum()
+    avg = book.expected_bits(freqs)
+    assert entropy <= avg <= entropy + 1.0  # Huffman redundancy bound
+
+
+def test_prefix_free():
+    rng = np.random.default_rng(1)
+    freqs = rng.integers(0, 1000, 256).astype(np.int64)
+    freqs[freqs < 10] = 0
+    book = build_codebook(freqs, l_max=12)
+    codes = [
+        (format(book.codes[s], "b").zfill(book.lengths[s]))
+        for s in range(256)
+        if book.lengths[s] > 0
+    ]
+    for i, a in enumerate(codes):
+        for j, b in enumerate(codes):
+            if i != j:
+                assert not b.startswith(a) or len(b) < len(a)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(0, 5000), min_size=256, max_size=256),
+    st.integers(9, 14),
+)
+def test_property_valid_codebook(freq_list, l_max):
+    freqs = np.asarray(freq_list, np.int64)
+    if freqs.sum() == 0:
+        freqs[0] = 1
+    book = build_codebook(freqs, l_max=l_max)
+    active = book.lengths > 0
+    # every symbol with nonzero freq has a code
+    assert np.all(active[freqs > 0])
+    if active.sum() > 1:
+        assert abs(kraft_sum(book.lengths) - 1.0) < 1e-9
+    assert book.lengths.max() <= l_max
+
+
+def test_lut_vs_arithmetic_decode_agree():
+    rng = np.random.default_rng(2)
+    freqs = rng.integers(1, 500, 256).astype(np.int64)
+    book = build_codebook(freqs, l_max=12)
+    prefixes = rng.integers(0, 1 << 12, 4096).astype(np.uint32)
+    sym_a, len_a = decode_prefix_arith(book, prefixes)
+    sym_l = book.lut_symbol[prefixes]
+    len_l = book.lut_length[prefixes]
+    np.testing.assert_array_equal(sym_a, sym_l)
+    np.testing.assert_array_equal(len_a, len_l)

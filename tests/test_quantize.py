@@ -1,0 +1,83 @@
+"""3-zone hybrid quantizer invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import build_quant_table, dequantize, quantize
+
+
+def _table(e=16, b1=4, b2=12, mu=50.0, alpha1=0.004, seed=0):
+    rng = np.random.default_rng(seed)
+    calib = rng.standard_normal((4096, e)) * np.linspace(2, 0.1, e)
+    return build_quant_table(
+        calib, b1=b1, b2=b2, mu=mu, alpha1=alpha1, percentile=99.9
+    )
+
+
+def test_zone2_always_zero_bin():
+    t = _table()
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((256, 16)) * 5)
+    q = np.asarray(quantize(x, t))
+    assert np.all(q[:, 12:] == 128)
+    d = np.asarray(dequantize(jnp.asarray(q), t))
+    assert np.all(d[:, 12:] == 0.0)
+
+
+def test_deadzone_collapses_to_zero():
+    t = _table(alpha1=0.1)
+    scale = np.asarray(t.scale)
+    # values inside the deadzone of zone-1 bins map to 128 and decode to 0
+    x = np.zeros((4, 16), np.float32)
+    x[:, 4:12] = scale[4:12] * 0.05  # well inside 0.1 * A1
+    q = np.asarray(quantize(jnp.asarray(x), t))
+    assert np.all(q[:, 4:12] == 128)
+
+
+def test_zero_maps_to_zero_bin_everywhere():
+    t = _table()
+    q = np.asarray(quantize(jnp.zeros((2, 16)), t))
+    assert np.all(q == 128)
+    d = np.asarray(dequantize(jnp.asarray(q), t))
+    assert np.allclose(d, 0.0)
+
+
+def test_sign_symmetry():
+    t = _table()
+    x = np.abs(np.random.default_rng(2).standard_normal((64, 16))).astype(
+        np.float32
+    )
+    qp = np.asarray(quantize(jnp.asarray(x), t)).astype(np.int32)
+    qn = np.asarray(quantize(jnp.asarray(-x), t)).astype(np.int32)
+    # positive bins 129..255 mirror negative bins 127..0 around 128
+    pos_off = qp - 128
+    neg_off = 128 - qn
+    # mu-law mapping has 127 negative vs 126 positive levels; allow 1 level
+    assert np.all(np.abs(pos_off - neg_off) <= 1)
+
+
+def test_mulaw_monotone():
+    t = _table(b1=16, b2=16)  # all zone-0
+    x = np.linspace(-3, 3, 512, dtype=np.float32)[:, None].repeat(16, 1)
+    q = np.asarray(quantize(jnp.asarray(x), t)).astype(np.int32)
+    assert np.all(np.diff(q[:, 0]) >= 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.floats(1.0, 400.0))
+def test_property_roundtrip_error_bounded(seed, mu):
+    """|dequant(quant(x)) - x| is bounded by the local cell width."""
+    rng = np.random.default_rng(seed)
+    e = 8
+    calib = rng.standard_normal((2048, e)).astype(np.float32)
+    t = build_quant_table(
+        calib, b1=e, b2=e, mu=mu, alpha1=0.004, percentile=100.0
+    )
+    x = rng.standard_normal((128, e)).astype(np.float32)
+    scale = np.asarray(t.scale)
+    x = np.clip(x, -scale, scale)  # in-range values
+    q = quantize(jnp.asarray(x), t)
+    d = np.asarray(dequantize(q, t))
+    # mu-law max cell width at the extremes: A * (exp(ln(1+mu)/126) - 1) *
+    # (1+mu)/mu — conservative bound of ~4% of A for mu<=400
+    bound = scale * (np.log1p(mu) / 126.0) * (1 + mu) / mu * 1.5 + 1e-5
+    assert np.all(np.abs(d - x) <= bound + np.abs(x) * 0.05)

@@ -1,0 +1,131 @@
+"""SymLen bitstream: Algorithm 1 fidelity + parallel decode equivalence."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.huffman import build_codebook
+from repro.core.symlen import (
+    PackedStream,
+    pack_symlen_np,
+    pack_symlen_scan,
+    u32_to_words,
+    unpack_symlen,
+    unpack_symlen_np,
+    words_to_u32,
+)
+
+
+def _book(seed=0, l_max=12):
+    rng = np.random.default_rng(seed)
+    freqs = rng.integers(1, 1000, 256).astype(np.int64)
+    return build_codebook(freqs, l_max=l_max)
+
+
+def _decode_args(book):
+    return dict(
+        dec_limit=jnp.asarray(book.limit_shifted[1:], jnp.uint32),
+        dec_first=jnp.asarray(book.first_code_shifted, jnp.uint32),
+        dec_rank=jnp.asarray(book.rank_offset, jnp.int32),
+        dec_syms=jnp.asarray(book.sorted_symbols, jnp.int32),
+    )
+
+
+def test_roundtrip_np():
+    book = _book()
+    rng = np.random.default_rng(3)
+    syms = rng.integers(0, 256, 10_000).astype(np.uint8)
+    stream = pack_symlen_np(syms, book)
+    out = unpack_symlen_np(stream, book)
+    np.testing.assert_array_equal(out, syms)
+
+
+def test_scan_encoder_bit_identical_to_alg1():
+    book = _book(1)
+    rng = np.random.default_rng(4)
+    syms = rng.integers(0, 256, 5_000).astype(np.uint8)
+    ref = pack_symlen_np(syms, book)
+    hi, lo, sl, nw = pack_symlen_scan(
+        jnp.asarray(syms),
+        jnp.asarray(book.codes, jnp.uint32),
+        jnp.asarray(book.lengths, jnp.int32),
+    )
+    nw = int(nw)
+    words = u32_to_words(np.asarray(hi[:nw]), np.asarray(lo[:nw]))
+    np.testing.assert_array_equal(words, ref.words)
+    np.testing.assert_array_equal(np.asarray(sl[:nw]), ref.symlen)
+
+
+def test_parallel_decode_matches_serial():
+    book = _book(2)
+    rng = np.random.default_rng(5)
+    syms = rng.integers(0, 256, 20_000).astype(np.uint8)
+    stream = pack_symlen_np(syms, book)
+    hi, lo = words_to_u32(stream.words)
+    out = unpack_symlen(
+        jnp.asarray(hi), jnp.asarray(lo),
+        jnp.asarray(stream.symlen, jnp.int32),
+        l_max=book.l_max,
+        max_symlen=stream.max_symlen,
+        num_symbols=stream.num_symbols,
+        **_decode_args(book),
+    )
+    np.testing.assert_array_equal(np.asarray(out), syms)
+
+
+def test_word_independence():
+    """Every word decodes correctly in isolation — the SymLen property that
+    makes the GPU/TPU decoder synchronization-free."""
+    book = _book(6)
+    rng = np.random.default_rng(7)
+    syms = rng.integers(0, 256, 4_000).astype(np.uint8)
+    stream = pack_symlen_np(syms, book)
+    # decode words one at a time, in reverse order; concatenation must equal
+    # the original stream
+    pieces = []
+    for w in reversed(range(stream.num_words)):
+        sub = PackedStream(
+            words=stream.words[w : w + 1],
+            symlen=stream.symlen[w : w + 1],
+            num_symbols=int(stream.symlen[w]),
+        )
+        pieces.append(unpack_symlen_np(sub, book))
+    out = np.concatenate(pieces[::-1])
+    np.testing.assert_array_equal(out, syms)
+
+
+def test_codewords_never_split():
+    """No codeword straddles a 64-bit boundary: total bits per word <= 64."""
+    book = _book(8)
+    rng = np.random.default_rng(9)
+    syms = rng.integers(0, 256, 8_000).astype(np.uint8)
+    stream = pack_symlen_np(syms, book)
+    pos = 0
+    for sl in stream.symlen:
+        bits = sum(int(book.lengths[s]) for s in syms[pos : pos + sl])
+        assert bits <= 64
+        pos += sl
+    assert pos == syms.size
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 2000))
+def test_property_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    # skewed distribution (zipf-ish) to exercise variable lengths
+    raw = rng.zipf(1.3, n)
+    syms = np.clip(raw, 0, 255).astype(np.uint8)
+    freqs = np.bincount(syms, minlength=256).astype(np.int64) + 1
+    book = build_codebook(freqs, l_max=12)
+    stream = pack_symlen_np(syms, book)
+    out = unpack_symlen_np(stream, book)
+    np.testing.assert_array_equal(out, syms)
+    # parallel path agrees
+    hi, lo = words_to_u32(stream.words)
+    out2 = unpack_symlen(
+        jnp.asarray(hi), jnp.asarray(lo),
+        jnp.asarray(stream.symlen, jnp.int32),
+        l_max=book.l_max, max_symlen=stream.max_symlen,
+        num_symbols=stream.num_symbols, **_decode_args(book),
+    )
+    np.testing.assert_array_equal(np.asarray(out2), syms)
