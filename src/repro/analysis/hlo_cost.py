@@ -42,7 +42,7 @@ _OP_LINE = re.compile(
     r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\("
 )
 _SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
-_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _COND_BODY = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
 _BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")

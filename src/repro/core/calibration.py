@@ -39,16 +39,28 @@ class DomainTables:
     # the codebook deterministically — serialized with ckpt compression)
 
     def device_tables(self) -> "DeviceTables":
-        b = self.book
-        return DeviceTables(
-            codes=jnp.asarray(b.codes, dtype=jnp.uint32),
-            lengths=jnp.asarray(b.lengths, dtype=jnp.int32),
-            dec_limit=jnp.asarray(b.limit_shifted[1:], dtype=jnp.uint32),
-            dec_first=jnp.asarray(b.first_code_shifted, dtype=jnp.uint32),
-            dec_rank=jnp.asarray(b.rank_offset, dtype=jnp.int32),
-            dec_syms=jnp.asarray(b.sorted_symbols, dtype=jnp.int32),
-            quant=self.quant,
-        )
+        """Device-resident tables, uploaded **once** per DomainTables.
+
+        Decoding an archive calls this per container; without memoization
+        every call re-uploads ~1.5 KiB of codebook arrays host->device and
+        defeats jit donation/caching of the table pytree.  The cache lives on
+        the (frozen) instance, so repeated decodes — and the BatchDecoder
+        plan cache — reuse the exact same device buffers.
+        """
+        cached = getattr(self, "_device_cache", None)
+        if cached is None:
+            b = self.book
+            cached = DeviceTables(
+                codes=jnp.asarray(b.codes, dtype=jnp.uint32),
+                lengths=jnp.asarray(b.lengths, dtype=jnp.int32),
+                dec_limit=jnp.asarray(b.limit_shifted[1:], dtype=jnp.uint32),
+                dec_first=jnp.asarray(b.first_code_shifted, dtype=jnp.uint32),
+                dec_rank=jnp.asarray(b.rank_offset, dtype=jnp.int32),
+                dec_syms=jnp.asarray(b.sorted_symbols, dtype=jnp.int32),
+                quant=self.quant,
+            )
+            object.__setattr__(self, "_device_cache", cached)
+        return cached
 
 
 @jax.tree_util.register_pytree_node_class

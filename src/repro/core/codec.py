@@ -108,6 +108,10 @@ def encode_device(
     )
 
 
+# Legacy per-container jit: every shape-ish quantity is a static argname, so
+# a heterogeneous archive retraces XLA per container.  Kept ONLY as the
+# baseline the batched engine is benchmarked against (bench_throughput) —
+# production callers go through decode_device -> serving.batch_decode.
 @functools.partial(
     jax.jit,
     static_argnames=("l_max", "max_symlen", "num_symbols", "num_windows",
@@ -154,23 +158,17 @@ def _decode_device(
 def decode_device(
     container: Container, tables: DomainTables, *, use_kernels: bool = False
 ) -> np.ndarray:
-    """Word-parallel decode (the paper's dual-fused GPU pipeline on XLA/TPU)."""
-    hi, lo = symlen.words_to_u32(container.words)
-    out = _decode_device(
-        jnp.asarray(hi),
-        jnp.asarray(lo),
-        jnp.asarray(container.symlen, dtype=jnp.int32),
-        tables.device_tables(),
-        l_max=container.l_max,
-        max_symlen=container.max_symlen,
-        num_symbols=container.num_symbols,
-        num_windows=container.num_windows,
-        n=container.n,
-        e=container.e,
-        signal_length=container.signal_length,
-        use_kernels=use_kernels,
-    )
-    return np.asarray(out)
+    """Word-parallel decode (the paper's dual-fused GPU pipeline on XLA/TPU).
+
+    Batch-of-one wrapper over the bucketed batch engine
+    (:mod:`repro.serving.batch_decode`): shape buckets bound recompilation,
+    tables/bases ride the persistent plan cache.  Decode many containers at
+    once with :class:`repro.serving.batch_decode.BatchDecoder` directly.
+    """
+    from repro.serving.batch_decode import default_decoder
+
+    dec = default_decoder(use_kernels=use_kernels)
+    return dec.decode([container], tables).to_host()[0]
 
 
 def roundtrip_metrics(

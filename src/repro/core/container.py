@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 import struct
 import zlib
+from typing import Tuple
 
 import numpy as np
 
@@ -54,6 +55,20 @@ class Container:
     @property
     def max_symlen(self) -> int:
         return int(self.symlen.max()) if self.symlen.size else 0
+
+    @property
+    def plan_key(self) -> Tuple[int, int, int, int]:
+        """Grouping key for batched decoding: containers sharing a
+        (domain_id, n, e, l_max) decode with the same tables, iDCT basis and
+        kernel specialization, so they can ride one fused dispatch."""
+        return (self.domain_id, self.n, self.e, self.l_max)
+
+    def words_u32(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Payload words as the (hi, lo) uint32 pair the device path consumes
+        (TPU int64 is emulated; see core.symlen)."""
+        from repro.core.symlen import words_to_u32
+
+        return words_to_u32(self.words)
 
     @property
     def compressed_bytes(self) -> int:

@@ -36,6 +36,7 @@ __all__ = [
     "pack_symlen_scan",
     "unpack_symlen_np",
     "unpack_symlen",
+    "compact_padded_scatter",
     "words_to_u32",
     "u32_to_words",
 ]
@@ -235,6 +236,38 @@ def unpack_symlen_np(
     return out
 
 
+def compact_padded_scatter(
+    padded: jnp.ndarray,  # [W, max_symlen] (any integer dtype)
+    symlen: jnp.ndarray,  # int32[W]
+    num_symbols: int,
+) -> jnp.ndarray:
+    """Compact a padded per-word symbol tile to a dense ``[num_symbols]``.
+
+    Segment-aware scatter: one exclusive prefix-sum over the symlen sidecar
+    gives every word its output offset, then all (word, slot) pairs scatter
+    simultaneously — slot ``j`` of word ``w`` lands at ``offsets[w] + j`` when
+    ``j < symlen[w]`` and is dropped otherwise.  This replaces the per-symbol
+    ``searchsorted`` gather (O(T log W) index searches) with a single
+    O(W * max_symlen) scatter, and — because the offsets are *segment* sums —
+    it is oblivious to container boundaries: concatenated multi-container
+    streams compact in the same dispatch (the paper's prefix-scan +
+    cooperative-write stage, batch-lifted).
+
+    Padding words (symlen == 0) and tail slots contribute nothing; output
+    positions beyond the last real symbol stay zero.
+    """
+    w, max_symlen = padded.shape
+    symlen = symlen.astype(jnp.int32)
+    offsets = jnp.cumsum(symlen) - symlen  # exclusive prefix sum, int32[W]
+    slot = jnp.arange(max_symlen, dtype=jnp.int32)
+    idx = offsets[:, None] + slot[None, :]  # [W, max_symlen]
+    valid = slot[None, :] < symlen[:, None]
+    # invalid lanes scatter out of bounds and are dropped
+    idx = jnp.where(valid, idx, num_symbols)
+    out = jnp.zeros((num_symbols,), dtype=padded.dtype)
+    return out.at[idx.ravel()].set(padded.ravel(), mode="drop")
+
+
 # ---------------------------------------------------------------------------
 # Word-parallel decoder — pure JAX (XLA); mirrors the Pallas kernel exactly.
 # ---------------------------------------------------------------------------
@@ -260,11 +293,11 @@ def unpack_symlen(
                    >> (L_max - len))
       4. symbol  = sorted_symbols[rank]
       5. funnel-shift (hi, lo) left by length
-    Compaction: out[t] = padded[word(t), slot(t)] with word(t) found by
-    searchsorted over the exclusive prefix sum of symlen — the XLA lift of the
-    paper's prefix-scan + warp-cooperative write stage.
+    Compaction: :func:`compact_padded_scatter` — a segment-aware scatter
+    driven by one exclusive prefix-sum of symlen (the XLA lift of the paper's
+    prefix-scan + warp-cooperative write stage); works unchanged on
+    concatenated multi-container streams.
     """
-    w = hi.shape[0]
 
     def slot_step(carry, _):
         cur_hi, cur_lo = carry
@@ -286,11 +319,4 @@ def unpack_symlen(
     (_, _), padded = jax.lax.scan(
         slot_step, (hi, lo), None, length=max_symlen
     )  # padded: uint8[max_symlen, W]
-    padded = padded.T  # [W, max_symlen]
-
-    offsets = jnp.cumsum(symlen) - symlen  # exclusive prefix sum
-    t = jnp.arange(num_symbols)
-    word_idx = jnp.searchsorted(offsets, t, side="right") - 1
-    word_idx = jnp.clip(word_idx, 0, w - 1)
-    slot_idx = t - offsets[word_idx]
-    return padded[word_idx, slot_idx]
+    return compact_padded_scatter(padded.T, symlen, num_symbols)

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["huffman_decode_padded"]
+__all__ = ["huffman_decode_padded", "huffman_decode_tile"]
 
 BLOCK_WORDS = 512
 
@@ -113,7 +113,7 @@ def _decode_kernel(
     jax.jit,
     static_argnames=("l_max", "max_symlen", "block_words", "interpret"),
 )
-def huffman_decode_padded(
+def huffman_decode_tile(
     hi: jnp.ndarray,  # uint32[W]
     lo: jnp.ndarray,  # uint32[W]
     dec_limit: jnp.ndarray,
@@ -126,10 +126,15 @@ def huffman_decode_padded(
     block_words: int = BLOCK_WORDS,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Decode every word's symbols into a padded tile [W, max_symlen] (int32).
+    """Decode every word's symbols into a slot-major tile [max_symlen, W]
+    (int32) — the kernel's native output layout, no transpose copy.
+
+    The grid iterates over word blocks with no knowledge of container
+    boundaries, so a batch of containers concatenated word-wise decodes in
+    this single pallas_call; compaction (ops.py / core.symlen) carries the
+    per-container structure via the symlen sidecar.
 
     Words are padded up to a multiple of ``block_words``; callers slice.
-    Compaction to the dense stream is performed by the caller (ops.py).
     """
     w = hi.shape[0]
     num_blocks = -(-w // block_words)
@@ -157,4 +162,9 @@ def huffman_decode_padded(
         out_shape=jax.ShapeDtypeStruct((max_symlen, wp), jnp.int32),
         interpret=interpret,
     )(hi, lo, dec_limit, dec_first, dec_rank, dec_syms)
-    return out[:, :w].T  # [W, max_symlen]
+    return out[:, :w]  # [max_symlen, W]
+
+
+def huffman_decode_padded(*args, **kwargs) -> jnp.ndarray:
+    """Word-major view of :func:`huffman_decode_tile`: [W, max_symlen]."""
+    return huffman_decode_tile(*args, **kwargs).T

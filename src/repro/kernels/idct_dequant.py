@@ -14,6 +14,11 @@ a multiple of the 8-sublane f32 tile); E and N are kept whole per block (both
 <= 128 by Table 1, i.e. a single lane tile).  VMEM per block at the default:
 in 256*128*4 = 128 KiB, basis 64 KiB, out 128 KiB — far under v5e VMEM, and
 the matmul contraction dim E is the workload's intrinsic size.
+
+The window axis carries no per-container structure, so the batched decode
+engine (serving.batch_decode) feeds this kernel the *concatenated* window
+tensor of a whole bucket — N containers, one grid sweep — passing the
+device-resident basis from its plan cache instead of re-deriving it.
 """
 from __future__ import annotations
 

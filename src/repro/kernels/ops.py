@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dct as _dct
+from repro.core import symlen as _symlen
 from repro.core.calibration import DeviceTables
 from repro.core.quantize import QuantTable
 from repro.kernels import dct_quant as _dq
@@ -42,10 +43,12 @@ def huffman_decode(
 ) -> jnp.ndarray:
     """SymLen decode + compaction: packed words -> dense uint8[num_symbols].
 
-    Kernel stage: padded per-word tile.  Compaction stage: exclusive
-    prefix-sum of symlen + gather (the paper's prefix-scan offset indexing).
+    Kernel stage: slot-major per-word tile, grid over word blocks — container
+    boundaries are invisible to the kernel, so concatenated batch streams
+    decode in one dispatch.  Compaction stage: segment-aware scatter driven
+    by one exclusive prefix-sum of the symlen sidecar (core.symlen).
     """
-    padded = _hd.huffman_decode_padded(
+    tile = _hd.huffman_decode_tile(
         hi,
         lo,
         tables.dec_limit,
@@ -55,27 +58,32 @@ def huffman_decode(
         l_max=l_max,
         max_symlen=max_symlen,
         interpret=_interp(),
-    )  # [W, max_symlen] int32
-    w = hi.shape[0]
-    offsets = jnp.cumsum(symlen) - symlen
-    t = jnp.arange(num_symbols)
-    word_idx = jnp.clip(
-        jnp.searchsorted(offsets, t, side="right") - 1, 0, w - 1
-    )
-    slot_idx = t - offsets[word_idx]
-    return padded[word_idx, slot_idx].astype(jnp.uint8)
+    )  # [max_symlen, W] int32
+    return _symlen.compact_padded_scatter(
+        tile.T, symlen, num_symbols
+    ).astype(jnp.uint8)
 
 
 def idct_dequant(
-    levels: jnp.ndarray, quant: QuantTable, *, n: int
+    levels: jnp.ndarray,
+    quant: QuantTable,
+    *,
+    n: int,
+    basis: jnp.ndarray = None,
 ) -> jnp.ndarray:
-    """Fused dequant + inverse DCT: [W, E] levels -> [W, N] samples."""
+    """Fused dequant + inverse DCT: [W, E] levels -> [W, N] samples.
+
+    ``basis`` lets callers with a persistent decode plan (serving.batch_decode)
+    pass an already-device-resident iDCT basis instead of re-deriving it here.
+    """
     e = levels.shape[-1]
+    if basis is None:
+        basis = _dct.idct_basis(n, e)
     return _idq.idct_dequant(
         levels,
         quant.zone,
         quant.scale,
-        _dct.idct_basis(n, e),
+        basis,
         quant.mu,
         quant.alpha1,
         n=n,

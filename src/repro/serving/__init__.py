@@ -1,3 +1,9 @@
+from repro.serving.batch_decode import (
+    BatchDecoder,
+    DecodedBatch,
+    DecodePlan,
+    default_decoder,
+)
 from repro.serving.kv_compression import (
     KVCompressionConfig,
     compress_kv_block,
@@ -5,6 +11,10 @@ from repro.serving.kv_compression import (
 )
 
 __all__ = [
+    "BatchDecoder",
+    "DecodedBatch",
+    "DecodePlan",
+    "default_decoder",
     "KVCompressionConfig",
     "compress_kv_block",
     "decompress_kv_block",

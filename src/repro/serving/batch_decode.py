@@ -1,0 +1,417 @@
+"""Batched bucketed decode engine: one fused dispatch for N containers.
+
+The paper's asymmetry argument is about *server-side batch* decompression
+throughput, but a per-container ``decode_device`` loop pays three taxes the
+GPU codecs it compares against (GPU-Huffman, cuSZ+) never do:
+
+  1. **recompilation** — seven container-specific static argnames mean XLA
+     retraces for nearly every container in a heterogeneous archive;
+  2. **table re-upload** — codebook + quant tables travel host->device per
+     call;
+  3. **host sync** — ``np.asarray`` blocks on every container.
+
+This module removes all three:
+
+  * **Shape bucketing.**  A batch's streams are concatenated and padded to
+    power-of-two word/window/symlen-slot counts, so jit specializations are
+    O(log sizes) instead of O(containers).  The formerly-static per-container
+    quantities (word offsets, symbol counts, signal lengths) are either
+    device arrays (the symlen sidecar drives all offsets) or host-side slice
+    metadata — never trace constants.
+  * **Concatenated-stream decode.**  SymLen words decode independently, so a
+    whole batch is one word axis: the Pallas grid (or the XLA lane loop)
+    sweeps every container in one dispatch, and compaction is a
+    segment-aware scatter over one exclusive prefix-sum of the concatenated
+    symlen sidecar (``core.symlen.compact_padded_scatter``) — container
+    boundaries fall out of the segment sums for free.
+  * **Persistent decode plans.**  Device tables and the iDCT basis upload
+    once per (domain, config) into an LRU :class:`DecodePlan` cache; decoded
+    samples stay on device inside a :class:`DecodedBatch` until an explicit
+    ``.to_host()`` drains them.
+
+``core.codec.decode_device`` is a batch-of-one wrapper over this engine, so
+every existing caller rides the same path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dct, symlen
+from repro.core.calibration import DeviceTables, DomainTables
+from repro.core.container import Container
+from repro.core.quantize import dequantize
+
+__all__ = [
+    "BatchDecoder",
+    "DecodedBatch",
+    "DecodePlan",
+    "default_decoder",
+    "bucket_cache_size",
+]
+
+_MAX_SYMLEN_CAP = 64  # a 64-bit word holds at most 64 one-bit codes
+
+TablesArg = Union[DomainTables, Mapping[int, DomainTables]]
+
+
+def _p2(x: int) -> int:
+    """Next power of two (>= 1) — the bucket rounding."""
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def _symlen_bucket(x: int) -> int:
+    """Round the slot-loop trip count up to a multiple of 8 (cap 64).
+
+    The decode cost is linear in this number, so power-of-two rounding would
+    waste up to 2x slot iterations (e.g. 33 -> 64); multiples of 8 bound the
+    waste at <8 slots while keeping specializations to at most 8 variants.
+    """
+    return min(-(-max(int(x), 1) // 8) * 8, _MAX_SYMLEN_CAP)
+
+
+# ---------------------------------------------------------------------------
+# Decode plans: per-(domain, config) device state, uploaded once.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """Device-resident decode state for one (domain, config).
+
+    Holds the Huffman/quant tables and the iDCT basis as device arrays plus
+    the statics that specialize the fused decode.  Everything here is
+    batch-size independent: one plan serves every bucket shape.
+    """
+
+    tables: DeviceTables
+    basis: jnp.ndarray  # f32[E, N]
+    n: int
+    e: int
+    l_max: int
+    domain_id: int
+    source: DomainTables  # host tables (kept so cache keys stay alive)
+
+
+class _PlanCache:
+    """Tiny LRU over DecodePlans, keyed by (tables identity, plan_key)."""
+
+    def __init__(self, maxsize: int = 32):
+        self.maxsize = maxsize
+        self._plans: "OrderedDict[Tuple[int, Tuple[int, int, int, int]], DecodePlan]" = (
+            OrderedDict()
+        )
+        self.hits = 0
+        self.misses = 0
+
+    def get(
+        self, tables: DomainTables, key: Tuple[int, int, int, int]
+    ) -> DecodePlan:
+        cache_key = (id(tables), key)
+        plan = self._plans.get(cache_key)
+        if plan is not None:
+            self._plans.move_to_end(cache_key)
+            self.hits += 1
+            return plan
+        self.misses += 1
+        domain_id, n, e, l_max = key
+        plan = DecodePlan(
+            tables=tables.device_tables(),
+            basis=dct.idct_basis(n, e),
+            n=n,
+            e=e,
+            l_max=l_max,
+            domain_id=domain_id,
+            source=tables,
+        )
+        self._plans[cache_key] = plan
+        while len(self._plans) > self.maxsize:
+            self._plans.popitem(last=False)
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+
+# ---------------------------------------------------------------------------
+# The fused bucket decode — ONE jit specialization per bucket shape.
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "l_max", "max_symlen", "num_windows", "n", "e", "use_kernels"
+    ),
+)
+def _decode_bucket(
+    hi: jnp.ndarray,  # uint32[Wp]   (concatenated + zero-padded words)
+    lo: jnp.ndarray,  # uint32[Wp]
+    sl: jnp.ndarray,  # int32[Wp]    (0 on padding words)
+    tables: DeviceTables,
+    basis: jnp.ndarray,  # f32[E, N]
+    *,
+    l_max: int,
+    max_symlen: int,
+    num_windows: int,  # bucketed (power-of-two) window count
+    n: int,
+    e: int,
+    use_kernels: bool,
+) -> jnp.ndarray:
+    """Decode one concatenated bucket to windows f32[num_windows, N].
+
+    Statics are *bucket shape only* — every per-container quantity rides in
+    the device arrays (the symlen sidecar induces all word/symbol offsets via
+    prefix sums) or stays host-side slice metadata.  Padding words carry
+    symlen == 0 and therefore scatter no symbols; padding windows decode to
+    don't-care rows that the host slicing never reads.
+    """
+    num_symbols = num_windows * e
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        syms = kops.huffman_decode(
+            hi, lo, sl, tables,
+            l_max=l_max, max_symlen=max_symlen, num_symbols=num_symbols,
+        )
+        return kops.idct_dequant(
+            syms.reshape(num_windows, e), tables.quant, n=n, basis=basis
+        )
+    syms = symlen.unpack_symlen(
+        hi, lo, sl,
+        tables.dec_limit, tables.dec_first, tables.dec_rank, tables.dec_syms,
+        l_max=l_max, max_symlen=max_symlen, num_symbols=num_symbols,
+    )
+    coeffs = dequantize(syms.reshape(num_windows, e), tables.quant)
+    return coeffs @ basis
+
+
+def bucket_cache_size() -> Optional[int]:
+    """Number of live XLA specializations of the fused bucket decode
+    (None if this JAX version doesn't expose the jit cache)."""
+    try:
+        return _decode_bucket._cache_size()
+    except AttributeError:  # pragma: no cover - older/newer jax
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Decoded batches: outputs stay on device until explicitly drained.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Slice:
+    """Where container i's samples live: rows [win_off, win_off + nw) of
+    group ``group``'s window tensor, first ``signal_length`` samples."""
+
+    group: int
+    win_off: int
+    num_windows: int
+    signal_length: int
+
+
+class DecodedBatch:
+    """Result of :meth:`BatchDecoder.decode` — device-resident windows.
+
+    ``to_host()`` performs the only host sync: one transfer per bucket, then
+    numpy slicing back to per-container signals (input order preserved).
+    """
+
+    def __init__(
+        self, groups: List[jnp.ndarray], slices: List[_Slice]
+    ):
+        self._groups = groups  # per group: f32[num_windows_p, N] on device
+        self._slices = slices
+
+    def __len__(self) -> int:
+        return len(self._slices)
+
+    @property
+    def device_windows(self) -> List[jnp.ndarray]:
+        """The raw per-bucket window tensors (device arrays)."""
+        return list(self._groups)
+
+    def device_signal(self, i: int) -> jnp.ndarray:
+        """Container i's reconstructed signal as a device array (lazy)."""
+        s = self._slices[i]
+        rows = self._groups[s.group][s.win_off:s.win_off + s.num_windows]
+        return rows.reshape(-1)[: s.signal_length]
+
+    def block_until_ready(self) -> "DecodedBatch":
+        for g in self._groups:
+            g.block_until_ready()
+        return self
+
+    def to_host(self) -> List[np.ndarray]:
+        """Drain the batch: one device->host transfer per bucket."""
+        host = [np.asarray(g) for g in self._groups]
+        out = []
+        for s in self._slices:
+            rows = host[s.group][s.win_off:s.win_off + s.num_windows]
+            out.append(rows.reshape(-1)[: s.signal_length].copy())
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BatchDecoderStats:
+    batches: int = 0
+    containers: int = 0
+    dispatches: int = 0  # fused bucket launches
+    plan_hits: int = 0
+    plan_misses: int = 0
+
+
+class BatchDecoder:
+    """Decodes many containers in a bounded number of fused dispatches.
+
+    Usage::
+
+        dec = BatchDecoder()
+        batch = dec.decode(containers, tables)   # tables: DomainTables, or
+                                                 # {domain_id: DomainTables}
+        signals = batch.to_host()                # one sync, input order
+
+    Containers are grouped by :attr:`Container.plan_key` (domain, config);
+    each group's streams are concatenated word-wise and padded to
+    power-of-two buckets, then decoded by one :func:`_decode_bucket` launch.
+    A mixed archive of hundreds of containers therefore costs
+    #distinct-plan-keys dispatches and O(log sizes) compilations, total.
+    """
+
+    def __init__(self, *, use_kernels: bool = False, plan_cache_size: int = 32):
+        self.use_kernels = use_kernels
+        self._plans = _PlanCache(plan_cache_size)
+        self.stats = BatchDecoderStats()
+
+    # -- plan management ---------------------------------------------------
+    def _tables_for(
+        self, key: Tuple[int, int, int, int], tables: TablesArg
+    ) -> DomainTables:
+        if isinstance(tables, DomainTables):
+            return tables
+        domain_id = key[0]
+        try:
+            return tables[domain_id]
+        except KeyError:
+            raise KeyError(
+                f"no DomainTables registered for domain_id={domain_id}"
+            ) from None
+
+    def plan_for(
+        self, container: Container, tables: TablesArg
+    ) -> DecodePlan:
+        key = container.plan_key
+        return self._plans.get(self._tables_for(key, tables), key)
+
+    # -- the batched decode ------------------------------------------------
+    def decode(
+        self, containers: Sequence[Container], tables: TablesArg
+    ) -> DecodedBatch:
+        """Decode a (possibly mixed-domain, mixed-length) batch of containers.
+
+        Returns a :class:`DecodedBatch`; nothing is synced to host here.
+        """
+        containers = list(containers)
+        self.stats.batches += 1
+        self.stats.containers += len(containers)
+        if not containers:
+            return DecodedBatch([], [])
+
+        if isinstance(tables, DomainTables):
+            # a single DomainTables means "decode everything with these" —
+            # only coherent for a single-domain batch (otherwise some
+            # containers would silently decode with the wrong tables, or die
+            # in an opaque shape error when configs differ)
+            domains = {c.domain_id for c in containers}
+            if len(domains) > 1:
+                raise ValueError(
+                    f"mixed-domain batch (domain_ids={sorted(domains)}) "
+                    "needs a {domain_id: DomainTables} mapping, not a "
+                    "single DomainTables"
+                )
+
+        # group by (domain, config) — each group is one fused dispatch
+        group_order: List[Tuple[int, int, int, int]] = []
+        groups: Dict[Tuple[int, int, int, int], List[int]] = {}
+        for i, c in enumerate(containers):
+            key = c.plan_key
+            if key not in groups:
+                groups[key] = []
+                group_order.append(key)
+            groups[key].append(i)
+
+        out_groups: List[jnp.ndarray] = []
+        slices: List[Optional[_Slice]] = [None] * len(containers)
+        for g, key in enumerate(group_order):
+            idxs = groups[key]
+            plan = self._plans.get(self._tables_for(key, tables), key)
+            members = [containers[i] for i in idxs]
+
+            total_words = sum(c.num_words for c in members)
+            total_windows = sum(c.num_windows for c in members)
+            group_symlen = max((c.max_symlen for c in members), default=0)
+            wp = _p2(max(total_words, 1))
+            windows_p = _p2(max(total_windows, 1))
+            symlen_p = _symlen_bucket(group_symlen)
+
+            hi = np.zeros(wp, dtype=np.uint32)
+            lo = np.zeros(wp, dtype=np.uint32)
+            sl = np.zeros(wp, dtype=np.int32)
+            woff = 0
+            win_off = 0
+            for i, c in zip(idxs, members):
+                chi, clo = c.words_u32()
+                hi[woff:woff + c.num_words] = chi
+                lo[woff:woff + c.num_words] = clo
+                sl[woff:woff + c.num_words] = c.symlen
+                woff += c.num_words
+                slices[i] = _Slice(
+                    group=g,
+                    win_off=win_off,
+                    num_windows=c.num_windows,
+                    signal_length=c.signal_length,
+                )
+                win_off += c.num_windows
+
+            windows = _decode_bucket(
+                jnp.asarray(hi),
+                jnp.asarray(lo),
+                jnp.asarray(sl),
+                plan.tables,
+                plan.basis,
+                l_max=plan.l_max,
+                max_symlen=symlen_p,
+                num_windows=windows_p,
+                n=plan.n,
+                e=plan.e,
+                use_kernels=self.use_kernels,
+            )
+            out_groups.append(windows)
+            self.stats.dispatches += 1
+
+        self.stats.plan_hits = self._plans.hits
+        self.stats.plan_misses = self._plans.misses
+        return DecodedBatch(out_groups, slices)
+
+    def decode_to_host(
+        self, containers: Sequence[Container], tables: TablesArg
+    ) -> List[np.ndarray]:
+        """Convenience: decode + drain in one call."""
+        return self.decode(containers, tables).to_host()
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default decoders (codec.decode_device rides these).
+# ---------------------------------------------------------------------------
+_DEFAULTS: Dict[bool, BatchDecoder] = {}
+
+
+def default_decoder(use_kernels: bool = False) -> BatchDecoder:
+    dec = _DEFAULTS.get(use_kernels)
+    if dec is None:
+        dec = _DEFAULTS[use_kernels] = BatchDecoder(use_kernels=use_kernels)
+    return dec

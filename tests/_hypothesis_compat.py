@@ -1,0 +1,39 @@
+"""Hypothesis import shim: property tests degrade to skips when absent.
+
+The test modules import ``given``/``settings``/``strategies`` from here
+instead of from ``hypothesis`` directly, so the suite still *collects* (and
+the non-property tests still run) on machines without hypothesis installed.
+With ``pip install -e .[test]`` the real library is used unchanged.
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: any strategy constructor
+        returns None — the decorated test is skipped before arguments are
+        ever drawn."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    strategies = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install -e .[test])"
+            )(fn)
+
+        return deco

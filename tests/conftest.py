@@ -6,3 +6,5 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# make the _hypothesis_compat shim importable regardless of rootdir layout
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,260 @@
+"""BatchDecoder: parity vs the host decoder, bucket boundaries, compile
+bounds.  (Tentpole coverage for the batched bucketed decode engine.)"""
+import numpy as np
+import pytest
+
+from repro.core import DOMAIN_DEFAULTS, calibrate, decode, encode
+from repro.core.container import Container
+from repro.core.huffman import build_codebook
+from repro.core.quantize import build_quant_table
+from repro.core.symlen import pack_symlen_np, unpack_symlen_np, PackedStream
+from repro.data import make_signal
+from repro.serving.batch_decode import (
+    BatchDecoder,
+    _p2,
+    _symlen_bucket,
+    bucket_cache_size,
+)
+
+
+@pytest.fixture(scope="module")
+def power_tables():
+    return calibrate(
+        make_signal("load_power", 65536, seed=7),
+        DOMAIN_DEFAULTS["power"],
+        domain_id=0,
+    )
+
+
+@pytest.fixture(scope="module")
+def meteo_tables():
+    return calibrate(
+        make_signal("temperature", 65536, seed=8),
+        DOMAIN_DEFAULTS["meteorological"],
+        domain_id=1,
+    )
+
+
+def _batch_parity(containers, tables_arg, per_container_tables, *,
+                  use_kernels=False, atol=1e-4):
+    dec = BatchDecoder(use_kernels=use_kernels)
+    outs = dec.decode(containers, tables_arg).to_host()
+    assert len(outs) == len(containers)
+    for c, out, tab in zip(containers, outs, per_container_tables):
+        ref = decode(c, tab)
+        assert out.shape == ref.shape
+        np.testing.assert_allclose(out, ref, atol=atol)
+    return dec
+
+
+def test_single_domain_mixed_lengths(power_tables):
+    lengths = [4096, 16384, 5000, 8191, 333]
+    cs = [
+        encode(make_signal("load_power", n, seed=i), power_tables)
+        for i, n in enumerate(lengths)
+    ]
+    dec = _batch_parity(cs, power_tables, [power_tables] * len(cs))
+    # one (domain, config) group -> one fused dispatch for the whole batch
+    assert dec.stats.dispatches == 1
+
+
+def test_mixed_domain_batch(power_tables, meteo_tables):
+    cs, per = [], []
+    for i, n in enumerate([4096, 6000, 12288, 3001]):
+        if i % 2 == 0:
+            cs.append(encode(make_signal("load_power", n, seed=i),
+                             power_tables))
+            per.append(power_tables)
+        else:
+            cs.append(encode(make_signal("temperature", n, seed=i),
+                             meteo_tables))
+            per.append(meteo_tables)
+    dec = _batch_parity(cs, {0: power_tables, 1: meteo_tables}, per)
+    assert dec.stats.dispatches == 2  # one per (domain, config) group
+
+
+def test_batch_of_one_matches_decode_device(power_tables):
+    from repro.core import decode_device
+
+    c = encode(make_signal("load_power", 10000, seed=3), power_tables)
+    np.testing.assert_allclose(
+        decode_device(c, power_tables), decode(c, power_tables), atol=1e-4
+    )
+
+
+def test_use_kernels_interpret_parity(power_tables, meteo_tables):
+    cs = [
+        encode(make_signal("load_power", 4096, seed=21), power_tables),
+        encode(make_signal("temperature", 3000, seed=22), meteo_tables),
+    ]
+    _batch_parity(
+        cs, {0: power_tables, 1: meteo_tables},
+        [power_tables, meteo_tables], use_kernels=True,
+    )
+
+
+def test_bit_exact_symbol_parity(power_tables, meteo_tables):
+    """The concatenated-stream symbol stage reproduces the host decoder's
+    symbol stream bit for bit (acceptance criterion)."""
+    import jax.numpy as jnp
+
+    from repro.core import symlen as symlib
+
+    cs = [
+        encode(make_signal("load_power", 9000, seed=31), power_tables),
+        encode(make_signal("load_power", 4096, seed=32), power_tables),
+        encode(make_signal("load_power", 777, seed=33), power_tables),
+    ]
+    # host reference: per-container serial LUT decode, concatenated
+    ref = np.concatenate([
+        unpack_symlen_np(
+            PackedStream(
+                words=c.words, symlen=c.symlen.astype(np.int32),
+                num_symbols=c.num_symbols,
+            ),
+            power_tables.book,
+        )
+        for c in cs
+    ])
+    # engine path: concatenated words + one segment-aware scatter compaction
+    hi = np.concatenate([c.words_u32()[0] for c in cs])
+    lo = np.concatenate([c.words_u32()[1] for c in cs])
+    sl = np.concatenate([c.symlen.astype(np.int32) for c in cs])
+    dev = power_tables.device_tables()
+    got = symlib.unpack_symlen(
+        jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(sl),
+        dev.dec_limit, dev.dec_first, dev.dec_rank, dev.dec_syms,
+        l_max=cs[0].l_max,
+        max_symlen=max(c.max_symlen for c in cs),
+        num_symbols=int(ref.size),
+    )
+    np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+def _uniform_code_container(num_words: int, n=8, e=8, l_max=8, seed=0):
+    """A synthetic container with EXACTLY ``num_words`` payload words.
+
+    A uniform 256-symbol histogram under l_max=8 yields a canonical code
+    where every codeword is 8 bits, so each 64-bit word holds exactly 8
+    symbols and word count is num_symbols / 8 precisely.  With n = e = 8,
+    one window is one word — letting tests hit bucket boundaries exactly.
+    """
+    rng = np.random.default_rng(seed)
+    hist = np.full(256, 10, dtype=np.int64)
+    book = build_codebook(hist, l_max=l_max)
+    assert int(book.lengths.max()) == 8 and int(book.lengths.min()) == 8
+    syms = rng.integers(0, 256, num_words * 8).astype(np.uint8)
+    stream = pack_symlen_np(syms, book)
+    assert stream.num_words == num_words
+    quant = build_quant_table(
+        rng.standard_normal((512, e)) * np.linspace(2.0, 0.2, e),
+        b1=2, b2=e, mu=50.0, alpha1=0.004, percentile=99.9,
+    )
+    from repro.core.calibration import DomainTables
+    from repro.core.config import CodecConfig
+
+    cfg = CodecConfig(n=n, e=e, b1=2, b2=e, l_max=l_max)
+    tables = DomainTables(config=cfg, quant=quant, book=book, domain_id=0)
+    num_windows = num_words  # 8 symbols per window == 8 symbols per word
+    container = Container(
+        words=stream.words,
+        symlen=stream.symlen.astype(np.uint8),
+        num_symbols=stream.num_symbols,
+        num_windows=num_windows,
+        signal_length=num_windows * n,
+        n=n, e=e, l_max=l_max, domain_id=0,
+    )
+    return container, tables
+
+
+@pytest.mark.parametrize("num_words", [255, 256, 257])
+def test_bucket_boundary_word_counts(num_words):
+    """Exactly at / one over a power-of-two word count decodes correctly
+    (the padding words must contribute zero symbols)."""
+    c, tables = _uniform_code_container(num_words, seed=num_words)
+    ref = decode(c, tables)
+    dec = BatchDecoder()
+    out = dec.decode([c], tables).to_host()[0]
+    np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+def test_bucket_boundary_batch_mix():
+    """A batch whose total word count lands one over a power of two."""
+    c1, tables = _uniform_code_container(256, seed=1)
+    c2, _ = _uniform_code_container(257, seed=2)
+    dec = BatchDecoder()
+    outs = dec.decode([c1, c2], tables).to_host()
+    np.testing.assert_allclose(outs[0], decode(c1, tables), atol=1e-4)
+    np.testing.assert_allclose(outs[1], decode(c2, tables), atol=1e-4)
+    assert dec.stats.dispatches == 1
+
+
+def test_mixed_64_container_archive_compile_bound(power_tables, meteo_tables):
+    """Acceptance: a mixed batch of 64 containers (2 domains, varied
+    lengths) decodes with a bounded number of fused dispatches and at most
+    6 fresh XLA specializations of the bucket decode."""
+    rng = np.random.default_rng(0)
+    cs = []
+    for i in range(64):
+        length = int(rng.integers(1024, 8192))
+        if i % 2 == 0:
+            cs.append(encode(
+                make_signal("load_power", length, seed=200 + i), power_tables
+            ))
+        else:
+            cs.append(encode(
+                make_signal("temperature", length, seed=200 + i), meteo_tables
+            ))
+    before = bucket_cache_size()
+    dec = BatchDecoder()
+    outs = dec.decode(cs, {0: power_tables, 1: meteo_tables}).to_host()
+    after = bucket_cache_size()
+    assert dec.stats.dispatches <= 6  # one per (domain, config) group
+    if before is not None and after is not None:
+        assert after - before <= 6, f"{after - before} fresh compilations"
+    # spot-check parity on a few members
+    for i in (0, 1, 31, 63):
+        tab = power_tables if i % 2 == 0 else meteo_tables
+        np.testing.assert_allclose(outs[i], decode(cs[i], tab), atol=1e-4)
+
+
+def test_order_preserved_and_device_access(power_tables, meteo_tables):
+    cs = [
+        encode(make_signal("temperature", 2048, seed=41), meteo_tables),
+        encode(make_signal("load_power", 4096, seed=42), power_tables),
+        encode(make_signal("temperature", 1024, seed=43), meteo_tables),
+    ]
+    dec = BatchDecoder()
+    batch = dec.decode(cs, {0: power_tables, 1: meteo_tables})
+    outs = batch.to_host()
+    assert [o.shape[0] for o in outs] == [2048, 4096, 1024]
+    # lazy device slices agree with the host drain
+    for i in range(3):
+        np.testing.assert_allclose(
+            np.asarray(batch.device_signal(i)), outs[i], atol=0
+        )
+
+
+def test_empty_batch():
+    dec = BatchDecoder()
+    batch = dec.decode([], {})
+    assert len(batch) == 0 and batch.to_host() == []
+
+
+def test_plan_cache_reuse(power_tables):
+    dec = BatchDecoder()
+    c = encode(make_signal("load_power", 2048, seed=51), power_tables)
+    dec.decode([c], power_tables).to_host()
+    dec.decode([c], power_tables).to_host()
+    assert dec.stats.plan_misses == 1
+    assert dec.stats.plan_hits >= 1
+
+
+def test_bucket_helpers():
+    assert [_p2(x) for x in (1, 2, 3, 255, 256, 257)] == [
+        1, 2, 4, 256, 256, 512
+    ]
+    assert _symlen_bucket(1) == 8
+    assert _symlen_bucket(33) == 40
+    assert _symlen_bucket(64) == 64
+    assert _symlen_bucket(100) == 64

@@ -1,7 +1,7 @@
 """End-to-end codec behaviour: roundtrips, containers, domain thresholds."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     DOMAIN_DEFAULTS,

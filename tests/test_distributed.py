@@ -43,7 +43,9 @@ def test_policy_exclude():
     s_full = full.spec_for(("hidden",), (4096,))
     s_nopod = nopod.spec_for(("hidden",), (4096,))
     assert s_full == jax.sharding.PartitionSpec(("pod", "data"))
-    assert s_nopod == jax.sharding.PartitionSpec(("data",))
+    # spec_for unwraps single-axis entries; newer JAX no longer treats
+    # P(("data",)) and P("data") as equal, so compare the canonical form
+    assert s_nopod == jax.sharding.PartitionSpec("data")
     assert nopod.fsdp_axes == ("data",)
 
 

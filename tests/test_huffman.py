@@ -1,7 +1,7 @@
 """Length-limited canonical Huffman: optimality, invariants, decode tables."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.huffman import (
     build_codebook,

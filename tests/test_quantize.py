@@ -1,7 +1,7 @@
 """3-zone hybrid quantizer invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.quantize import build_quant_table, dequantize, quantize
 
