@@ -1,6 +1,6 @@
 """Fig. 12 + Table 3: decompression throughput by PRD bin + trial stability,
-plus the batched serving measurement (containers/sec + GB/s at batch sizes
-1/8/64) that the BatchDecoder engine exists for.
+plus the batched serving measurements (containers/sec + GB/s at batch sizes
+1/8/64) that the BatchDecoder and BatchEncoder engines exist for.
 
 Measures the word-parallel decode pipeline (jitted XLA path — the TPU
 kernels run interpret=True on CPU and are validated for correctness, not
@@ -20,9 +20,23 @@ The batched section compares two ways to drain the same archive:
 
 Both are reported warm (steady state) and cold (including compile), so the
 speedup is measured, not asserted.
+
+The encode-side section mirrors it for ingest/transcoding:
+
+  * **per-signal loop** — the legacy ``_encode_stages_device`` jit: a
+    length-S serial packing scan, one XLA specialization per signal length,
+    and a blocking ``int(num_words)`` host sync per container;
+  * **BatchEncoder** — chunk-parallel packing (``pack_symlen_chunked``),
+    power-of-two shape buckets, one fused DCT+quant+pack dispatch per
+    bucket, streams drained once.  The chunk-padding CR loss (<1 word per
+    chunk, by construction) is reported alongside the speedup.
+
+``--smoke`` runs tiny-size batched encode+decode only — the CI guard that
+keeps the serving hot paths from rotting between perf PRs.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -32,11 +46,18 @@ import numpy as np
 
 from benchmarks.common import emit, eval_signal, tables_for
 from repro.core import DOMAIN_DEFAULTS, encode
-from repro.core.codec import _decode_device, decode as hdecode
+from repro.core.codec import (
+    _decode_device,
+    _encode_stages_device,
+    decode as hdecode,
+)
 from repro.core.config import CodecConfig
+from repro.core.container import Container
 from repro.core.metrics import prd
+from repro.core.symlen import u32_to_words
 from repro.data.signals import DATASETS, domain_of
 from repro.serving.batch_decode import BatchDecoder
+from repro.serving.batch_encode import DEFAULT_CHUNK_SIZE, BatchEncoder
 
 ART = "benchmarks/artifacts/throughput"
 
@@ -119,27 +140,59 @@ def _archive_tables(ds: str, domain_id: int):
     return _ARCHIVE_TABLES[key]
 
 
-def _mixed_archive(batch_size: int, seed: int = 0):
-    """A mixed-domain, mixed-length archive of ``batch_size`` containers.
+def _mixed_signals(
+    batch_size: int, seed: int = 0, log2_range=(14.0, 16.0)
+):
+    """Mixed-domain, mixed-length raw signals (+ per-signal routing).
 
     Alternates power and meteorological domains with strip lengths swept
-    over a 4x range, so the legacy path sees many distinct static shapes.
+    over a 4x range, so the legacy paths see many distinct static shapes.
     """
     rng = np.random.default_rng(seed)
     datasets = ["load_power", "temperature"]
-    containers = []
-    by_id = {}
+    signals, domain_ids, by_id = [], [], {}
     for i in range(batch_size):
         dom_id = i % len(datasets)
         tables = _archive_tables(datasets[dom_id], dom_id)
         by_id[dom_id] = tables
-        length = int(2 ** rng.uniform(14, 16))  # 16k..64k samples
-        sig = eval_signal(datasets[dom_id], length, seed=100 + i)
-        containers.append(encode(sig, tables))
+        length = int(2 ** rng.uniform(*log2_range))  # e.g. 16k..64k samples
+        signals.append(eval_signal(datasets[dom_id], length, seed=100 + i))
+        domain_ids.append(dom_id)
+    return signals, domain_ids, by_id
+
+
+def _mixed_archive(batch_size: int, seed: int = 0, log2_range=(14.0, 16.0)):
+    """A mixed-domain, mixed-length archive of ``batch_size`` containers."""
+    signals, domain_ids, by_id = _mixed_signals(batch_size, seed, log2_range)
+    containers = [
+        encode(sig, by_id[dom]) for sig, dom in zip(signals, domain_ids)
+    ]
     return containers, by_id
 
 
-def bench_batched(fast: bool = False):
+def _legacy_encode(sig, tables) -> Container:
+    """The pre-BatchEncoder per-signal path: jitted DCT+quant+serial-scan
+    packing with a blocking int(num_words) host sync per container."""
+    cfg = tables.config
+    signal = jnp.asarray(np.asarray(sig, np.float32).ravel())
+    hi, lo, sl, num_words, n_windows = _encode_stages_device(
+        signal, tables.device_tables(), cfg.n, cfg.e
+    )
+    nw = int(num_words)
+    return Container(
+        words=u32_to_words(np.asarray(hi[:nw]), np.asarray(lo[:nw])),
+        symlen=np.asarray(sl[:nw]).astype(np.uint8),
+        num_symbols=int(n_windows) * cfg.e,
+        num_windows=int(n_windows),
+        signal_length=int(signal.shape[0]),
+        n=cfg.n,
+        e=cfg.e,
+        l_max=cfg.l_max,
+        domain_id=tables.domain_id,
+    )
+
+
+def bench_batched(fast: bool = False, log2_range=(14.0, 16.0)):
     """containers/sec + aggregate GB/s at batch sizes 1/8/64.
 
     Cold numbers are only unbiased in a fresh process (run() therefore runs
@@ -150,7 +203,7 @@ def bench_batched(fast: bool = False):
     results = {}
     batch_sizes = (1, 8) if fast else (1, 8, 64)
     for bs in batch_sizes:
-        containers, by_id = _mixed_archive(bs, seed=bs)
+        containers, by_id = _mixed_archive(bs, seed=bs, log2_range=log2_range)
         out_bytes = sum(c.signal_length * 4 for c in containers)
 
         # --- legacy per-container loop --------------------------------
@@ -199,15 +252,124 @@ def bench_batched(fast: bool = False):
     return results
 
 
+def bench_encode_batched(
+    fast: bool = False,
+    log2_range=(14.0, 16.0),
+    chunk_size: int = DEFAULT_CHUNK_SIZE,
+):
+    """Encode-side mirror of bench_batched: signals/sec + GB/s ingested at
+    batch sizes 1/8/64, legacy per-signal loop vs BatchEncoder, plus the
+    chunk-padding CR loss of the parallel packer vs the sequential one.
+    """
+    results = {}
+    batch_sizes = (1, 8) if fast else (1, 8, 64)
+    for bs in batch_sizes:
+        signals, domain_ids, by_id = _mixed_signals(
+            bs, seed=1000 + bs, log2_range=log2_range
+        )
+        in_bytes = sum(s.size * 4 for s in signals)
+
+        # --- legacy per-signal loop (serial packing scan) -------------
+        t0 = time.perf_counter()
+        legacy = [
+            _legacy_encode(s, by_id[d]) for s, d in zip(signals, domain_ids)
+        ]
+        loop_cold = time.perf_counter() - t0
+        # warm = median of 3 passes (single passes are too noisy on small
+        # shared-CPU hosts to compare engines honestly)
+        warm_times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for s, d in zip(signals, domain_ids):
+                _legacy_encode(s, by_id[d])
+            warm_times.append(time.perf_counter() - t0)
+        loop_warm = float(np.median(warm_times))
+
+        # --- batched engine (chunk-parallel packing) ------------------
+        enc = BatchEncoder(chunk_size=chunk_size)
+        t0 = time.perf_counter()
+        chunked = enc.encode(signals, by_id, domain_ids=domain_ids).to_host()
+        batch_cold = time.perf_counter() - t0
+        # drain included: both engines are timed to materialized Containers
+        warm_times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            enc.encode(signals, by_id, domain_ids=domain_ids).to_host()
+            warm_times.append(time.perf_counter() - t0)
+        batch_warm = float(np.median(warm_times))
+
+        # chunk-boundary padding: CR loss vs the sequential packer
+        exact_words = sum(c.num_words for c in legacy)
+        chunk_words = sum(c.num_words for c in chunked)
+        cr_loss = (chunk_words - exact_words) / max(exact_words, 1)
+
+        rec = {
+            "batch_size": bs,
+            "in_bytes": in_bytes,
+            "loop_warm_s": loop_warm,
+            "loop_cold_s": loop_cold,
+            "batch_warm_s": batch_warm,
+            "batch_cold_s": batch_cold,
+            "loop_gbps": in_bytes / loop_warm / 1e9,
+            "batch_gbps": in_bytes / batch_warm / 1e9,
+            "loop_sps": bs / loop_warm,
+            "batch_sps": bs / batch_warm,
+            "speedup_warm": loop_warm / batch_warm,
+            "speedup_cold": loop_cold / batch_cold,
+            "dispatches": enc.stats.dispatches // enc.stats.batches,
+            "chunk_size": chunk_size,
+            "exact_words": exact_words,
+            "chunked_words": chunk_words,
+            "cr_loss": cr_loss,
+        }
+        results[bs] = rec
+        emit(
+            f"throughput/encode_batched/bs{bs}",
+            1e6 * batch_warm / bs,
+            f"sps={rec['batch_sps']:.1f} GBps={rec['batch_gbps']:.3f} "
+            f"speedup_warm={rec['speedup_warm']:.2f}x "
+            f"speedup_cold={rec['speedup_cold']:.2f}x "
+            f"dispatches={rec['dispatches']} cr_loss={100 * cr_loss:.2f}%",
+        )
+    return results
+
+
+def smoke():
+    """Tiny-size encode+decode batched smoke for CI: exercises the serving
+    hot paths (bucketing, plan caches, fused dispatches, chunked packing)
+    end to end in well under a minute, and sanity-checks the speedup/CR
+    numbers are finite."""
+    os.makedirs(ART, exist_ok=True)
+    results = {
+        "batched": bench_batched(fast=True, log2_range=(11.0, 12.0)),
+        # chunk_size=128 so even tiny smoke signals span several chunks —
+        # the multi-chunk pack lanes and the host stitch must execute
+        "encode_batched": bench_encode_batched(
+            fast=True, log2_range=(11.0, 12.0), chunk_size=128
+        ),
+    }
+    for section, recs in results.items():
+        for bs, rec in recs.items():
+            assert np.isfinite(rec["speedup_warm"]), (section, bs, rec)
+    assert any(
+        rec["chunked_words"] > rec["exact_words"]
+        for rec in results["encode_batched"].values()
+    ), "smoke never exercised multi-chunk packing"
+    with open(os.path.join(ART, "throughput_smoke.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print("smoke OK")
+
+
 def run(fast: bool = False):
     os.makedirs(ART, exist_ok=True)
     datasets = ["mitbih", "load_power", "wind_speed"] if fast else sorted(
         DATASETS
     )
     results = {}
-    # batched section first: its cold-vs-cold comparison is only fair while
-    # the process-wide bucket jit cache is empty
+    # batched sections first: their cold-vs-cold comparisons are only fair
+    # while the process-wide bucket jit caches are empty
     results["batched"] = bench_batched(fast)
+    results["encode_batched"] = bench_encode_batched(fast)
     decoder = BatchDecoder()  # shared plan + jit cache across datasets
     for ds in datasets:
         dom = domain_of(ds)
@@ -249,4 +411,15 @@ def run(fast: bool = False):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer sizes/datasets")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny CI smoke of the batched encode+decode hot paths only",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        run(fast=args.fast)

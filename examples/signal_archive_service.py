@@ -1,12 +1,16 @@
-"""The paper's deployment scenario end to end: a fleet of embedded sensors
-compresses signal strips; a central server batch-decompresses them.
+"""The paper's deployment scenario end to end: a fleet of sensors streams
+signal strips to a central server, which batch-compresses them into an
+archive and later batch-decompresses the whole archive.
 
-Simulates E encoders (sequential, table-driven — paper Fig. 5) streaming
-containers into an archive, then drains the whole archive through the
-batched bucketed decode engine (``repro.serving.BatchDecoder``): the fleet's
-containers ride ONE fused device dispatch per (domain, config) group, with
-tables and iDCT bases resident in the decoder's plan cache and outputs
-staying on device until the final ``to_host()`` drain.
+Server-side ingest rides the batched bucketed *encode* engine
+(``repro.serving.BatchEncoder``): the fleet's strips are grouped into
+power-of-two shape buckets and each bucket is ONE fused DCT+quant+pack
+dispatch, with chunk-parallel SymLen packing (decoder-compatible by
+construction — see core.symlen.pack_symlen_chunked) and encode tables
+resident in the plan cache.  The archive drain mirrors it through the
+batched decode engine (``repro.serving.BatchDecoder``): one fused dispatch
+per (domain, config) group, outputs staying on device until the final
+``to_host()`` drain.
 
   PYTHONPATH=src python examples/signal_archive_service.py [--fleet 8]
 """
@@ -15,11 +19,11 @@ import time
 
 import numpy as np
 
-from repro.core import DOMAIN_DEFAULTS, calibrate, encode
+from repro.core import DOMAIN_DEFAULTS, calibrate
 from repro.core.metrics import prd
 from repro.data import SignalPipeline, make_signal
 from repro.data.signals import domain_of
-from repro.serving import BatchDecoder
+from repro.serving import BatchDecoder, BatchEncoder
 
 
 def main():
@@ -38,23 +42,25 @@ def main():
     )
 
     # --- acquisition fleet: one pipeline per device, sharded streams ------
-    archive = []
     originals = []
-    t0 = time.time()
     for dev_id in range(args.fleet):
         pipe = SignalPipeline(
             args.dataset, strip_length=args.strip,
             host_id=dev_id, num_hosts=args.fleet,
         )
-        strip = pipe.strip(0)
-        originals.append(strip)
-        archive.append(encode(strip, tables).to_bytes())
+        originals.append(pipe.strip(0))
+
+    # --- server-side batched ingest ---------------------------------------
+    encoder = BatchEncoder()
+    t0 = time.time()
+    containers = encoder.encode(originals, tables).to_host()
+    archive = [c.to_bytes() for c in containers]
     enc_s = time.time() - t0
     raw_mb = args.fleet * args.strip * 4 / 1e6
     comp_mb = sum(len(b) for b in archive) / 1e6
-    print(f"fleet of {args.fleet} encoders: {raw_mb:.1f} MB raw -> "
+    print(f"batched ingest of {args.fleet} strips: {raw_mb:.1f} MB raw -> "
           f"{comp_mb:.2f} MB archived (CR {raw_mb/comp_mb:.1f}x) "
-          f"in {enc_s:.2f}s")
+          f"in {enc_s:.2f}s ({encoder.stats.dispatches} fused dispatch(es))")
 
     # --- server-side batch decompression ----------------------------------
     from repro.core.container import Container

@@ -25,7 +25,35 @@ from repro.core.calibration import DeviceTables, DomainTables
 from repro.core.container import Container
 from repro.core.quantize import dequantize, quantize
 
-__all__ = ["encode", "decode", "encode_device", "decode_device"]
+__all__ = [
+    "encode",
+    "decode",
+    "encode_device",
+    "decode_device",
+    "validate_container_tables",
+]
+
+
+def validate_container_tables(
+    plan_key: Tuple[int, int, int, int], tables: DomainTables
+) -> None:
+    """Reject a container/tables pairing whose configs disagree.
+
+    A container carries its encode-time (domain_id, n, e, l_max) in the
+    header; decoding it with a :class:`DomainTables` built for a different
+    config either dies in an opaque shape error or — worse — decodes
+    silently to garbage (coincident config, different book: two domains can
+    share (n, e, l_max) yet quantize/code differently, so domain_id is part
+    of the check).  Every decode path calls this before touching the stream.
+    """
+    cfg = tables.config
+    if plan_key != (tables.domain_id, cfg.n, cfg.e, cfg.l_max):
+        raise ValueError(
+            f"container plan_key (domain_id, n, e, l_max)={plan_key} does "
+            f"not match the supplied DomainTables (n={cfg.n}, "
+            f"e={cfg.e}, l_max={cfg.l_max}, domain_id={tables.domain_id}) — "
+            "decoding with mismatched tables would produce garbage"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -55,6 +83,7 @@ def encode(signal: np.ndarray, tables: DomainTables) -> Container:
 
 def decode(container: Container, tables: DomainTables) -> np.ndarray:
     """Reference decode: serial Huffman LUT + dequant + inverse DCT."""
+    validate_container_tables(container.plan_key, tables)
     stream = symlen.PackedStream(
         words=container.words,
         symlen=container.symlen.astype(np.int32),
@@ -70,6 +99,11 @@ def decode(container: Container, tables: DomainTables) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # Device (jitted) path
 # ---------------------------------------------------------------------------
+# Legacy per-signal encode jit: length-S serial packing scan, one XLA
+# specialization per signal length, and a blocking int(num_words) sync per
+# container.  Kept ONLY as the baseline the batched encode engine is
+# benchmarked against (bench_throughput) — production callers go through
+# encode_device -> serving.batch_encode.
 @functools.partial(jax.jit, static_argnames=("n", "e"))
 def _encode_stages_device(
     signal: jnp.ndarray, tables: DeviceTables, n: int, e: int
@@ -86,26 +120,22 @@ def _encode_stages_device(
 def encode_device(
     signal: jnp.ndarray, tables: DomainTables
 ) -> Container:
-    """Jitted encode (DCT + quant fully vectorized; packing via lax.scan)."""
-    cfg = tables.config
-    signal = jnp.asarray(signal, dtype=jnp.float32).ravel()
-    dev = tables.device_tables()
-    hi, lo, sl, num_words, n_windows = _encode_stages_device(
-        signal, dev, cfg.n, cfg.e
-    )
-    nw = int(num_words)
-    words = symlen.u32_to_words(np.asarray(hi[:nw]), np.asarray(lo[:nw]))
-    return Container(
-        words=words,
-        symlen=np.asarray(sl[:nw]).astype(np.uint8),
-        num_symbols=int(n_windows) * cfg.e,
-        num_windows=int(n_windows),
-        signal_length=int(signal.shape[0]),
-        n=cfg.n,
-        e=cfg.e,
-        l_max=cfg.l_max,
-        domain_id=tables.domain_id,
-    )
+    """Jitted encode, bit-identical to the host encoder.
+
+    Batch-of-one wrapper over the bucketed batch engine
+    (:mod:`repro.serving.batch_encode`) in exact packing mode: tables ride
+    the persistent plan cache, shapes ride power-of-two buckets, and the
+    only *output* sync is the batch drain (no per-container
+    ``int(num_words)`` inside the jitted hot path).  Note the engine stages
+    inputs through host buffers for bucket stacking, so a device-resident
+    input array costs one device->host transfer here — ingest inputs are
+    host arrays in the intended deployment.  Encode many signals at once —
+    and get chunk-parallel packing — with
+    :class:`repro.serving.batch_encode.BatchEncoder` directly.
+    """
+    from repro.serving.batch_encode import default_encoder
+
+    return default_encoder().encode([signal], tables).to_host()[0]
 
 
 # Legacy per-container jit: every shape-ish quantity is a static argname, so

@@ -15,9 +15,15 @@ Byte layout (little-endian):
   signal_length   u64
   max_symlen      u16
   domain_id       u16
-  reserved        u32      (checksum of symlen sidecar — fault detection)
+  reserved        u32      (checksum — fault detection; see below)
   words           num_words * 8 bytes (uint64 LE)
   symlen          num_words * 1 byte  (uint8; symlen <= 64)
+
+Checksum: version 2 writes one crc32 over words || symlen, so bit flips in
+either the payload words or the sidecar fail loudly at ``from_bytes``.
+Version-1 containers (whose crc covered only the symlen sidecar — payload
+flips decoded silently to garbage) are still readable with the legacy
+sidecar-only check.
 """
 from __future__ import annotations
 
@@ -31,7 +37,7 @@ import numpy as np
 __all__ = ["Container", "HEADER_BYTES"]
 
 _MAGIC = b"FPTC"
-_VERSION = 1
+_VERSION = 2  # v2: crc covers words + symlen; v1 (symlen only) still reads
 _HDR = struct.Struct("<4sHHHHIQIQHHI")
 HEADER_BYTES = _HDR.size
 
@@ -83,7 +89,8 @@ class Container:
         return self.original_bytes / max(self.compressed_bytes, 1)
 
     def to_bytes(self) -> bytes:
-        symlen = self.symlen.astype(np.uint8)
+        words_b = self.words.astype("<u8").tobytes()
+        symlen_b = self.symlen.astype(np.uint8).tobytes()
         hdr = _HDR.pack(
             _MAGIC,
             _VERSION,
@@ -96,9 +103,9 @@ class Container:
             self.signal_length,
             self.max_symlen,
             self.domain_id,
-            zlib.crc32(symlen.tobytes()),
+            zlib.crc32(symlen_b, zlib.crc32(words_b)),
         )
-        return hdr + self.words.astype("<u8").tobytes() + symlen.tobytes()
+        return hdr + words_b + symlen_b
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "Container":
@@ -118,14 +125,18 @@ class Container:
         ) = _HDR.unpack_from(data, 0)
         if magic != _MAGIC:
             raise ValueError("bad magic — not an FPTC container")
-        if version != _VERSION:
+        if version not in (1, _VERSION):
             raise ValueError(f"unsupported container version {version}")
         off = HEADER_BYTES
         words = np.frombuffer(data, dtype="<u8", count=num_words, offset=off)
         off += num_words * 8
         symlen = np.frombuffer(data, dtype=np.uint8, count=num_words, offset=off)
-        if zlib.crc32(symlen.tobytes()) != crc:
-            raise ValueError("symlen sidecar CRC mismatch — corrupt container")
+        if version == 1:  # legacy: crc covered only the symlen sidecar
+            expect = zlib.crc32(symlen.tobytes())
+        else:
+            expect = zlib.crc32(symlen.tobytes(), zlib.crc32(words.tobytes()))
+        if expect != crc:
+            raise ValueError("payload CRC mismatch — corrupt container")
         c = cls(
             words=words.copy(),
             symlen=symlen.copy(),

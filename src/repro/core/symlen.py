@@ -9,15 +9,27 @@ On-wire format: little-endian uint64 words.  Inside JAX we represent each
 word as a (hi, lo) pair of uint32 because TPU int64 is emulated (DESIGN.md
 §2); ``words_to_u32`` / ``u32_to_words`` convert losslessly.
 
-Three implementations:
-  * ``pack_symlen_np``    — faithful Algorithm 1, host numpy (the paper's
-                            embedded sequential encoder).
-  * ``pack_symlen_scan``  — the same algorithm as a ``lax.scan`` (jittable);
-                            one scan step per symbol, <=1 word flush per step.
-  * ``unpack_symlen``     — word-parallel decode in pure JAX: lane-per-word
-                            slot loop + prefix-sum compaction.  The Pallas
-                            kernel in ``repro.kernels.huffman_decode`` is the
-                            TPU-tiled version of the same computation.
+Four implementations:
+  * ``pack_symlen_np``      — faithful Algorithm 1, host numpy (the paper's
+                              embedded sequential encoder).
+  * ``pack_symlen_scan``    — the same algorithm as a ``lax.scan`` (jittable);
+                              one scan step per symbol, <=1 word flush per
+                              step.  A length-S serial chain: kept as the
+                              single-stream reference/baseline.
+  * ``pack_symlen_chunked`` — chunk-parallel packing: B scan-lite chunk
+                              packs under ``vmap`` (each chunk starts at a
+                              fresh word; the scan carries only the O(1)
+                              bit-offset/word-index recurrence) stitched by
+                              a prefix sum over per-chunk word counts + a
+                              gather.  Because every SymLen word is
+                              independently decodable, the output decodes
+                              bit-exactly with the unchanged decoders, at a
+                              cost of < 1 padding word per chunk of stream
+                              size.
+  * ``unpack_symlen``       — word-parallel decode in pure JAX: lane-per-word
+                              slot loop + prefix-sum compaction.  The Pallas
+                              kernel in ``repro.kernels.huffman_decode`` is
+                              the TPU-tiled version of the same computation.
 """
 from __future__ import annotations
 
@@ -34,6 +46,8 @@ __all__ = [
     "PackedStream",
     "pack_symlen_np",
     "pack_symlen_scan",
+    "pack_symlen_chunked",
+    "pack_symlen_chunked_parts",
     "unpack_symlen_np",
     "unpack_symlen",
     "compact_padded_scatter",
@@ -119,8 +133,37 @@ def pack_symlen_np(symbols: np.ndarray, book: HuffmanCodebook) -> PackedStream:
 
 
 # ---------------------------------------------------------------------------
-# Device encoder — identical semantics as a lax.scan (1 step per symbol).
+# Device encoders — scan (1 step per symbol) and chunk-parallel.
 # ---------------------------------------------------------------------------
+def _precheck_symbols(symbols, lengths, num_symbols) -> None:
+    """Host-side guard against silent corruption: every symbol that occurs in
+    the input must have a codeword (``lengths[sym] > 0``).
+
+    A zero-length symbol would emit zero bits yet still increment the word's
+    symlen count, so the stream *decodes* — to garbage.  ``pack_symlen_np``
+    raises for this; the device packers must reject the same input.  Under
+    jit/vmap the operands are tracers and the check is skipped — batched
+    callers (``repro.serving.batch_encode``) enforce it with a device-side
+    flag checked at drain time instead.
+    """
+    if any(
+        isinstance(x, jax.core.Tracer)
+        for x in (symbols, lengths, num_symbols)
+    ):
+        return
+    syms = np.asarray(symbols).ravel()[: int(num_symbols)]
+    if syms.size == 0:
+        return
+    lens = np.asarray(lengths).ravel()
+    hist = np.bincount(syms.astype(np.int64), minlength=lens.size)
+    gaps = np.nonzero((hist[: lens.size] > 0) & (lens == 0))[0]
+    if gaps.size:
+        raise ValueError(
+            f"symbol {int(gaps[0])} has no codeword (histogram gap); "
+            f"{gaps.size} distinct input symbol(s) are unencodable"
+        )
+
+
 def pack_symlen_scan(
     symbols: jnp.ndarray,
     codes: jnp.ndarray,  # uint32[256] (right-aligned codewords, len <= 32)
@@ -128,12 +171,16 @@ def pack_symlen_scan(
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (hi uint32[W], lo uint32[W], symlen int32[W], num_words int32).
 
-    Output arrays are sized at the worst case (one word per symbol); the
-    returned ``num_words`` gives the valid prefix. Codeword length is bounded
-    by 32 (L_max <= 16 in practice) so a codeword touches at most both halves
-    of the (hi, lo) pair.
+    The faithful Algorithm-1 device transcription — one scan step per
+    symbol, carrying the output buffers — kept as the single-stream
+    reference and the baseline the chunk-parallel packer is benchmarked
+    against.  Output arrays are sized at the worst case (one word per
+    symbol); the returned ``num_words`` gives the valid prefix. Codeword
+    length is bounded by 32 (L_max <= 16 in practice) so a codeword touches
+    at most both halves of the (hi, lo) pair.
     """
     n = symbols.shape[0]
+    _precheck_symbols(symbols, lengths, n)
     symbols = symbols.astype(jnp.int32)
 
     def emit(code: jnp.ndarray, clen: jnp.ndarray, bit_size: jnp.ndarray):
@@ -192,6 +239,173 @@ def pack_symlen_scan(
     out_sl = jnp.where(has_tail, out_sl.at[w].set(count), out_sl)
     num_words = w + has_tail.astype(jnp.int32)
     return out_hi, out_lo, out_sl, num_words
+
+
+def _pack_chunk(
+    symbols: jnp.ndarray,  # int32[M]
+    valid: jnp.ndarray,  # bool[M] — padding slots pack to nothing
+    codes: jnp.ndarray,  # uint32[256]
+    lengths: jnp.ndarray,  # int32[256]
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Greedy packing of one chunk, scan-lite and scatter-free (vmappable).
+
+    Returns (hi uint32[M], lo uint32[M], symlen int32[M], num_words int32);
+    the valid word prefix is ``num_words``.
+
+    The only truly sequential part of greedy packing is the (bit offset,
+    word index) recurrence — an O(1) carry per symbol — so that is *all* the
+    ``lax.scan`` computes (carrying the output buffers instead, as
+    ``pack_symlen_scan`` does, costs an O(M) select per step and is
+    quadratic).  Word materialization happens outside the scan with no
+    scatter (CPU XLA scatters serialize): symbol bits within a word occupy
+    disjoint slots, so each word is a *segment sum* of per-symbol shifted
+    codes — and since ``word_idx`` is sorted, segment sums are differences
+    of one cumulative sum at segment boundaries found by ``searchsorted``
+    (uint32 overflow wraps; differences stay exact mod 2^32).
+    """
+    m = symbols.shape[0]
+    if m == 0:
+        z = jnp.zeros((0,), jnp.uint32)
+        return z, z, jnp.zeros((0,), jnp.int32), jnp.int32(0)
+    # masked slots emit a zero-length, zero-valued code: a no-op
+    code = jnp.where(valid, codes[symbols], jnp.uint32(0))
+    clen = jnp.where(valid, lengths[symbols], 0)
+
+    def step(carry, cl):
+        bit_size, w = carry
+        flush = bit_size + cl > WORD_BITS
+        w = w + flush.astype(jnp.int32)
+        start = jnp.where(flush, 0, bit_size)
+        return (start + cl, w), (w, start)
+
+    _, (word_idx, start) = jax.lax.scan(
+        step, (jnp.int32(0), jnp.int32(0)), clen
+    )
+    # place right-aligned `code` of length clen at bit offset `start`
+    # (MSB-first) of its word: hi takes the bits when shift >= 32
+    shift = WORD_BITS - start - clen  # in [0, 64]; 64 only for clen == 0
+    add_hi = jnp.where(
+        shift >= 32, _shl32(code, shift - 32), _shr32(code, 32 - shift)
+    )
+    add_lo = jnp.where(shift >= 32, jnp.uint32(0), _shl32(code, shift))
+    zero_u = jnp.zeros((1,), jnp.uint32)
+    zero_i = jnp.zeros((1,), jnp.int32)
+    csum_hi = jnp.concatenate([zero_u, jnp.cumsum(add_hi)])
+    csum_lo = jnp.concatenate([zero_u, jnp.cumsum(add_lo)])
+    csum_sl = jnp.concatenate([zero_i, jnp.cumsum(valid.astype(jnp.int32))])
+    # word w covers symbols [right[w-1], right[w]): word indices are
+    # contiguous from 0, so one searchsorted gives both boundaries
+    w_range = jnp.arange(m, dtype=jnp.int32)
+    right = jnp.searchsorted(
+        word_idx, w_range, side="right", method="scan_unrolled"
+    ).astype(jnp.int32)
+    left = jnp.concatenate([zero_i, right[:-1]])
+    out_hi = csum_hi[right] - csum_hi[left]
+    out_lo = csum_lo[right] - csum_lo[left]
+    out_sl = csum_sl[right] - csum_sl[left]
+    num_words = jnp.max(jnp.where(valid, word_idx + 1, 0))
+    return out_hi, out_lo, out_sl, num_words
+
+
+def pack_symlen_chunked(
+    symbols: jnp.ndarray,
+    codes: jnp.ndarray,  # uint32[256]
+    lengths: jnp.ndarray,  # int32[256]
+    *,
+    chunk_size: int,
+    num_symbols=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunk-parallel SymLen packing (Algorithm 1, chunk-lifted).
+
+    Splits the stream into ``B = ceil(S / chunk_size)`` fixed-size chunks,
+    packs each greedily starting at a fresh 64-bit word — a ``vmap`` of B
+    scan-lite chunk packs instead of one serial scan of length S — then
+    stitches the per-chunk word runs into one dense stream via a prefix sum
+    over per-chunk word counts + a gather.
+
+    **Decoder compatibility.**  SymLen words are independently decodable (the
+    sidecar says how many symbols each word holds; trailing pad bits are
+    ignored), so *any* symbol→word assignment that preserves symbol order and
+    respects the 64-bit capacity is a legal stream.  Starting a fresh word at
+    each chunk boundary is therefore invisible to the unchanged serial /
+    word-parallel / Pallas decoders: the output decodes bit-exactly.  Cost:
+    each chunk boundary wastes at most the tail of one word, i.e. the stream
+    grows by < 1 word per chunk vs the sequential packer (with
+    ``chunk_size = S`` the output is bit-identical to ``pack_symlen_np``).
+
+    Args:
+      symbols: integer[S] symbol stream.
+      codes / lengths: encode tables.
+      chunk_size: symbols per chunk (static under jit).
+      num_symbols: optional true symbol count (host int or device scalar) —
+        symbols at index >= num_symbols are padding and pack to nothing.
+        Defaults to S.  This is what lets the batched encoder stack
+        shape-bucketed signals without corrupting their streams.
+
+    Returns:
+      (hi uint32[C], lo uint32[C], symlen int32[C], num_words int32) with
+      capacity ``C = B * chunk_size``; the valid prefix is ``num_words``.
+    """
+    chunk_hi, chunk_lo, chunk_sl, wpc = pack_symlen_chunked_parts(
+        symbols, codes, lengths, chunk_size=chunk_size,
+        num_symbols=num_symbols,
+    )
+    num_chunks, _ = chunk_hi.shape
+    cap = num_chunks * chunk_size
+    # stitch: chunk b's words occupy the output run [cum[b-1], cum[b]) — a
+    # pure gather (output position -> source chunk/slot), scatter-free
+    cum = jnp.cumsum(wpc)  # inclusive prefix sum, int32[B]
+    pos = jnp.arange(cap, dtype=jnp.int32)
+    src = jnp.minimum(
+        jnp.searchsorted(cum, pos, side="right"), num_chunks - 1
+    ).astype(jnp.int32)
+    slot = pos - (cum[src] - wpc[src])
+    live = pos < cum[-1]
+    return (
+        jnp.where(live, chunk_hi[src, slot], jnp.uint32(0)),
+        jnp.where(live, chunk_lo[src, slot], jnp.uint32(0)),
+        jnp.where(live, chunk_sl[src, slot], 0),
+        cum[-1],
+    )
+
+
+def pack_symlen_chunked_parts(
+    symbols: jnp.ndarray,
+    codes: jnp.ndarray,  # uint32[256]
+    lengths: jnp.ndarray,  # int32[256]
+    *,
+    chunk_size: int,
+    num_symbols=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The un-stitched form of :func:`pack_symlen_chunked`.
+
+    Returns (hi uint32[B, chunk_size], lo uint32[B, chunk_size],
+    symlen int32[B, chunk_size], words_per_chunk int32[B]): chunk b's valid
+    words are its row's first ``words_per_chunk[b]`` entries, and the dense
+    stream is their in-order concatenation.  The batched encode engine
+    consumes this directly — draining chunk runs and concatenating on the
+    host is cheaper than a device-side gather stitch, and the stream bytes
+    are identical either way.
+    """
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    s = symbols.shape[0]
+    num_chunks = max(-(-s // chunk_size), 1)
+    cap = num_chunks * chunk_size
+    if num_symbols is None:
+        num_symbols = s
+    _precheck_symbols(symbols, lengths, num_symbols)
+    symbols = symbols.astype(jnp.int32)
+    if cap != s:
+        symbols = jnp.pad(symbols, (0, cap - s))
+    nsym = jnp.asarray(num_symbols, jnp.int32)
+    valid = jnp.arange(cap, dtype=jnp.int32) < nsym
+    return jax.vmap(_pack_chunk, in_axes=(0, 0, None, None))(
+        symbols.reshape(num_chunks, chunk_size),
+        valid.reshape(num_chunks, chunk_size),
+        codes,
+        lengths,
+    )
 
 
 def _shl32(x: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:

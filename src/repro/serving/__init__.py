@@ -4,6 +4,12 @@ from repro.serving.batch_decode import (
     DecodePlan,
     default_decoder,
 )
+from repro.serving.batch_encode import (
+    BatchEncoder,
+    EncodedBatch,
+    EncodePlan,
+    default_encoder,
+)
 from repro.serving.kv_compression import (
     KVCompressionConfig,
     compress_kv_block,
@@ -15,6 +21,10 @@ __all__ = [
     "DecodedBatch",
     "DecodePlan",
     "default_decoder",
+    "BatchEncoder",
+    "EncodedBatch",
+    "EncodePlan",
+    "default_encoder",
     "KVCompressionConfig",
     "compress_kv_block",
     "decompress_kv_block",

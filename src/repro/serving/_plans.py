@@ -1,0 +1,43 @@
+"""Shared LRU plan cache for the batched serving engines.
+
+Both engines memoize device-resident per-(domain, config) state — decode
+plans (tables + iDCT basis) and encode plans (tables + gap flag) — keyed by
+(tables identity, plan_key).  Keying by ``id(tables)`` is safe only because
+each plan keeps its source :class:`DomainTables` alive (the ``source``
+field), so an id can never be reused while its cache entry exists.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Tuple, TypeVar
+
+Plan = TypeVar("Plan")
+PlanKey = Tuple[int, int, int, int]  # (domain_id, n, e, l_max)
+
+
+class PlanCache:
+    """Tiny LRU over plans built by an engine-supplied factory."""
+
+    def __init__(self, factory: Callable[..., Plan], maxsize: int = 32):
+        self._factory = factory
+        self.maxsize = maxsize
+        self._plans: "OrderedDict[Tuple[int, PlanKey], Plan]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, tables, key: PlanKey) -> Plan:
+        cache_key = (id(tables), key)
+        plan = self._plans.get(cache_key)
+        if plan is not None:
+            self._plans.move_to_end(cache_key)
+            self.hits += 1
+            return plan
+        self.misses += 1
+        plan = self._factory(tables, key)
+        self._plans[cache_key] = plan
+        while len(self._plans) > self.maxsize:
+            self._plans.popitem(last=False)
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)

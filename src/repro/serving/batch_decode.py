@@ -36,7 +36,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from collections import OrderedDict
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
@@ -45,8 +44,10 @@ import numpy as np
 
 from repro.core import dct, symlen
 from repro.core.calibration import DeviceTables, DomainTables
+from repro.core.codec import validate_container_tables
 from repro.core.container import Container
 from repro.core.quantize import dequantize
+from repro.serving._plans import PlanCache
 
 __all__ = [
     "BatchDecoder",
@@ -97,44 +98,19 @@ class DecodePlan:
     source: DomainTables  # host tables (kept so cache keys stay alive)
 
 
-class _PlanCache:
-    """Tiny LRU over DecodePlans, keyed by (tables identity, plan_key)."""
-
-    def __init__(self, maxsize: int = 32):
-        self.maxsize = maxsize
-        self._plans: "OrderedDict[Tuple[int, Tuple[int, int, int, int]], DecodePlan]" = (
-            OrderedDict()
-        )
-        self.hits = 0
-        self.misses = 0
-
-    def get(
-        self, tables: DomainTables, key: Tuple[int, int, int, int]
-    ) -> DecodePlan:
-        cache_key = (id(tables), key)
-        plan = self._plans.get(cache_key)
-        if plan is not None:
-            self._plans.move_to_end(cache_key)
-            self.hits += 1
-            return plan
-        self.misses += 1
-        domain_id, n, e, l_max = key
-        plan = DecodePlan(
-            tables=tables.device_tables(),
-            basis=dct.idct_basis(n, e),
-            n=n,
-            e=e,
-            l_max=l_max,
-            domain_id=domain_id,
-            source=tables,
-        )
-        self._plans[cache_key] = plan
-        while len(self._plans) > self.maxsize:
-            self._plans.popitem(last=False)
-        return plan
-
-    def __len__(self) -> int:
-        return len(self._plans)
+def _build_decode_plan(
+    tables: DomainTables, key: Tuple[int, int, int, int]
+) -> DecodePlan:
+    domain_id, n, e, l_max = key
+    return DecodePlan(
+        tables=tables.device_tables(),
+        basis=dct.idct_basis(n, e),
+        n=n,
+        e=e,
+        l_max=l_max,
+        domain_id=domain_id,
+        source=tables,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -284,7 +260,7 @@ class BatchDecoder:
 
     def __init__(self, *, use_kernels: bool = False, plan_cache_size: int = 32):
         self.use_kernels = use_kernels
-        self._plans = _PlanCache(plan_cache_size)
+        self._plans = PlanCache(_build_decode_plan, plan_cache_size)
         self.stats = BatchDecoderStats()
 
     # -- plan management ---------------------------------------------------
@@ -301,11 +277,17 @@ class BatchDecoder:
                 f"no DomainTables registered for domain_id={domain_id}"
             ) from None
 
+    def _plan_for_key(
+        self, key: Tuple[int, int, int, int], tables: TablesArg
+    ) -> DecodePlan:
+        tab = self._tables_for(key, tables)
+        validate_container_tables(key, tab)
+        return self._plans.get(tab, key)
+
     def plan_for(
         self, container: Container, tables: TablesArg
     ) -> DecodePlan:
-        key = container.plan_key
-        return self._plans.get(self._tables_for(key, tables), key)
+        return self._plan_for_key(container.plan_key, tables)
 
     # -- the batched decode ------------------------------------------------
     def decode(
@@ -348,7 +330,7 @@ class BatchDecoder:
         slices: List[Optional[_Slice]] = [None] * len(containers)
         for g, key in enumerate(group_order):
             idxs = groups[key]
-            plan = self._plans.get(self._tables_for(key, tables), key)
+            plan = self._plan_for_key(key, tables)
             members = [containers[i] for i in idxs]
 
             total_words = sum(c.num_words for c in members)

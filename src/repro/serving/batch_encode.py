@@ -1,0 +1,435 @@
+"""Batched bucketed encode engine: one fused dispatch per shape bucket.
+
+PR 1 made decode archive-scale; this is the encode-side mirror, built for
+server-side ingest/transcoding and re-encode benchmarks (the paper's
+*embedded* encoder stays ``core.codec.encode`` — sequential by design).
+A per-signal ``encode_device`` loop pays the same three taxes the decode
+engine removed, plus one of its own:
+
+  1. **serial packing** — ``symlen.pack_symlen_scan`` is one ``lax.scan``
+     step per symbol, a length-S dependency chain that no amount of batching
+     hides;
+  2. **recompilation** — per-signal jit retraces for every distinct length;
+  3. **table re-upload + host sync** — tables travel per call and
+     ``int(num_words)`` blocks on every container.
+
+This module removes all four:
+
+  * **Chunk-parallel packing.**  ``symlen.pack_symlen_chunked_parts`` packs
+    B fixed-size chunks concurrently (vmap of scan-lite chunk packs — the
+    scan carries only the O(1) bit-offset recurrence; words materialize as
+    cumsum differences at searchsorted segment boundaries, scatter-free).
+    The SymLen format makes the chunked output decoder-compatible bit for
+    bit (each word is independently decodable), at < 1 padding word per
+    chunk of stream growth.
+  * **Shape bucketing.**  Signals are grouped by (domain, config) and padded
+    into power-of-two window/batch buckets, so jit specializations are
+    O(log sizes).  Per-signal symbol counts ride a device array into the
+    packer's validity mask — never trace constants.
+  * **Persistent encode plans.**  Device tables upload once per
+    (domain, config) into an LRU :class:`EncodePlan` cache.
+  * **Device-resident results.**  Encoded streams stay on device inside an
+    :class:`EncodedBatch` until an explicit ``.to_host()`` drain — one sync
+    per bucket, where the zero-length-codeword flag is also checked (the
+    device-side arm of the ``pack_symlen_np`` histogram-gap guard).
+
+``core.codec.encode_device`` is a batch-of-one wrapper over this engine in
+*exact* mode (``chunk_size=None`` — one chunk per signal), which keeps its
+output bit-identical to the host encoder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dct, symlen
+from repro.core.calibration import DeviceTables, DomainTables
+from repro.core.container import Container
+from repro.core.quantize import quantize
+from repro.serving._plans import PlanCache
+from repro.serving.batch_decode import _p2
+
+__all__ = [
+    "BatchEncoder",
+    "EncodedBatch",
+    "EncodePlan",
+    "default_encoder",
+    "DEFAULT_CHUNK_SIZE",
+]
+
+TablesArg = Union[DomainTables, Mapping[int, DomainTables]]
+
+# Symbols per packing chunk.  Words per chunk ~= chunk * avg_bits / 64, so at
+# ~4 bits/symbol a 1024-symbol chunk spans ~64 words and the <1-word-per-chunk
+# padding bound costs < ~1.6% stream growth, while the packing scan shrinks
+# from length S to length 1024 with S/1024 parallel lanes per signal.
+DEFAULT_CHUNK_SIZE = 1024
+
+
+# ---------------------------------------------------------------------------
+# Encode plans: per-(domain, config) device state, uploaded once.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EncodePlan:
+    """Device-resident encode state for one (domain, config).
+
+    Everything here is batch-size independent: one plan serves every bucket
+    shape.  ``has_gaps`` records (host-side, at plan build) whether the
+    Huffman book has zero-length entries — only then does the fused encode
+    pay for the device-side unencodable-symbol check.
+    """
+
+    tables: DeviceTables
+    n: int
+    e: int
+    l_max: int
+    domain_id: int
+    has_gaps: bool
+    source: DomainTables  # host tables (kept so cache keys stay alive)
+
+
+def _build_encode_plan(
+    tables: DomainTables, key: Tuple[int, int, int, int]
+) -> EncodePlan:
+    domain_id, n, e, l_max = key
+    return EncodePlan(
+        tables=tables.device_tables(),
+        n=n,
+        e=e,
+        l_max=l_max,
+        domain_id=domain_id,
+        has_gaps=bool(np.any(np.asarray(tables.book.lengths) == 0)),
+        source=tables,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The fused bucket encode — ONE jit specialization per bucket shape.
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("n", "e", "chunk_size", "check_gaps")
+)
+def _encode_bucket(
+    signals: jnp.ndarray,  # f32[K, Wp * n] (zero-padded signals)
+    counts: jnp.ndarray,  # int32[K] true symbol count per signal
+    tables: DeviceTables,
+    *,
+    n: int,
+    e: int,
+    chunk_size: int,
+    check_gaps: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """DCT + quantize + chunk-parallel pack for one shape bucket.
+
+    Statics are *bucket shape only*; per-signal true lengths ride in
+    ``counts`` and become the packer's validity mask, so zero-padded windows
+    contribute no symbols to any stream.  Returns the per-signal *chunk
+    parts* (hi/lo/symlen ``[K, B, chunk_size]`` + words-per-chunk
+    ``[K, B]``) — the drain concatenates chunk runs on the host, which is
+    cheaper than a device-side stitch and byte-identical — plus the
+    batch-wide unencodable-symbol flag (const False unless the book has
+    histogram gaps).
+    """
+    windows = dct.window_signal(signals, n)  # [K, Wp, n]
+    coeffs = dct.forward_dct(windows, e)  # [K, Wp, e]
+    syms = quantize(coeffs, tables.quant)  # uint8[K, Wp, e]
+    k = signals.shape[0]
+    syms = syms.reshape(k, -1).astype(jnp.int32)  # [K, Sp]
+    if check_gaps:
+        valid = (
+            jnp.arange(syms.shape[1], dtype=jnp.int32)[None, :]
+            < counts[:, None]
+        )
+        bad = jnp.any((tables.lengths[syms] == 0) & valid)
+    else:
+        bad = jnp.zeros((), jnp.bool_)
+    hi, lo, sl, wpc = jax.vmap(
+        lambda s, c: symlen.pack_symlen_chunked_parts(
+            s,
+            tables.codes,
+            tables.lengths,
+            chunk_size=chunk_size,
+            num_symbols=c,
+        )
+    )(syms, counts)
+    return hi, lo, sl, wpc, bad
+
+
+# ---------------------------------------------------------------------------
+# Encoded batches: streams stay on device until explicitly drained.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Slice:
+    """Where signal i's stream lives: row ``row`` of bucket ``bucket``'s
+    output arrays, plus the host-side container header fields."""
+
+    bucket: int
+    row: int
+    num_windows: int
+    signal_length: int
+    n: int
+    e: int
+    l_max: int
+    domain_id: int
+
+
+class EncodedBatch:
+    """Result of :meth:`BatchEncoder.encode` — device-resident streams.
+
+    ``to_host()`` performs the only host sync: one drain per bucket, a
+    histogram-gap check (the device-side arm of the pack precheck), then
+    numpy slicing into per-signal :class:`Container`\\ s (input order
+    preserved).
+    """
+
+    def __init__(self, buckets: List[tuple], slices: List[_Slice]):
+        # per bucket: (plan_key, hi, lo, sl, wpc, bad) device arrays with
+        # hi/lo/sl shaped [K, num_chunks, chunk_size], wpc [K, num_chunks]
+        self._buckets = buckets
+        self._slices = slices
+
+    def __len__(self) -> int:
+        return len(self._slices)
+
+    def block_until_ready(self) -> "EncodedBatch":
+        for _, hi, lo, sl, wpc, bad in self._buckets:
+            wpc.block_until_ready()
+        return self
+
+    def to_host(self) -> List[Container]:
+        """Drain the batch into containers: one sync per bucket, then a
+        host-side stitch of each signal's chunk word-runs (chunk b of
+        signal k contributes its row's first ``wpc[k, b]`` words)."""
+        host = []
+        for key, hi, lo, sl, wpc, bad in self._buckets:
+            if bool(bad):
+                raise ValueError(
+                    f"encode batch for plan_key (domain_id, n, e, l_max)="
+                    f"{key} produced symbol(s) with no codeword (histogram "
+                    "gap in the Huffman book) — the stream would decode to "
+                    "garbage; recalibrate with Laplace smoothing or a "
+                    "complete codebook"
+                )
+            host.append(
+                (np.asarray(hi), np.asarray(lo), np.asarray(sl),
+                 np.asarray(wpc))
+            )
+        out = []
+        for s in self._slices:
+            hi, lo, sl, wpc = host[s.bucket]
+            runs = [
+                (hi[s.row, b, :w], lo[s.row, b, :w], sl[s.row, b, :w])
+                for b, w in enumerate(wpc[s.row])
+                if w
+            ]
+            if runs:
+                hi_cat = np.concatenate([r[0] for r in runs])
+                lo_cat = np.concatenate([r[1] for r in runs])
+                sl_cat = np.concatenate([r[2] for r in runs])
+            else:
+                hi_cat = lo_cat = np.empty(0, np.uint32)
+                sl_cat = np.empty(0, np.int32)
+            out.append(
+                Container(
+                    words=symlen.u32_to_words(hi_cat, lo_cat),
+                    symlen=sl_cat.astype(np.uint8),
+                    num_symbols=s.num_windows * s.e,
+                    num_windows=s.num_windows,
+                    signal_length=s.signal_length,
+                    n=s.n,
+                    e=s.e,
+                    l_max=s.l_max,
+                    domain_id=s.domain_id,
+                )
+            )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BatchEncoderStats:
+    batches: int = 0
+    signals: int = 0
+    dispatches: int = 0  # fused bucket launches
+    plan_hits: int = 0
+    plan_misses: int = 0
+
+
+class BatchEncoder:
+    """Encodes many signals in a bounded number of fused dispatches.
+
+    Usage::
+
+        enc = BatchEncoder()                      # chunked (fast) packing
+        batch = enc.encode(signals, tables)       # tables: DomainTables, or
+                                                  # {domain_id: DomainTables}
+                                                  # + domain_ids=[...]
+        containers = batch.to_host()              # one sync per bucket
+
+    Signals are grouped by (domain, config) and sub-bucketed by power-of-two
+    window and batch counts; each bucket is one :func:`_encode_bucket`
+    launch.  ``chunk_size=None`` selects *exact* mode (one packing chunk per
+    signal): bit-identical output to ``core.codec.encode`` at the price of a
+    length-S packing scan — that is what ``encode_device`` uses.
+    """
+
+    def __init__(
+        self,
+        *,
+        chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
+        plan_cache_size: int = 32,
+    ):
+        if chunk_size is not None and chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+        self.chunk_size = chunk_size
+        self._plans = PlanCache(_build_encode_plan, plan_cache_size)
+        self.stats = BatchEncoderStats()
+
+    # -- plan management ---------------------------------------------------
+    def _tables_for(self, domain_id: int, tables: TablesArg) -> DomainTables:
+        if isinstance(tables, DomainTables):
+            return tables
+        try:
+            return tables[domain_id]
+        except KeyError:
+            raise KeyError(
+                f"no DomainTables registered for domain_id={domain_id}"
+            ) from None
+
+    def plan_for(self, tables: DomainTables) -> EncodePlan:
+        cfg = tables.config
+        key = (tables.domain_id, cfg.n, cfg.e, cfg.l_max)
+        return self._plans.get(tables, key)
+
+    # -- the batched encode ------------------------------------------------
+    def encode(
+        self,
+        signals: Sequence[np.ndarray],
+        tables: TablesArg,
+        *,
+        domain_ids: Optional[Sequence[int]] = None,
+    ) -> EncodedBatch:
+        """Encode a (possibly mixed-domain, mixed-length) batch of signals.
+
+        ``domain_ids`` assigns each signal its domain when ``tables`` is a
+        mapping; with a single :class:`DomainTables` every signal uses it.
+        Returns an :class:`EncodedBatch`; nothing is synced to host here.
+        """
+        signals = [np.asarray(s, dtype=np.float32).ravel() for s in signals]
+        self.stats.batches += 1
+        self.stats.signals += len(signals)
+        if not signals:
+            return EncodedBatch([], [])
+        if domain_ids is None:
+            if not isinstance(tables, DomainTables):
+                raise ValueError(
+                    "domain_ids is required when tables is a "
+                    "{domain_id: DomainTables} mapping"
+                )
+            domain_ids = [tables.domain_id] * len(signals)
+        if len(domain_ids) != len(signals):
+            raise ValueError(
+                f"domain_ids has {len(domain_ids)} entries for "
+                f"{len(signals)} signals"
+            )
+
+        # group by ((domain, config), windows bucket) — one fused dispatch
+        # per group; batch dim padded to a power of two below
+        bucket_order: List[Tuple[Tuple[int, int, int, int], int]] = []
+        buckets: Dict[Tuple[Tuple[int, int, int, int], int], List[int]] = {}
+        per_tab: Dict[Tuple[Tuple[int, int, int, int], int], DomainTables] = {}
+        for i, (sig, dom) in enumerate(zip(signals, domain_ids)):
+            tab = self._tables_for(dom, tables)
+            cfg = tab.config
+            num_windows = -(-sig.shape[0] // cfg.n)
+            key = (
+                (dom, cfg.n, cfg.e, cfg.l_max),
+                _p2(max(num_windows, 1)),
+            )
+            if key not in buckets:
+                buckets[key] = []
+                bucket_order.append(key)
+                per_tab[key] = tab
+            buckets[key].append(i)
+
+        out_buckets: List[tuple] = []
+        slices: List[Optional[_Slice]] = [None] * len(signals)
+        for b, key in enumerate(bucket_order):
+            (plan_key, wp), idxs = key, buckets[key]
+            plan = self._plans.get(per_tab[key], plan_key)
+            n, e = plan.n, plan.e
+            kp = _p2(len(idxs))  # pad batch dim; pad rows pack 0 symbols
+            x = np.zeros((kp, wp * n), dtype=np.float32)
+            counts = np.zeros((kp,), dtype=np.int32)
+            for row, i in enumerate(idxs):
+                sig = signals[i]
+                num_windows = -(-sig.shape[0] // n)
+                x[row, : sig.shape[0]] = sig
+                counts[row] = num_windows * e
+                slices[i] = _Slice(
+                    bucket=b,
+                    row=row,
+                    num_windows=num_windows,
+                    signal_length=int(sig.shape[0]),
+                    n=n,
+                    e=e,
+                    l_max=plan.l_max,
+                    domain_id=plan.domain_id,
+                )
+            sp = wp * e
+            chunk = sp if self.chunk_size is None else min(self.chunk_size, sp)
+            hi, lo, sl, nw, bad = _encode_bucket(
+                jnp.asarray(x),
+                jnp.asarray(counts),
+                plan.tables,
+                n=n,
+                e=e,
+                chunk_size=chunk,
+                check_gaps=plan.has_gaps,
+            )
+            out_buckets.append((plan_key, hi, lo, sl, nw, bad))
+            self.stats.dispatches += 1
+
+        self.stats.plan_hits = self._plans.hits
+        self.stats.plan_misses = self._plans.misses
+        return EncodedBatch(out_buckets, slices)
+
+    def encode_to_host(
+        self,
+        signals: Sequence[np.ndarray],
+        tables: TablesArg,
+        *,
+        domain_ids: Optional[Sequence[int]] = None,
+    ) -> List[Container]:
+        """Convenience: encode + drain in one call."""
+        return self.encode(signals, tables, domain_ids=domain_ids).to_host()
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default encoders (codec.encode_device rides the exact one).
+# ---------------------------------------------------------------------------
+_DEFAULTS: Dict[Optional[int], BatchEncoder] = {}
+
+
+def default_encoder(chunk_size: Optional[int] = None) -> BatchEncoder:
+    """Shared encoder per chunk size.  ``None`` (the default) is *exact*
+    mode — bit-identical to the host encoder — which is what
+    ``core.codec.encode_device`` rides; pass ``DEFAULT_CHUNK_SIZE`` (or any
+    chunk) for the fast chunk-parallel packer.
+
+    Being process-global, its plan cache keeps up to ``plan_cache_size``
+    (32) recently-used DomainTables — and their device buffers — alive for
+    the process lifetime (same trade as ``batch_decode.default_decoder``);
+    callers churning many ephemeral table sets should hold their own
+    :class:`BatchEncoder` and drop it when done."""
+    enc = _DEFAULTS.get(chunk_size)
+    if enc is None:
+        enc = _DEFAULTS[chunk_size] = BatchEncoder(chunk_size=chunk_size)
+    return enc

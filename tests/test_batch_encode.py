@@ -1,0 +1,179 @@
+"""BatchEncoder: parity vs the host encoder, chunk-padding bounds, plan
+cache, routing, and the loud-failure paths.  (Tentpole coverage for the
+batched bucketed encode engine.)"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DOMAIN_DEFAULTS,
+    calibrate,
+    decode,
+    encode,
+    encode_device,
+)
+from repro.core.calibration import DomainTables
+from repro.core.config import CodecConfig
+from repro.core.huffman import build_codebook
+from repro.core.quantize import build_quant_table
+from repro.data import make_signal
+from repro.serving.batch_decode import BatchDecoder
+from repro.serving.batch_encode import DEFAULT_CHUNK_SIZE, BatchEncoder
+
+
+@pytest.fixture(scope="module")
+def power_tables():
+    return calibrate(
+        make_signal("load_power", 65536, seed=7),
+        DOMAIN_DEFAULTS["power"],
+        domain_id=0,
+    )
+
+
+@pytest.fixture(scope="module")
+def meteo_tables():
+    return calibrate(
+        make_signal("temperature", 65536, seed=8),
+        DOMAIN_DEFAULTS["meteorological"],
+        domain_id=1,
+    )
+
+
+def test_exact_mode_bit_identical_to_host(power_tables):
+    """chunk_size=None packs each signal as one chunk: the engine must
+    reproduce the host encoder's containers bit for bit."""
+    lengths = [4096, 16384, 5000, 8191, 333]
+    sigs = [make_signal("load_power", n, seed=i) for i, n in enumerate(lengths)]
+    enc = BatchEncoder(chunk_size=None)
+    cs = enc.encode(sigs, power_tables).to_host()
+    assert len(cs) == len(sigs)
+    for sig, c in zip(sigs, cs):
+        ref = encode(sig, power_tables)
+        np.testing.assert_array_equal(c.words, ref.words)
+        np.testing.assert_array_equal(c.symlen, ref.symlen)
+        assert c.num_symbols == ref.num_symbols
+        assert c.num_windows == ref.num_windows
+        assert c.signal_length == ref.signal_length
+        assert c.plan_key == ref.plan_key
+
+
+def test_chunked_mode_roundtrips_with_bounded_padding(power_tables):
+    """Chunk-parallel containers decode (host decoder, unchanged) to exactly
+    what the host-encoded containers decode to, and cost < 1 extra word per
+    chunk."""
+    lengths = [16384, 65536, 5000]
+    sigs = [
+        make_signal("load_power", n, seed=10 + i)
+        for i, n in enumerate(lengths)
+    ]
+    enc = BatchEncoder()  # DEFAULT_CHUNK_SIZE
+    cs = enc.encode(sigs, power_tables).to_host()
+    for sig, c in zip(sigs, cs):
+        ref = encode(sig, power_tables)
+        np.testing.assert_allclose(
+            decode(c, power_tables), decode(ref, power_tables), atol=0
+        )
+        num_chunks = -(-ref.num_symbols // DEFAULT_CHUNK_SIZE)
+        assert c.num_words - ref.num_words < num_chunks
+        assert c.num_symbols == ref.num_symbols
+
+
+def test_chunked_to_batch_decoder_roundtrip(power_tables, meteo_tables):
+    """The full serving loop: BatchEncoder -> containers -> BatchDecoder,
+    mixed domains and lengths, order preserved."""
+    sigs, doms = [], []
+    for i, n in enumerate([4096, 6000, 12288, 3001]):
+        if i % 2 == 0:
+            sigs.append(make_signal("load_power", n, seed=i))
+            doms.append(0)
+        else:
+            sigs.append(make_signal("temperature", n, seed=i))
+            doms.append(1)
+    tables = {0: power_tables, 1: meteo_tables}
+    enc = BatchEncoder()
+    cs = enc.encode(sigs, tables, domain_ids=doms).to_host()
+    outs = BatchDecoder().decode(cs, tables).to_host()
+    for sig, out, dom in zip(sigs, outs, doms):
+        tab = tables[dom]
+        ref = decode(encode(sig, tab), tab)
+        assert out.shape == sig.shape
+        np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+def test_encode_device_is_batch_of_one(power_tables):
+    sig = make_signal("load_power", 10000, seed=3)
+    c = encode_device(sig, power_tables)
+    ref = encode(sig, power_tables)
+    np.testing.assert_array_equal(c.words, ref.words)
+    np.testing.assert_array_equal(c.symlen, ref.symlen)
+
+
+def test_bucketing_bounds_dispatches(power_tables):
+    """Same (domain, config) and same window bucket -> one fused dispatch,
+    regardless of exact lengths."""
+    sigs = [
+        make_signal("load_power", n, seed=20 + i)
+        for i, n in enumerate([30000, 32768, 28111, 20000])
+    ]  # all land in the 1024-window bucket (n=32)
+    enc = BatchEncoder()
+    enc.encode(sigs, power_tables).to_host()
+    assert enc.stats.dispatches == 1
+
+
+def test_plan_cache_reuse(power_tables):
+    enc = BatchEncoder()
+    sig = make_signal("load_power", 2048, seed=51)
+    enc.encode([sig], power_tables).to_host()
+    enc.encode([sig], power_tables).to_host()
+    assert enc.stats.plan_misses == 1
+    assert enc.stats.plan_hits >= 1
+
+
+def test_empty_batch(power_tables):
+    enc = BatchEncoder()
+    batch = enc.encode([], power_tables)
+    assert len(batch) == 0 and batch.to_host() == []
+
+
+def test_mapping_requires_domain_ids(power_tables):
+    with pytest.raises(ValueError, match="domain_ids"):
+        BatchEncoder().encode(
+            [make_signal("load_power", 512, seed=0)], {0: power_tables}
+        )
+    with pytest.raises(KeyError, match="domain_id=9"):
+        BatchEncoder().encode(
+            [make_signal("load_power", 512, seed=0)],
+            {0: power_tables},
+            domain_ids=[9],
+        )
+
+
+def _gap_tables(n=8, e=8, l_max=8):
+    """Tables whose Huffman book covers ONLY the zero bin (128): any signal
+    that quantizes off-zero hits a histogram gap."""
+    hist = np.zeros(256, dtype=np.int64)
+    hist[128] = 100
+    book = build_codebook(hist, l_max=l_max)
+    rng = np.random.default_rng(0)
+    quant = build_quant_table(
+        rng.standard_normal((64, e)), b1=2, b2=e, mu=50.0, alpha1=0.004,
+        percentile=99.9,
+    )
+    cfg = CodecConfig(n=n, e=e, b1=2, b2=e, l_max=l_max)
+    return DomainTables(config=cfg, quant=quant, book=book, domain_id=0)
+
+
+def test_drain_raises_on_histogram_gap():
+    """Satellite bugfix parity, batched arm: a symbol with no codeword must
+    fail loudly at drain instead of emitting a garbage stream (the host
+    encoder raises the same way inside pack_symlen_np)."""
+    tables = _gap_tables()
+    sig = np.sin(np.linspace(0, 30, 512)).astype(np.float32) * 5
+    with pytest.raises(ValueError, match="no codeword"):
+        encode(sig, tables)  # host oracle rejects
+    enc = BatchEncoder()
+    with pytest.raises(ValueError, match="histogram gap"):
+        enc.encode([sig], tables).to_host()
+    # and a gap book with in-coverage data still encodes
+    zeros = np.zeros(512, np.float32)
+    cs = BatchEncoder().encode([zeros], tables).to_host()
+    np.testing.assert_allclose(decode(cs[0], tables), zeros, atol=1e-6)

@@ -60,6 +60,72 @@ def test_container_detects_corruption(power_tables):
         Container.from_bytes(bytes(blob))
 
 
+def test_container_detects_payload_word_corruption(power_tables):
+    """Satellite bugfix: v1's crc covered only the symlen sidecar, so bit
+    flips in the words payload decoded silently to garbage.  v2's crc covers
+    words + sidecar."""
+    from repro.core.container import HEADER_BYTES
+
+    sig = make_signal("load_power", 4096, seed=4)
+    blob = bytearray(encode(sig, power_tables).to_bytes())
+    blob[HEADER_BYTES + 3] ^= 0x40  # flip a bit inside the first word
+    with pytest.raises(ValueError, match="CRC"):
+        Container.from_bytes(bytes(blob))
+
+
+def test_container_reads_v1_blobs(power_tables):
+    """Version-1 containers (sidecar-only crc) must stay readable."""
+    import struct
+    import zlib
+
+    from repro.core.container import _HDR, HEADER_BYTES
+
+    c = encode(make_signal("load_power", 4096, seed=5), power_tables)
+    blob = bytearray(c.to_bytes())
+    (magic, version, *rest) = _HDR.unpack_from(bytes(blob), 0)
+    assert version == 2
+    # rewrite the header as v1 with the legacy sidecar-only checksum
+    v1_crc = zlib.crc32(c.symlen.astype(np.uint8).tobytes())
+    blob[:HEADER_BYTES] = _HDR.pack(magic, 1, *rest[:-1], v1_crc)
+    c1 = Container.from_bytes(bytes(blob))
+    np.testing.assert_array_equal(c1.words, c.words)
+    np.testing.assert_array_equal(c1.symlen, c.symlen)
+    # unknown versions still fail loudly
+    blob[:HEADER_BYTES] = _HDR.pack(magic, 3, *rest[:-1], v1_crc)
+    with pytest.raises(ValueError, match="version"):
+        Container.from_bytes(bytes(blob))
+
+
+def test_decode_rejects_mismatched_tables(power_tables):
+    """Satellite bugfix: decoding a container with tables built for a
+    different config used to produce silent garbage (or an opaque shape
+    error).  Host, device, and batched decode all fail loudly now."""
+    from repro.core import decode_device
+    from repro.serving import BatchDecoder
+
+    sig = make_signal("load_power", 4096, seed=6)
+    c = encode(sig, power_tables)
+    other_cfg = CodecConfig(n=32, e=4, b1=2, b2=4)
+    other = calibrate(make_signal("load_power", 32768, seed=7), other_cfg)
+    with pytest.raises(ValueError, match="plan_key"):
+        decode(c, other)
+    with pytest.raises(ValueError, match="plan_key"):
+        decode_device(c, other)
+    with pytest.raises(ValueError, match="plan_key"):
+        BatchDecoder().decode([c], other)
+    # coincident (n, e, l_max) but a different domain: different book/quant,
+    # so this must ALSO fail loudly instead of decoding to garbage
+    relabeled = calibrate(
+        make_signal("temperature", 32768, seed=8),
+        power_tables.config,
+        domain_id=7,
+    )
+    with pytest.raises(ValueError, match="domain_id"):
+        decode(c, relabeled)
+    with pytest.raises(ValueError, match="domain_id"):
+        BatchDecoder().decode([c], relabeled)
+
+
 @pytest.mark.parametrize("dataset", sorted(DATASETS))
 def test_domain_prd_thresholds(dataset):
     """Every dataset reconstructs within its domain's PRD threshold

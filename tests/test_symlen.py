@@ -7,6 +7,7 @@ from _hypothesis_compat import given, settings, strategies as st
 from repro.core.huffman import build_codebook
 from repro.core.symlen import (
     PackedStream,
+    pack_symlen_chunked,
     pack_symlen_np,
     pack_symlen_scan,
     u32_to_words,
@@ -108,6 +109,108 @@ def test_codewords_never_split():
     assert pos == syms.size
 
 
+def _enc_args(book):
+    return (
+        jnp.asarray(book.codes, jnp.uint32),
+        jnp.asarray(book.lengths, jnp.int32),
+    )
+
+
+@pytest.mark.parametrize("chunk_size", [7, 64, 333, 1024, 20_000])
+def test_chunked_decodes_bit_exactly_with_bounded_padding(chunk_size):
+    """Tentpole acceptance: the chunk-parallel packer's output decodes
+    bit-exactly on the UNCHANGED serial decoder, and chunk-boundary padding
+    costs < 1 word per chunk vs the sequential packer."""
+    book = _book(10)
+    rng = np.random.default_rng(11)
+    syms = rng.integers(0, 256, 10_000).astype(np.uint8)
+    ref = pack_symlen_np(syms, book)
+    hi, lo, sl, nw = pack_symlen_chunked(
+        jnp.asarray(syms), *_enc_args(book), chunk_size=chunk_size
+    )
+    nw = int(nw)
+    words = u32_to_words(np.asarray(hi[:nw]), np.asarray(lo[:nw]))
+    stream = PackedStream(
+        words=words, symlen=np.asarray(sl[:nw]), num_symbols=syms.size
+    )
+    np.testing.assert_array_equal(unpack_symlen_np(stream, book), syms)
+    num_chunks = -(-syms.size // chunk_size)
+    assert nw - ref.num_words < num_chunks  # < 1 padding word per chunk
+    # per-word validity: symlen counts must sum to the symbol count and no
+    # word may exceed 64 bits
+    assert int(np.asarray(sl[:nw]).sum()) == syms.size
+    pos = 0
+    for s in np.asarray(sl[:nw]):
+        assert sum(int(book.lengths[x]) for x in syms[pos:pos + s]) <= 64
+        pos += s
+
+
+def test_chunked_single_chunk_bit_identical_to_alg1():
+    book = _book(12)
+    rng = np.random.default_rng(13)
+    syms = rng.integers(0, 256, 3_000).astype(np.uint8)
+    ref = pack_symlen_np(syms, book)
+    hi, lo, sl, nw = pack_symlen_chunked(
+        jnp.asarray(syms), *_enc_args(book), chunk_size=syms.size
+    )
+    nw = int(nw)
+    assert nw == ref.num_words
+    words = u32_to_words(np.asarray(hi[:nw]), np.asarray(lo[:nw]))
+    np.testing.assert_array_equal(words, ref.words)
+    np.testing.assert_array_equal(np.asarray(sl[:nw]), ref.symlen)
+
+
+def test_chunked_num_symbols_mask_ignores_padding():
+    """Symbols past num_symbols are stacking padding: they must pack to
+    nothing, so bucketed batch encoding can't corrupt streams."""
+    book = _book(14)
+    rng = np.random.default_rng(15)
+    syms = rng.integers(0, 256, 2_000).astype(np.uint8)
+    padded = np.concatenate([syms, rng.integers(0, 256, 741).astype(np.uint8)])
+    hi, lo, sl, nw = pack_symlen_chunked(
+        jnp.asarray(padded), *_enc_args(book), chunk_size=256,
+        num_symbols=syms.size,
+    )
+    hi2, lo2, sl2, nw2 = pack_symlen_chunked(
+        jnp.asarray(syms), *_enc_args(book), chunk_size=256
+    )
+    nw = int(nw)
+    assert nw == int(nw2)
+    np.testing.assert_array_equal(np.asarray(hi[:nw]), np.asarray(hi2[:nw]))
+    np.testing.assert_array_equal(np.asarray(lo[:nw]), np.asarray(lo2[:nw]))
+    np.testing.assert_array_equal(np.asarray(sl[:nw]), np.asarray(sl2[:nw]))
+
+
+def test_all_pack_paths_reject_histogram_gap():
+    """Satellite bugfix: a symbol with lengths[sym] == 0 used to pack to
+    zero bits on the device paths while still counting in symlen — silent
+    garbage.  All three packers must now reject the same input."""
+    freqs = np.random.default_rng(16).integers(1, 1000, 256).astype(np.int64)
+    freqs[17] = 0  # histogram gap
+    book = build_codebook(freqs, l_max=12)
+    assert int(book.lengths[17]) == 0
+    bad = np.array([1, 17, 3], dtype=np.uint8)
+    with pytest.raises(ValueError, match="no codeword"):
+        pack_symlen_np(bad, book)
+    with pytest.raises(ValueError, match="no codeword"):
+        pack_symlen_scan(jnp.asarray(bad), *_enc_args(book))
+    with pytest.raises(ValueError, match="no codeword"):
+        pack_symlen_chunked(jnp.asarray(bad), *_enc_args(book), chunk_size=2)
+    # the same symbols under a gap-free book pack fine on every path
+    ok_book = _book(16)
+    pack_symlen_np(bad, ok_book)
+    pack_symlen_scan(jnp.asarray(bad), *_enc_args(ok_book))
+    pack_symlen_chunked(jnp.asarray(bad), *_enc_args(ok_book), chunk_size=2)
+
+
+def test_chunked_rejects_bad_chunk_size():
+    book = _book(17)
+    with pytest.raises(ValueError, match="chunk_size"):
+        pack_symlen_chunked(
+            jnp.zeros(8, jnp.uint8), *_enc_args(book), chunk_size=0
+        )
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 2**32 - 1), st.integers(1, 2000))
 def test_property_roundtrip(seed, n):
@@ -129,3 +232,19 @@ def test_property_roundtrip(seed, n):
         num_symbols=stream.num_symbols, **_decode_args(book),
     )
     np.testing.assert_array_equal(np.asarray(out2), syms)
+    # chunk-parallel packer stays decoder-compatible at an arbitrary chunk
+    chunk = 1 + seed % 257
+    chi, clo, csl, cnw = pack_symlen_chunked(
+        jnp.asarray(syms),
+        jnp.asarray(book.codes, jnp.uint32),
+        jnp.asarray(book.lengths, jnp.int32),
+        chunk_size=chunk,
+    )
+    cnw = int(cnw)
+    cstream = PackedStream(
+        words=u32_to_words(np.asarray(chi[:cnw]), np.asarray(clo[:cnw])),
+        symlen=np.asarray(csl[:cnw]),
+        num_symbols=syms.size,
+    )
+    np.testing.assert_array_equal(unpack_symlen_np(cstream, book), syms)
+    assert cnw - stream.num_words < -(-syms.size // chunk)
