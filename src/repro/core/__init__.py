@@ -2,7 +2,13 @@
 from repro.core.config import CodecConfig, DOMAIN_DEFAULTS
 from repro.core.container import Container
 from repro.core.calibration import DomainTables, DeviceTables, calibrate
-from repro.core.codec import decode, decode_device, encode, encode_device
+from repro.core.codec import (
+    decode,
+    decode_device,
+    encode,
+    encode_device,
+    transcode,
+)
 from repro.core.metrics import compression_ratio, prd
 
 __all__ = [
@@ -16,6 +22,7 @@ __all__ = [
     "decode",
     "encode_device",
     "decode_device",
+    "transcode",
     "compression_ratio",
     "prd",
 ]

@@ -30,6 +30,7 @@ __all__ = [
     "decode",
     "encode_device",
     "decode_device",
+    "transcode",
     "validate_container_tables",
 ]
 
@@ -199,6 +200,28 @@ def decode_device(
 
     dec = default_decoder(use_kernels=use_kernels)
     return dec.decode([container], tables).to_host()[0]
+
+
+def transcode(
+    container: Container,
+    src_tables: DomainTables,
+    dst_tables: DomainTables,
+) -> Container:
+    """Re-encode one container under a new (domain, config), device-resident.
+
+    Container-of-one wrapper over the transcode pipeline
+    (:mod:`repro.serving.transcode`) in exact packing mode: decode and
+    re-encode compose on device with no host round trip in between, and the
+    output is byte-identical to ``decode_device``-to-host followed by
+    ``encode_device`` under ``dst_tables``.  Transcode many containers at
+    once — and get chunk-parallel packing — with
+    :class:`repro.serving.transcode.Transcoder` directly.
+    """
+    from repro.serving.transcode import default_transcoder
+
+    return default_transcoder().transcode_to_host(
+        [container], src_tables, dst_tables
+    )[0]
 
 
 def roundtrip_metrics(

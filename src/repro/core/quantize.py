@@ -178,20 +178,16 @@ def dequantize(levels: jnp.ndarray, table: QuantTable) -> jnp.ndarray:
 def quant_grid(table: QuantTable) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All 256 reconstruction values per bin: [E, 256] (for LUT-style dequant).
 
-    This is the dequantization table materialized — used by the fused Pallas
-    decode kernel as a gather-free one-hot matmul operand.
+    This is the dequantization table materialized — usable as a gather-free
+    one-hot matmul operand by fused decode kernels, and by tests bounding
+    the per-cell quantization error.  ``dequantize`` broadcasts over
+    leading axes with the bin axis last, so the whole grid is one call on a
+    [256, E] level matrix (the old per-bin ``vmap`` sliced the table with a
+    traced index and could never actually trace).
     """
-    levels = jnp.arange(256, dtype=jnp.uint8)[None, :]  # [1, 256]
+    levels = jnp.arange(256, dtype=jnp.uint8)  # [256]
     e = table.num_coeffs
-
-    def per_bin(k):
-        sub = QuantTable(
-            zone=table.zone[k : k + 1],
-            scale=table.scale[k : k + 1],
-            mu=table.mu,
-            alpha1=table.alpha1,
-        )
-        return dequantize(levels.T, sub)[:, 0]  # [256]
-
-    grid = jax.vmap(per_bin)(jnp.arange(e))  # [E, 256]
-    return grid, levels[0]
+    grid = dequantize(
+        jnp.broadcast_to(levels[:, None], (256, e)), table
+    )  # [256, E]: column k reconstructs every level under bin k
+    return grid.T, levels

@@ -34,6 +34,7 @@ Four implementations:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -48,6 +49,8 @@ __all__ = [
     "pack_symlen_scan",
     "pack_symlen_chunked",
     "pack_symlen_chunked_parts",
+    "stitch_chunk_parts",
+    "chunk_words_bound",
     "unpack_symlen_np",
     "unpack_symlen",
     "compact_padded_scatter",
@@ -351,15 +354,72 @@ def pack_symlen_chunked(
         num_symbols=num_symbols,
     )
     num_chunks, _ = chunk_hi.shape
-    cap = num_chunks * chunk_size
-    # stitch: chunk b's words occupy the output run [cum[b-1], cum[b]) — a
-    # pure gather (output position -> source chunk/slot), scatter-free
+    return stitch_chunk_parts(
+        chunk_hi, chunk_lo, chunk_sl, wpc,
+        capacity=num_chunks * chunk_size,
+    )
+
+
+def chunk_words_bound(chunk_size: int, l_max: int) -> int:
+    """Static upper bound on the words one chunk of ``chunk_size`` symbols
+    can pack to — host-computable, so device-resident consumers of chunk
+    parts (the transcode pipeline) can size stitched streams without a host
+    sync on the true word counts.
+
+    A word is flushed only when the next codeword (<= ``l_max`` bits) does
+    not fit, so every flushed word carries more than ``64 - l_max`` bits and
+    therefore at least ``floor(64 / l_max)`` symbols; only the chunk's last
+    word may hold fewer (>= 1).  Hence
+    ``words <= (chunk_size - 1) // floor(64 / l_max) + 1`` (and trivially
+    ``words <= chunk_size``).
+    """
+    if chunk_size <= 0:
+        return 0
+    s_min = max(WORD_BITS // max(int(l_max), 1), 1)
+    return min(int(chunk_size), (int(chunk_size) - 1) // s_min + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def stitch_chunk_parts(
+    chunk_hi: jnp.ndarray,  # uint32[B, C]
+    chunk_lo: jnp.ndarray,  # uint32[B, C]
+    chunk_sl: jnp.ndarray,  # int32[B, C]
+    words_per_chunk: jnp.ndarray,  # int32[B]
+    *,
+    capacity: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Device-side stitch: chunk parts -> one dense decoder-shaped stream.
+
+    Chunk b's valid words (its row's first ``words_per_chunk[b]`` entries)
+    land in the output run ``[cum[b-1], cum[b])`` — a pure gather (output
+    position -> source chunk/slot), scatter-free, all on device.  Positions
+    past the total word count are zero words with ``symlen == 0``, which
+    every decoder treats as contributing no symbols — so the output is
+    directly consumable as a (padded) concatenated bucket stream by
+    ``unpack_symlen`` / the Pallas kernel / ``BatchDecoder.decode_streams``.
+
+    ``capacity`` must be a static host-side bound on the total word count
+    (exact counts are device-resident); :func:`chunk_words_bound` gives a
+    safe per-chunk bound.  Multi-signal chunk parts ``[K, B, C]`` stitch to
+    one concatenated multi-signal stream by reshaping to ``[K * B, C]`` —
+    row order is signal order, so the segment structure the symlen sidecar
+    induces matches the per-signal window metadata.
+
+    Returns (hi uint32[capacity], lo uint32[capacity], symlen
+    int32[capacity], num_words int32) — ``num_words`` (a device scalar; no
+    sync) is the live prefix.
+    """
+    b = chunk_hi.shape[0]
+    if b == 0 or capacity == 0:
+        z = jnp.zeros((capacity,), jnp.uint32)
+        return z, z, jnp.zeros((capacity,), jnp.int32), jnp.int32(0)
+    wpc = words_per_chunk.astype(jnp.int32)
     cum = jnp.cumsum(wpc)  # inclusive prefix sum, int32[B]
-    pos = jnp.arange(cap, dtype=jnp.int32)
+    pos = jnp.arange(capacity, dtype=jnp.int32)
     src = jnp.minimum(
-        jnp.searchsorted(cum, pos, side="right"), num_chunks - 1
+        jnp.searchsorted(cum, pos, side="right"), b - 1
     ).astype(jnp.int32)
-    slot = pos - (cum[src] - wpc[src])
+    slot = jnp.minimum(pos - (cum[src] - wpc[src]), chunk_hi.shape[1] - 1)
     live = pos < cum[-1]
     return (
         jnp.where(live, chunk_hi[src, slot], jnp.uint32(0)),

@@ -2,11 +2,14 @@ from repro.serving.batch_decode import (
     BatchDecoder,
     DecodedBatch,
     DecodePlan,
+    StreamGroup,
     default_decoder,
+    streams_from_containers,
 )
 from repro.serving.batch_encode import (
     BatchEncoder,
     EncodedBatch,
+    EncodedBucketParts,
     EncodePlan,
     default_encoder,
 )
@@ -15,16 +18,27 @@ from repro.serving.kv_compression import (
     compress_kv_block,
     decompress_kv_block,
 )
+from repro.serving.transcode import (
+    Transcoder,
+    TranscodePlan,
+    default_transcoder,
+)
 
 __all__ = [
     "BatchDecoder",
     "DecodedBatch",
     "DecodePlan",
+    "StreamGroup",
     "default_decoder",
+    "streams_from_containers",
     "BatchEncoder",
     "EncodedBatch",
+    "EncodedBucketParts",
     "EncodePlan",
     "default_encoder",
+    "Transcoder",
+    "TranscodePlan",
+    "default_transcoder",
     "KVCompressionConfig",
     "compress_kv_block",
     "decompress_kv_block",

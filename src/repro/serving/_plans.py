@@ -1,13 +1,16 @@
 """Shared LRU plan cache for the batched serving engines.
 
-Both engines memoize device-resident per-(domain, config) state — decode
-plans (tables + iDCT basis) and encode plans (tables + gap flag) — keyed by
-(tables identity, plan_key).  Keying by ``id(tables)`` is safe only because
-each plan keeps its source :class:`DomainTables` alive (the ``source``
-field), so an id can never be reused while its cache entry exists.
+The engines memoize device-resident per-(domain, config) state — decode
+plans (tables + iDCT basis), encode plans (tables + gap flag), and
+transcode plans (a decode/encode plan pair) — keyed by (tables identity,
+plan_key).  Keying by ``id(tables)`` is safe only because each plan keeps
+its source :class:`DomainTables` alive (the ``source`` field, or the
+sub-plans' sources for a :class:`TranscodePlan`), so an id can never be
+reused while its cache entry exists.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 from typing import Callable, Tuple, TypeVar
 
@@ -15,18 +18,46 @@ Plan = TypeVar("Plan")
 PlanKey = Tuple[int, int, int, int]  # (domain_id, n, e, l_max)
 
 
+@dataclasses.dataclass(frozen=True)
+class TranscodePlan:
+    """Device-resident state for one (source, target) transcode pairing.
+
+    Pairs the source's :class:`~repro.serving.batch_decode.DecodePlan` and
+    the target's :class:`~repro.serving.batch_encode.EncodePlan` under one
+    cache key, so a transcode route (archive migration between two
+    configs) resolves both halves — device tables, iDCT basis, gap flag —
+    in one LRU lookup, and the pairing's lifetime is managed as a unit.
+    The sub-plans come from (and stay shared with) the underlying
+    decoder's/encoder's own caches, so a Transcoder never duplicates
+    device buffers the engines already hold.
+    """
+
+    decode: object  # DecodePlan for the source (domain, config)
+    encode: object  # EncodePlan for the target (domain, config)
+    src_key: PlanKey
+    dst_key: PlanKey
+
+
 class PlanCache:
-    """Tiny LRU over plans built by an engine-supplied factory."""
+    """Tiny LRU over plans built by an engine-supplied factory.
+
+    ``tables`` may be a single object or a tuple of objects (the transcode
+    pairing); identity keying covers every element.
+    """
 
     def __init__(self, factory: Callable[..., Plan], maxsize: int = 32):
         self._factory = factory
         self.maxsize = maxsize
-        self._plans: "OrderedDict[Tuple[int, PlanKey], Plan]" = OrderedDict()
+        self._plans: "OrderedDict[tuple, Plan]" = OrderedDict()
         self.hits = 0
         self.misses = 0
 
-    def get(self, tables, key: PlanKey) -> Plan:
-        cache_key = (id(tables), key)
+    def get(self, tables, key) -> Plan:
+        ident = (
+            tuple(id(t) for t in tables)
+            if isinstance(tables, tuple) else id(tables)
+        )
+        cache_key = (ident, key)
         plan = self._plans.get(cache_key)
         if plan is not None:
             self._plans.move_to_end(cache_key)

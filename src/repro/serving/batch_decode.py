@@ -53,6 +53,8 @@ __all__ = [
     "BatchDecoder",
     "DecodedBatch",
     "DecodePlan",
+    "StreamGroup",
+    "streams_from_containers",
     "default_decoder",
     "bucket_cache_size",
 ]
@@ -230,6 +232,90 @@ class DecodedBatch:
 
 
 # ---------------------------------------------------------------------------
+# Pre-concatenated device streams: the engine's input contract, exposed.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StreamGroup:
+    """One (domain, config) group's concatenated SymLen stream, ready for a
+    fused bucket decode — the representation :meth:`BatchDecoder.decode`
+    builds internally from host containers, made public so device-resident
+    producers (the transcode pipeline's ``symlen.stitch_chunk_parts``
+    output) can feed the decoder WITHOUT materializing containers or
+    touching the host.
+
+    ``hi``/``lo``/``symlen`` are device (or host) word arrays of one shared
+    length; trailing padding words must carry ``symlen == 0`` (they then
+    contribute no symbols).  ``members`` lists each signal's
+    ``(num_windows, signal_length)`` in stream order — the word->symbol
+    prefix sums recover everything else.  ``max_symlen`` is a host-side
+    bound on the per-word symbol count (<= 64); exact is best (fewest slot
+    iterations) but any safe bound decodes correctly.
+    """
+
+    plan_key: Tuple[int, int, int, int]  # (domain_id, n, e, l_max)
+    hi: jnp.ndarray  # uint32[Wp]
+    lo: jnp.ndarray  # uint32[Wp]
+    symlen: jnp.ndarray  # int32[Wp]
+    max_symlen: int
+    members: Sequence[Tuple[int, int]]  # (num_windows, signal_length)
+
+    @property
+    def total_windows(self) -> int:
+        return sum(nw for nw, _ in self.members)
+
+
+def streams_from_containers(
+    containers: Sequence[Container],
+) -> Tuple[List[StreamGroup], List[int]]:
+    """Group host containers by plan_key and concatenate their streams.
+
+    Returns the :class:`StreamGroup` list (group order = first appearance;
+    members in input order within a group) plus, per input container, its
+    member position in the groups' flattened order — what
+    :meth:`BatchDecoder.decode` uses to restore caller order after
+    :meth:`BatchDecoder.decode_streams`.
+    """
+    group_order: List[Tuple[int, int, int, int]] = []
+    groups: Dict[Tuple[int, int, int, int], List[int]] = {}
+    for i, c in enumerate(containers):
+        key = c.plan_key
+        if key not in groups:
+            groups[key] = []
+            group_order.append(key)
+        groups[key].append(i)
+
+    stream_groups: List[StreamGroup] = []
+    member_pos: List[int] = [0] * len(containers)
+    pos = 0
+    for key in group_order:
+        members = [containers[i] for i in groups[key]]
+        total_words = sum(c.num_words for c in members)
+        wp = _p2(max(total_words, 1))
+        hi = np.zeros(wp, dtype=np.uint32)
+        lo = np.zeros(wp, dtype=np.uint32)
+        sl = np.zeros(wp, dtype=np.int32)
+        woff = 0
+        for c in members:
+            chi, clo = c.words_u32()
+            hi[woff:woff + c.num_words] = chi
+            lo[woff:woff + c.num_words] = clo
+            sl[woff:woff + c.num_words] = c.symlen
+            woff += c.num_words
+        stream_groups.append(StreamGroup(
+            plan_key=key,
+            hi=jnp.asarray(hi),
+            lo=jnp.asarray(lo),
+            symlen=jnp.asarray(sl),
+            max_symlen=max((c.max_symlen for c in members), default=0),
+            members=[(c.num_windows, c.signal_length) for c in members],
+        ))
+        for i in groups[key]:
+            member_pos[i] = pos
+            pos += 1
+    return stream_groups, member_pos
+
+
+# ---------------------------------------------------------------------------
 # The engine.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -316,62 +402,52 @@ class BatchDecoder:
                     "single DomainTables"
                 )
 
-        # group by (domain, config) — each group is one fused dispatch
-        group_order: List[Tuple[int, int, int, int]] = []
-        groups: Dict[Tuple[int, int, int, int], List[int]] = {}
-        for i, c in enumerate(containers):
-            key = c.plan_key
-            if key not in groups:
-                groups[key] = []
-                group_order.append(key)
-            groups[key].append(i)
+        stream_groups, member_pos = streams_from_containers(containers)
+        batch = self.decode_streams(stream_groups, tables)
+        # decode_streams orders slices by (group, member); restore the
+        # caller's container order
+        slices = [batch._slices[member_pos[i]] for i in range(len(containers))]
+        return DecodedBatch(batch._groups, slices)
 
+    def decode_streams(
+        self, groups: Sequence[StreamGroup], tables: TablesArg
+    ) -> DecodedBatch:
+        """Decode pre-concatenated (device- or host-resident) bucket streams.
+
+        This is :meth:`decode` minus the container unpacking/concatenation:
+        each :class:`StreamGroup` is one fused dispatch, nothing is synced
+        to host, and device-array inputs stay on device end to end — the
+        entry point the transcode pipeline uses to feed an
+        ``EncodedBatch``'s stitched chunk parts straight back through the
+        decoder.  The returned batch's signals are ordered group by group,
+        following each group's ``members`` order.
+        """
         out_groups: List[jnp.ndarray] = []
-        slices: List[Optional[_Slice]] = [None] * len(containers)
-        for g, key in enumerate(group_order):
-            idxs = groups[key]
-            plan = self._plan_for_key(key, tables)
-            members = [containers[i] for i in idxs]
-
-            total_words = sum(c.num_words for c in members)
-            total_windows = sum(c.num_windows for c in members)
-            group_symlen = max((c.max_symlen for c in members), default=0)
-            wp = _p2(max(total_words, 1))
-            windows_p = _p2(max(total_windows, 1))
-            symlen_p = _symlen_bucket(group_symlen)
-
-            hi = np.zeros(wp, dtype=np.uint32)
-            lo = np.zeros(wp, dtype=np.uint32)
-            sl = np.zeros(wp, dtype=np.int32)
-            woff = 0
-            win_off = 0
-            for i, c in zip(idxs, members):
-                chi, clo = c.words_u32()
-                hi[woff:woff + c.num_words] = chi
-                lo[woff:woff + c.num_words] = clo
-                sl[woff:woff + c.num_words] = c.symlen
-                woff += c.num_words
-                slices[i] = _Slice(
-                    group=g,
-                    win_off=win_off,
-                    num_windows=c.num_windows,
-                    signal_length=c.signal_length,
-                )
-                win_off += c.num_windows
-
+        slices: List[_Slice] = []
+        for g, grp in enumerate(groups):
+            plan = self._plan_for_key(tuple(grp.plan_key), tables)
             windows = _decode_bucket(
-                jnp.asarray(hi),
-                jnp.asarray(lo),
-                jnp.asarray(sl),
+                jnp.asarray(grp.hi),
+                jnp.asarray(grp.lo),
+                jnp.asarray(grp.symlen),
                 plan.tables,
                 plan.basis,
                 l_max=plan.l_max,
-                max_symlen=symlen_p,
-                num_windows=windows_p,
+                max_symlen=_symlen_bucket(grp.max_symlen),
+                num_windows=_p2(max(grp.total_windows, 1)),
                 n=plan.n,
                 e=plan.e,
                 use_kernels=self.use_kernels,
             )
+            win_off = 0
+            for num_windows, signal_length in grp.members:
+                slices.append(_Slice(
+                    group=g,
+                    win_off=win_off,
+                    num_windows=num_windows,
+                    signal_length=signal_length,
+                ))
+                win_off += num_windows
             out_groups.append(windows)
             self.stats.dispatches += 1
 

@@ -57,6 +57,7 @@ from repro.serving.batch_decode import _p2
 __all__ = [
     "BatchEncoder",
     "EncodedBatch",
+    "EncodedBucketParts",
     "EncodePlan",
     "default_encoder",
     "DEFAULT_CHUNK_SIZE",
@@ -178,6 +179,42 @@ class _Slice:
     domain_id: int
 
 
+@dataclasses.dataclass(frozen=True)
+class EncodedBucketParts:
+    """One bucket's device-resident encode output, un-stitched.
+
+    ``hi``/``lo``/``symlen`` are the per-chunk word runs
+    ``[K, num_chunks, chunk_size]`` and ``words_per_chunk`` ``[K,
+    num_chunks]`` — exactly what :func:`repro.core.symlen.
+    pack_symlen_chunked_parts` produces per signal, batched over the
+    bucket's ``K`` rows (rows past the real signals are batch padding and
+    pack zero words).  ``unencodable`` is the bucket's device-side
+    histogram-gap flag, checked at drain.  This is the shared stream
+    contract between the encode engine and device-resident consumers (the
+    transcode pipeline stitches these straight into decoder bucket
+    streams via ``symlen.stitch_chunk_parts`` — no host round trip).
+    """
+
+    plan_key: Tuple[int, int, int, int]  # (domain_id, n, e, l_max)
+    hi: jnp.ndarray  # uint32[K, B, C]
+    lo: jnp.ndarray  # uint32[K, B, C]
+    symlen: jnp.ndarray  # int32[K, B, C]
+    words_per_chunk: jnp.ndarray  # int32[K, B]
+    unencodable: jnp.ndarray  # bool[]
+
+    @property
+    def chunk_size(self) -> int:
+        return int(self.hi.shape[2])
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.hi.shape[1])
+
+    def words_per_signal(self) -> jnp.ndarray:
+        """Per-row word extents int32[K] — a device array (no sync)."""
+        return jnp.sum(self.words_per_chunk, axis=1)
+
+
 class EncodedBatch:
     """Result of :meth:`BatchEncoder.encode` — device-resident streams.
 
@@ -185,29 +222,80 @@ class EncodedBatch:
     histogram-gap check (the device-side arm of the pack precheck), then
     numpy slicing into per-signal :class:`Container`\\ s (input order
     preserved).
+
+    A batch drains **once**.  A second ``to_host()`` — or any drain after
+    the device buffers were handed to a :class:`~repro.serving.transcode.
+    Transcoder` — raises instead of silently re-syncing (the buffers may by
+    then be donated or re-encoded under a different config, so a quiet
+    second drain is a stale-data hazard).  Device-resident consumers read
+    :meth:`device_parts` / :meth:`signal_slices` instead of draining.
     """
 
-    def __init__(self, buckets: List[tuple], slices: List[_Slice]):
+    def __init__(
+        self,
+        buckets: List[tuple],
+        slices: List[_Slice],
+        pending_flags: Sequence[Tuple[Tuple[int, int, int, int],
+                                      jnp.ndarray]] = (),
+    ):
         # per bucket: (plan_key, hi, lo, sl, wpc, bad) device arrays with
         # hi/lo/sl shaped [K, num_chunks, chunk_size], wpc [K, num_chunks]
         self._buckets = buckets
         self._slices = slices
+        # histogram-gap flags inherited from upstream device stages (a
+        # transcode's source batch): checked at drain like our own
+        self._pending_flags = list(pending_flags)
+        self._consumed: Optional[str] = None
 
     def __len__(self) -> int:
         return len(self._slices)
+
+    def device_parts(self) -> List[EncodedBucketParts]:
+        """The per-bucket chunk parts as device arrays — no host sync."""
+        self._check_live("read device parts of")
+        return [
+            EncodedBucketParts(
+                plan_key=key, hi=hi, lo=lo, symlen=sl,
+                words_per_chunk=wpc, unencodable=bad,
+            )
+            for key, hi, lo, sl, wpc, bad in self._buckets
+        ]
+
+    def signal_slices(self) -> List[_Slice]:
+        """Per-signal (input order) location + header metadata: which
+        bucket/row holds signal i's chunk parts, plus the container header
+        fields (num_windows, signal_length, n, e, l_max, domain_id)."""
+        return list(self._slices)
 
     def block_until_ready(self) -> "EncodedBatch":
         for _, hi, lo, sl, wpc, bad in self._buckets:
             wpc.block_until_ready()
         return self
 
+    def _check_live(self, verb: str) -> None:
+        if self._consumed is not None:
+            raise RuntimeError(
+                f"cannot {verb} this EncodedBatch: {self._consumed}"
+            )
+
+    def _mark_consumed(self, reason: str) -> None:
+        self._check_live("consume")
+        self._consumed = reason
+
     def to_host(self) -> List[Container]:
         """Drain the batch into containers: one sync per bucket, then a
         host-side stitch of each signal's chunk word-runs (chunk b of
         signal k contributes its row's first ``wpc[k, b]`` words)."""
+        self._check_live("drain")
         host = []
-        for key, hi, lo, sl, wpc, bad in self._buckets:
+        for key, hi, lo, sl, wpc, bad in (
+            [(k, None, None, None, None, b) for k, b in self._pending_flags]
+            + self._buckets
+        ):
             if bool(bad):
+                # leave the batch live: a failed drain returned nothing, so
+                # a retry must re-raise this error, not a bogus
+                # "already drained" message
                 raise ValueError(
                     f"encode batch for plan_key (domain_id, n, e, l_max)="
                     f"{key} produced symbol(s) with no codeword (histogram "
@@ -215,10 +303,16 @@ class EncodedBatch:
                     "garbage; recalibrate with Laplace smoothing or a "
                     "complete codebook"
                 )
+            if hi is None:  # a pending upstream flag, nothing to drain
+                continue
             host.append(
                 (np.asarray(hi), np.asarray(lo), np.asarray(sl),
                  np.asarray(wpc))
             )
+        self._consumed = (
+            "it was already drained by to_host() — hold on to the returned "
+            "containers instead of draining twice"
+        )
         out = []
         for s in self._slices:
             hi, lo, sl, wpc = host[s.bucket]
@@ -323,21 +417,55 @@ class BatchEncoder:
         Returns an :class:`EncodedBatch`; nothing is synced to host here.
         """
         signals = [np.asarray(s, dtype=np.float32).ravel() for s in signals]
+
+        def stage(idxs: List[int], kp: int, wp: int, n: int) -> jnp.ndarray:
+            x = np.zeros((kp, wp * n), dtype=np.float32)
+            for row, i in enumerate(idxs):
+                x[row, : signals[i].shape[0]] = signals[i]
+            return jnp.asarray(x)
+
+        return self.encode_staged(
+            [int(s.shape[0]) for s in signals], tables,
+            domain_ids=domain_ids, stage=stage,
+        )
+
+    def encode_staged(
+        self,
+        lengths: Sequence[int],
+        tables: TablesArg,
+        *,
+        stage,
+        domain_ids: Optional[Sequence[int]] = None,
+        pending_flags: Sequence[tuple] = (),
+    ) -> EncodedBatch:
+        """The bucketing/dispatch core of :meth:`encode`, with the signal
+        *staging* pluggable.
+
+        ``stage(idxs, kp, wp, n)`` must return the bucket's stacked signal
+        matrix ``f32[kp, wp * n]`` — row ``r`` holds signal ``idxs[r]``'s
+        samples followed by exact zeros, rows past ``len(idxs)`` all-zero —
+        as either a host array (the :meth:`encode` path) or a device array
+        (the transcode pipeline, which gathers rows from decoded windows
+        without leaving the device).  Everything else — grouping, padding,
+        chunk-size selection, the fused dispatch, slice metadata — is this
+        one code path, which is what makes device-staged encodes
+        byte-identical to host-staged ones.
+        """
         self.stats.batches += 1
-        self.stats.signals += len(signals)
-        if not signals:
-            return EncodedBatch([], [])
+        self.stats.signals += len(lengths)
+        if not lengths:
+            return EncodedBatch([], [], pending_flags)
         if domain_ids is None:
             if not isinstance(tables, DomainTables):
                 raise ValueError(
                     "domain_ids is required when tables is a "
                     "{domain_id: DomainTables} mapping"
                 )
-            domain_ids = [tables.domain_id] * len(signals)
-        if len(domain_ids) != len(signals):
+            domain_ids = [tables.domain_id] * len(lengths)
+        if len(domain_ids) != len(lengths):
             raise ValueError(
                 f"domain_ids has {len(domain_ids)} entries for "
-                f"{len(signals)} signals"
+                f"{len(lengths)} signals"
             )
 
         # group by ((domain, config), windows bucket) — one fused dispatch
@@ -345,10 +473,10 @@ class BatchEncoder:
         bucket_order: List[Tuple[Tuple[int, int, int, int], int]] = []
         buckets: Dict[Tuple[Tuple[int, int, int, int], int], List[int]] = {}
         per_tab: Dict[Tuple[Tuple[int, int, int, int], int], DomainTables] = {}
-        for i, (sig, dom) in enumerate(zip(signals, domain_ids)):
+        for i, (length, dom) in enumerate(zip(lengths, domain_ids)):
             tab = self._tables_for(dom, tables)
             cfg = tab.config
-            num_windows = -(-sig.shape[0] // cfg.n)
+            num_windows = -(-length // cfg.n)
             key = (
                 (dom, cfg.n, cfg.e, cfg.l_max),
                 _p2(max(num_windows, 1)),
@@ -360,33 +488,31 @@ class BatchEncoder:
             buckets[key].append(i)
 
         out_buckets: List[tuple] = []
-        slices: List[Optional[_Slice]] = [None] * len(signals)
+        slices: List[Optional[_Slice]] = [None] * len(lengths)
         for b, key in enumerate(bucket_order):
             (plan_key, wp), idxs = key, buckets[key]
             plan = self._plans.get(per_tab[key], plan_key)
             n, e = plan.n, plan.e
             kp = _p2(len(idxs))  # pad batch dim; pad rows pack 0 symbols
-            x = np.zeros((kp, wp * n), dtype=np.float32)
             counts = np.zeros((kp,), dtype=np.int32)
             for row, i in enumerate(idxs):
-                sig = signals[i]
-                num_windows = -(-sig.shape[0] // n)
-                x[row, : sig.shape[0]] = sig
+                num_windows = -(-lengths[i] // n)
                 counts[row] = num_windows * e
                 slices[i] = _Slice(
                     bucket=b,
                     row=row,
                     num_windows=num_windows,
-                    signal_length=int(sig.shape[0]),
+                    signal_length=int(lengths[i]),
                     n=n,
                     e=e,
                     l_max=plan.l_max,
                     domain_id=plan.domain_id,
                 )
+            x = stage(idxs, kp, wp, n)
             sp = wp * e
             chunk = sp if self.chunk_size is None else min(self.chunk_size, sp)
             hi, lo, sl, nw, bad = _encode_bucket(
-                jnp.asarray(x),
+                x if isinstance(x, jnp.ndarray) else jnp.asarray(x),
                 jnp.asarray(counts),
                 plan.tables,
                 n=n,
@@ -399,7 +525,7 @@ class BatchEncoder:
 
         self.stats.plan_hits = self._plans.hits
         self.stats.plan_misses = self._plans.misses
-        return EncodedBatch(out_buckets, slices)
+        return EncodedBatch(out_buckets, slices, pending_flags)
 
     def encode_to_host(
         self,

@@ -1,0 +1,403 @@
+"""Device-resident transcode pipeline: decode -> re-encode, no host round trip.
+
+FPTC's asymmetric design puts batch *re-compression* on the server: archives
+are routinely migrated between configs — tighter quantization for cold
+storage, a new window size ``n`` or coefficient count ``e`` after a domain
+recalibration.  Composing the two serving engines through host containers
+pays one device->host drain per decoded signal, a host re-stack, and one
+host->device re-upload per encode bucket, all in the middle of the hot loop.
+
+:class:`Transcoder` removes the round trip by making the engines' internal
+stream representations a shared, device-resident contract:
+
+  * **Source streams.**  A host archive (``Container`` list) uploads once
+    via the decoder's own :func:`~repro.serving.batch_decode.
+    streams_from_containers`; a device-resident
+    :class:`~repro.serving.batch_encode.EncodedBatch` feeds its un-stitched
+    chunk parts through ``core.symlen.stitch_chunk_parts`` — a device-side
+    gather that lays the per-chunk word runs into decoder-shaped
+    concatenated bucket streams (capacity sized by the host-computable
+    :func:`~repro.core.symlen.chunk_words_bound`, so no sync on the true
+    word counts).
+  * **Decode.**  :meth:`BatchDecoder.decode_streams` — the same fused
+    bucket dispatches ``decode()`` uses, minus the container unpacking.
+  * **Re-stage on device.**  Each target encode bucket's stacked signal
+    matrix is one jitted gather out of the decoded window tensors
+    (:func:`_gather_rows`); row layout, zero padding and chunk-size
+    selection are the encoder's own (:meth:`BatchEncoder.encode_staged`),
+    which is what makes the output **byte-identical** to draining the
+    decoded signals to host and re-encoding them.
+  * **One drain.**  The result is a normal :class:`EncodedBatch`; nothing
+    syncs until its ``to_host()``.  Between decode and re-encode there are
+    zero device->host transfers (the conformance suite pins this with a
+    ``jax.transfer_guard``).
+
+``core.codec.transcode`` is a container-of-one wrapper over this engine in
+exact packing mode, mirroring ``encode_device`` / ``decode_device``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import symlen
+from repro.core.calibration import DomainTables
+from repro.core.container import Container
+from repro.serving._plans import PlanCache, TranscodePlan
+from repro.serving.batch_decode import (
+    BatchDecoder,
+    StreamGroup,
+    _p2,
+    streams_from_containers,
+)
+from repro.serving.batch_encode import (
+    DEFAULT_CHUNK_SIZE,
+    BatchEncoder,
+    EncodedBatch,
+)
+
+__all__ = ["Transcoder", "TranscodePlan", "default_transcoder"]
+
+TablesArg = Union[DomainTables, Dict[int, DomainTables]]
+Source = Union[Sequence[Container], EncodedBatch]
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _gather_rows(
+    flat: jnp.ndarray,  # f32[T + 1] (flattened decoded windows)
+    starts: jnp.ndarray,  # int32[K] first-sample flat offset per row
+    lens: jnp.ndarray,  # int32[K] true sample count per row
+    *,
+    width: int,
+) -> jnp.ndarray:
+    """Stage one encode bucket's signal matrix ``f32[K, width]`` on device.
+
+    Row ``r`` gathers samples ``[starts[r], starts[r] + lens[r])`` of the
+    flattened window tensors and is exact-zero beyond ``lens[r]`` — the
+    same layout ``BatchEncoder.encode`` stages host-side (a decoded
+    signal's own window padding is *re-decoded* data, not zeros, so the
+    mask is what keeps device staging bit-identical to the host path).
+
+    ``flat`` must already carry >= ``width`` trailing zeros past the last
+    real start (transcode() pads ONCE by the widest bucket) so every slice
+    stays in bounds — dynamic_slice clamps out-of-range starts, which
+    would silently shift a tail row's window otherwise.  Every row is one
+    contiguous sample run, so the cheap lowering is a batched
+    dynamic_slice (row-wise block copy) + tail mask — NOT a per-element
+    gather, which costs ~2x the fused encode itself on CPU.
+    """
+    pos = jnp.arange(width, dtype=jnp.int32)
+
+    def row(start, length):
+        x = jax.lax.dynamic_slice(flat, (start,), (width,))
+        return jnp.where(pos < length, x, jnp.zeros((), flat.dtype))
+
+    return jax.vmap(row)(starts, lens)
+
+
+def _signal_words_bound(
+    num_symbols: int, chunk_size: int, l_max: int
+) -> int:
+    """Host-side bound on one signal's packed word count under chunking."""
+    full, rem = divmod(int(num_symbols), int(chunk_size))
+    return full * symlen.chunk_words_bound(chunk_size, l_max) + (
+        symlen.chunk_words_bound(rem, l_max)
+    )
+
+
+@dataclasses.dataclass
+class TranscoderStats:
+    batches: int = 0
+    signals: int = 0
+    stitches: int = 0  # device-side chunk-part stitch dispatches
+    plan_hits: int = 0
+    plan_misses: int = 0
+
+
+class Transcoder:
+    """Re-encodes batches under a new (domain, config) without leaving the
+    device.
+
+    Usage::
+
+        tc = Transcoder()                       # chunked (fast) packing
+        batch = tc.transcode(containers, src_tables, dst_tables)
+        migrated = batch.to_host()              # the ONLY host sync
+
+    ``source`` is either a container archive (one upload, zero syncs) or a
+    device-resident :class:`EncodedBatch` fresh off a
+    :class:`BatchEncoder` — in which case its chunk parts are stitched
+    into decoder streams on device and the batch is *consumed* (a later
+    ``to_host()`` on it raises; drain the transcode result instead).
+    Output signal order is source order.  ``dst_domain_ids`` routes each
+    signal's target tables when ``dst_tables`` is a mapping; it defaults
+    to the source domain ids (re-windowing / re-quantizing within the
+    same domain id).
+    """
+
+    def __init__(
+        self,
+        *,
+        chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
+        use_kernels: bool = False,
+        decoder: Optional[BatchDecoder] = None,
+        encoder: Optional[BatchEncoder] = None,
+        plan_cache_size: int = 32,
+    ):
+        self.decoder = decoder or BatchDecoder(use_kernels=use_kernels)
+        self.encoder = encoder or BatchEncoder(chunk_size=chunk_size)
+        self._plans = PlanCache(self._build_plan, plan_cache_size)
+        self.stats = TranscoderStats()
+
+    # -- plan pairing ------------------------------------------------------
+    def _build_plan(self, tables, key) -> TranscodePlan:
+        (src_tab, dst_tab), (src_key, dst_key) = tables, key
+        return TranscodePlan(
+            decode=self.decoder._plans.get(src_tab, src_key),
+            encode=self.encoder.plan_for(dst_tab),
+            src_key=src_key,
+            dst_key=dst_key,
+        )
+
+    def plan_for(
+        self, src_tables: DomainTables, dst_tables: DomainTables
+    ) -> TranscodePlan:
+        src_cfg, dst_cfg = src_tables.config, dst_tables.config
+        src_key = (src_tables.domain_id, src_cfg.n, src_cfg.e, src_cfg.l_max)
+        dst_key = (dst_tables.domain_id, dst_cfg.n, dst_cfg.e, dst_cfg.l_max)
+        return self._plans.get((src_tables, dst_tables), (src_key, dst_key))
+
+    # -- source normalization ----------------------------------------------
+    def _streams_from_encoded(
+        self, batch: EncodedBatch, src_tables: TablesArg
+    ) -> Tuple[List[StreamGroup], List[int], List[Tuple[int, int]],
+               List[tuple]]:
+        """Stitch an EncodedBatch's chunk parts into decoder streams,
+        entirely on device.  Returns (groups, per-signal member position,
+        per-signal (length, src plan key) in source order, pending gap
+        flags).  Does NOT consume the batch — transcode() marks it consumed
+        only once the whole pipeline is committed, so a failed transcode
+        (bad routing, missing tables) leaves the source drainable."""
+        parts = batch.device_parts()
+        slices = batch.signal_slices()
+        # signals per bucket, in row order (== stream symbol order)
+        per_bucket: List[List] = [[] for _ in parts]
+        for s in slices:
+            per_bucket[s.bucket].append(s)
+        for rows in per_bucket:
+            rows.sort(key=lambda s: s.row)
+
+        # merge buckets sharing a plan_key into one decode group, mirroring
+        # streams_from_containers' grouping (same fused-dispatch count and
+        # window bucket as the drained-container round trip)
+        key_order: List[Tuple[int, int, int, int]] = []
+        by_key: Dict[Tuple[int, int, int, int], List[int]] = {}
+        for b, p in enumerate(parts):
+            if p.plan_key not in by_key:
+                by_key[p.plan_key] = []
+                key_order.append(p.plan_key)
+            by_key[p.plan_key].append(b)
+
+        groups: List[StreamGroup] = []
+        member_pos_by_sig: Dict[Tuple[int, int], int] = {}
+        pos = 0
+        for key in key_order:
+            l_max = key[3]
+            seg_hi, seg_lo, seg_sl = [], [], []
+            members: List[Tuple[int, int]] = []
+            tab = self.decoder._tables_for(key, src_tables)
+            lengths = np.asarray(tab.book.lengths)
+            nonzero = lengths[lengths > 0]
+            min_len = int(nonzero.min()) if nonzero.size else 1
+            max_sl = min(symlen.WORD_BITS // max(min_len, 1),
+                         symlen.WORD_BITS)
+            for b in by_key[key]:
+                p = parts[b]
+                cap = sum(
+                    _signal_words_bound(
+                        s.num_windows * s.e, p.chunk_size, l_max
+                    )
+                    for s in per_bucket[b]
+                )
+                c = p.chunk_size
+                # round capacity to a coarse grid (not a power of two:
+                # the bound is already ~2-3x the true word count, and
+                # decode slot work is linear in capacity — p2 rounding on
+                # top would double it again)
+                cap = -(-max(cap, 1) // 256) * 256
+                shi, slo, ssl, _ = symlen.stitch_chunk_parts(
+                    p.hi.reshape(-1, c),
+                    p.lo.reshape(-1, c),
+                    p.symlen.reshape(-1, c),
+                    p.words_per_chunk.reshape(-1),
+                    capacity=cap,
+                )
+                self.stats.stitches += 1
+                seg_hi.append(shi)
+                seg_lo.append(slo)
+                seg_sl.append(ssl)
+                for s in per_bucket[b]:
+                    members.append((s.num_windows, s.signal_length))
+                    member_pos_by_sig[(s.bucket, s.row)] = pos
+                    pos += 1
+            groups.append(StreamGroup(
+                plan_key=key,
+                hi=seg_hi[0] if len(seg_hi) == 1 else jnp.concatenate(seg_hi),
+                lo=seg_lo[0] if len(seg_lo) == 1 else jnp.concatenate(seg_lo),
+                symlen=(
+                    seg_sl[0] if len(seg_sl) == 1 else jnp.concatenate(seg_sl)
+                ),
+                max_symlen=max_sl,
+                members=members,
+            ))
+
+        member_pos = [
+            member_pos_by_sig[(s.bucket, s.row)] for s in slices
+        ]
+        meta = [
+            (s.signal_length, (s.domain_id, s.n, s.e, s.l_max))
+            for s in slices
+        ]
+        # inherit the source's own pending flags too: a chained transcode
+        # must not launder an upstream histogram-gap batch into a clean
+        # drain
+        flags = list(batch._pending_flags) + [
+            (p.plan_key, p.unencodable) for p in parts
+        ]
+        return groups, member_pos, meta, flags
+
+    # -- the transcode -----------------------------------------------------
+    def transcode(
+        self,
+        source: Source,
+        src_tables: TablesArg,
+        dst_tables: TablesArg,
+        *,
+        dst_domain_ids: Optional[Sequence[int]] = None,
+    ) -> EncodedBatch:
+        """Decode ``source`` under ``src_tables`` and re-encode under
+        ``dst_tables``, device-resident end to end.
+
+        Returns an :class:`EncodedBatch` (source order); nothing is synced
+        to host here — drain it once with ``to_host()``.
+        """
+        src_batch: Optional[EncodedBatch] = None
+        if isinstance(source, EncodedBatch):
+            src_batch = source
+            groups, member_pos, meta, flags = self._streams_from_encoded(
+                source, src_tables
+            )
+        else:
+            containers = list(source)
+            groups, member_pos = streams_from_containers(containers)
+            meta = [(c.signal_length, c.plan_key) for c in containers]
+            flags = []
+        self.stats.batches += 1
+        self.stats.signals += len(meta)
+
+        lengths = [length for length, _ in meta]
+        if dst_domain_ids is None and not isinstance(
+            dst_tables, DomainTables
+        ):
+            dst_domain_ids = [key[0] for _, key in meta]
+
+        # resolve the (source, target) plan pairings up front: device
+        # tables/bases upload through the shared caches before dispatch.
+        # max_width (the widest dst encode bucket) sizes the one-time zero
+        # pad that keeps every _gather_rows dynamic_slice in bounds.
+        dst_doms = (
+            [dst_tables.domain_id] * len(meta)
+            if isinstance(dst_tables, DomainTables) else list(dst_domain_ids)
+        )
+        max_width = 1
+        for (length, src_key), dst_dom in zip(meta, dst_doms):
+            src_tab = self.decoder._tables_for(src_key, src_tables)
+            dst_tab = self.encoder._tables_for(dst_dom, dst_tables)
+            self.plan_for(src_tab, dst_tab)
+            n_dst = dst_tab.config.n
+            max_width = max(
+                max_width, _p2(max(-(-length // n_dst), 1)) * n_dst
+            )
+        self.stats.plan_hits = self._plans.hits
+        self.stats.plan_misses = self._plans.misses
+
+        decoded = self.decoder.decode_streams(groups, src_tables)
+
+        # flatten the decoded window tensors once (padded once, by the
+        # widest bucket); per-signal sample runs are contiguous, so encode
+        # staging is one batched dynamic_slice per bucket
+        tensors = decoded.device_windows
+        starts = np.zeros((len(meta),), dtype=np.int64)
+        if tensors:
+            flat = jnp.concatenate(
+                [w.reshape(-1) for w in tensors]
+                + [jnp.zeros((max_width,), tensors[0].dtype)]
+            )
+            bases = np.concatenate(
+                [[0], np.cumsum([w.size for w in tensors])]
+            ).astype(np.int64)
+            widths = [w.shape[1] for w in tensors]
+            for i in range(len(meta)):
+                s = decoded._slices[member_pos[i]]
+                starts[i] = bases[s.group] + s.win_off * widths[s.group]
+
+        def stage(idxs: List[int], kp: int, wp: int, n: int) -> jnp.ndarray:
+            st = np.zeros((kp,), dtype=np.int32)
+            ln = np.zeros((kp,), dtype=np.int32)
+            for row, i in enumerate(idxs):
+                st[row] = starts[i]
+                ln[row] = lengths[i]
+            return _gather_rows(
+                flat, jnp.asarray(st), jnp.asarray(ln), width=wp * n
+            )
+
+        out = self.encoder.encode_staged(
+            lengths, dst_tables,
+            domain_ids=dst_domain_ids,
+            stage=stage,
+            pending_flags=flags,
+        )
+        if src_batch is not None:
+            # commit point: the source's buffers now back the transcode
+            # result; mark it consumed only NOW, so any earlier failure
+            # (bad routing, missing tables) left it drainable
+            src_batch._mark_consumed(
+                "its device buffers were donated to a Transcoder — drain "
+                "the transcode result instead"
+            )
+        return out
+
+    def transcode_to_host(
+        self,
+        source: Source,
+        src_tables: TablesArg,
+        dst_tables: TablesArg,
+        *,
+        dst_domain_ids: Optional[Sequence[int]] = None,
+    ) -> List[Container]:
+        """Convenience: transcode + single drain in one call."""
+        return self.transcode(
+            source, src_tables, dst_tables, dst_domain_ids=dst_domain_ids
+        ).to_host()
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default transcoders (codec.transcode rides the exact one).
+# ---------------------------------------------------------------------------
+_DEFAULTS: Dict[Optional[int], Transcoder] = {}
+
+
+def default_transcoder(chunk_size: Optional[int] = None) -> Transcoder:
+    """Shared transcoder per chunk size.  ``None`` (the default) is *exact*
+    packing mode — what ``core.codec.transcode`` rides; pass
+    ``DEFAULT_CHUNK_SIZE`` (or any chunk) for chunk-parallel packing.
+    Same process-lifetime plan-cache trade as ``default_encoder``."""
+    tc = _DEFAULTS.get(chunk_size)
+    if tc is None:
+        tc = _DEFAULTS[chunk_size] = Transcoder(chunk_size=chunk_size)
+    return tc

@@ -1,0 +1,179 @@
+"""Shared synthetic codec fixtures: containers with exact word counts,
+pathological codebooks, and the deterministic golden-fixture builders,
+used by the batch-engine, transcode and golden tests (importable because
+conftest puts tests/ on sys.path)."""
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import DomainTables
+from repro.core.config import CodecConfig
+from repro.core.container import Container
+from repro.core.dct import inverse_dct
+from repro.core.huffman import build_codebook
+from repro.core.quantize import build_quant_table, dequantize
+from repro.core.symlen import pack_symlen_np
+
+
+def uniform_code_container(num_words, n=8, e=8, l_max=8, seed=0, domain_id=0):
+    """A synthetic container with EXACTLY ``num_words`` payload words.
+
+    A uniform 256-symbol histogram under l_max=8 yields a canonical code
+    where every codeword is 8 bits, so each 64-bit word holds exactly 8
+    symbols and word count is num_symbols / 8 precisely.  With n = e = 8,
+    one window is one word — letting tests hit bucket boundaries exactly.
+    """
+    rng = np.random.default_rng(seed)
+    hist = np.full(256, 10, dtype=np.int64)
+    book = build_codebook(hist, l_max=l_max)
+    assert int(book.lengths.max()) == 8 and int(book.lengths.min()) == 8
+    syms = rng.integers(0, 256, num_words * 8).astype(np.uint8)
+    stream = pack_symlen_np(syms, book)
+    assert stream.num_words == num_words
+    quant = build_quant_table(
+        rng.standard_normal((512, e)) * np.linspace(2.0, 0.2, e),
+        b1=2, b2=e, mu=50.0, alpha1=0.004, percentile=99.9,
+    )
+    cfg = CodecConfig(n=n, e=e, b1=2, b2=e, l_max=l_max)
+    tables = DomainTables(
+        config=cfg, quant=quant, book=book, domain_id=domain_id
+    )
+    num_windows = num_words  # 8 symbols per window == 8 symbols per word
+    container = Container(
+        words=stream.words,
+        symlen=stream.symlen.astype(np.uint8),
+        num_symbols=stream.num_symbols,
+        num_windows=num_windows,
+        signal_length=num_windows * n,
+        n=n, e=e, l_max=l_max, domain_id=domain_id,
+    )
+    return container, tables
+
+
+# ---------------------------------------------------------------------------
+# Golden bit-exactness fixtures (tests/golden/): deterministic construction.
+#
+# The frozen blobs are a regression tripwire for the container format and
+# the packer: today's encoder must reproduce the v2 bytes EXACTLY on any
+# platform.  That rules out dataset-calibrated tables (BLAS-dependent in
+# the last ulp, which can flip a symbol at a cell boundary).  Instead the
+# golden signal is *inverse-constructed*: draw target symbols, place each
+# retained DCT coefficient exactly at its reconstruction point
+# (dequantize), and synthesize the signal by inverse DCT.  Re-encoding
+# recovers the coefficients up to ~1e-6 relative (DCT basis
+# orthogonality), while every quantizer cell is wider than ~1e-4 of the
+# bin scale — hundreds of times the float noise — so quantize() maps back
+# to the drawn symbols bit-exactly, everywhere.
+# ---------------------------------------------------------------------------
+GOLDEN_DOMAINS = [
+    # (domain_key in DOMAIN_DEFAULTS, domain_id used in the fixture)
+    ("biomedical", 0),
+    ("seismic", 1),
+    ("power", 2),
+    ("meteorological", 3),
+    ("default", 4),
+]
+GOLDEN_WINDOWS = 16  # windows per golden signal (tiny, checked-in blobs)
+
+
+def golden_tables(domain_key, domain_id):
+    """Deterministic DomainTables for one golden domain: quant scales from
+    a seeded standard-normal coefficient draw (identical bit stream on
+    every platform per the numpy Generator stability guarantee), codebook
+    from a seeded integer histogram (pure integer construction)."""
+    from repro.core import DOMAIN_DEFAULTS
+
+    cfg = DOMAIN_DEFAULTS[domain_key]
+    rng = np.random.default_rng(1000 + domain_id)
+    calib = rng.standard_normal((256, cfg.e)) * np.linspace(
+        4.0, 0.5, cfg.e
+    )
+    quant = build_quant_table(
+        calib, b1=cfg.b1, b2=cfg.b2, mu=cfg.mu, alpha1=cfg.alpha1,
+        percentile=cfg.a0_percentile, scale_headroom=cfg.scale_headroom,
+    )
+    hist = rng.integers(1, 1000, 256).astype(np.int64)
+    book = build_codebook(hist, l_max=cfg.l_max)
+    return DomainTables(
+        config=cfg, quant=quant, book=book, domain_id=domain_id
+    )
+
+
+def golden_signal(tables, num_windows=GOLDEN_WINDOWS):
+    """The signal whose encode is frozen: symbols drawn per (window, bin),
+    zone-2 bins pinned to the zero bin (their reconstruction is 0
+    regardless of level, so any other symbol could not round-trip)."""
+    cfg = tables.config
+    rng = np.random.default_rng(2000 + tables.domain_id)
+    syms = rng.integers(0, 256, (num_windows, cfg.e)).astype(np.uint8)
+    # levels 127/129 reconstruct exactly ONTO the deadzone boundary (+-d1
+    # in zone 1, 0 in zone 0), where quantize() tips to the zero bin — no
+    # margin, so they cannot round-trip stably; steer clear of them
+    syms[syms == 127] = 126
+    syms[syms == 129] = 130
+    zone2 = np.asarray(tables.quant.zone) == 2
+    syms[:, zone2] = 128
+    coeffs = dequantize(jnp.asarray(syms), tables.quant)
+    windows = np.asarray(inverse_dct(coeffs, cfg.n), dtype=np.float32)
+    return syms, windows.reshape(-1)
+
+
+def container_v1_bytes(container):
+    """Serialize a container in the legacy v1 layout (crc over the symlen
+    sidecar only) — the format PR 2's v2 checksum superseded but both
+    decoders must keep reading."""
+    from repro.core.container import _HDR, _MAGIC
+
+    words_b = container.words.astype("<u8").tobytes()
+    symlen_b = container.symlen.astype(np.uint8).tobytes()
+    hdr = _HDR.pack(
+        _MAGIC,
+        1,
+        container.l_max,
+        container.n,
+        container.e,
+        container.num_words,
+        container.num_symbols,
+        container.num_windows,
+        container.signal_length,
+        container.max_symlen,
+        container.domain_id,
+        zlib.crc32(symlen_b),
+    )
+    return hdr + words_b + symlen_b
+
+
+def gap_tables(n=8, e=8, l_max=8, domain_id=0):
+    """Tables whose Huffman book covers ONLY the zero bin (128): any signal
+    that quantizes off-zero hits a histogram gap."""
+    hist = np.zeros(256, dtype=np.int64)
+    hist[128] = 100
+    book = build_codebook(hist, l_max=l_max)
+    rng = np.random.default_rng(0)
+    quant = build_quant_table(
+        rng.standard_normal((64, e)), b1=2, b2=e, mu=50.0, alpha1=0.004,
+        percentile=99.9,
+    )
+    cfg = CodecConfig(n=n, e=e, b1=2, b2=e, l_max=l_max)
+    return DomainTables(
+        config=cfg, quant=quant, book=book, domain_id=domain_id
+    )
+
+
+def single_symbol_tables(n=8, e=8, l_max=8, domain_id=0):
+    """A Huffman book whose alphabet is ONLY the zero bin: every codeword is
+    the single 1-bit code, so a zero signal packs 64 symbols per word."""
+    hist = np.zeros(256, dtype=np.int64)
+    hist[128] = 1000
+    book = build_codebook(hist, l_max=l_max)
+    assert book.num_active == 1 and int(book.lengths[128]) == 1
+    rng = np.random.default_rng(0)
+    quant = build_quant_table(
+        rng.standard_normal((64, e)), b1=2, b2=e, mu=50.0, alpha1=0.004,
+        percentile=99.9,
+    )
+    cfg = CodecConfig(n=n, e=e, b1=2, b2=e, l_max=l_max)
+    return DomainTables(
+        config=cfg, quant=quant, book=book, domain_id=domain_id
+    )

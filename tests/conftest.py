@@ -8,3 +8,16 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # make the _hypothesis_compat shim importable regardless of rootdir layout
 sys.path.insert(0, os.path.dirname(__file__))
+
+# CI runs the property suite under `--hypothesis-profile=ci`: enough
+# examples to exercise the strategies, bounded so the matrix leg stays
+# well under its time budget (each example may trigger fresh XLA bucket
+# compilations).
+try:
+    import hypothesis
+
+    hypothesis.settings.register_profile(
+        "ci", max_examples=15, deadline=None
+    )
+except ImportError:  # pragma: no cover - shim path (see _hypothesis_compat)
+    pass

@@ -1,0 +1,59 @@
+"""Regenerate the golden container fixtures.
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+Only run this when the container format version is INTENTIONALLY bumped or
+the golden construction itself changes — the whole point of the frozen
+blobs is that today's encoder reproduces them byte for byte, so a diff
+here is a format/packer regression until proven otherwise (see
+test_golden.py).
+"""
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(__file__), "..", "..", "src")
+)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from _synth import (  # noqa: E402
+    GOLDEN_DOMAINS,
+    container_v1_bytes,
+    golden_signal,
+    golden_tables,
+)
+from repro.core import encode  # noqa: E402
+
+
+def main():
+    out_dir = os.path.dirname(os.path.abspath(__file__))
+    for key, dom_id in GOLDEN_DOMAINS:
+        tables = golden_tables(key, dom_id)
+        syms, sig = golden_signal(tables)
+        container = encode(sig, tables)
+        got = syms.ravel()
+        import numpy as np
+
+        from repro.core.symlen import PackedStream, unpack_symlen_np
+
+        back = unpack_symlen_np(
+            PackedStream(
+                words=container.words,
+                symlen=container.symlen.astype(np.int32),
+                num_symbols=container.num_symbols,
+            ),
+            tables.book,
+        )
+        assert np.array_equal(back, got), key  # construction is exact
+        v2 = container.to_bytes()
+        v1 = container_v1_bytes(container)
+        with open(os.path.join(out_dir, f"{key}_v2.fptc"), "wb") as f:
+            f.write(v2)
+        with open(os.path.join(out_dir, f"{key}_v1.fptc"), "wb") as f:
+            f.write(v1)
+        print(f"{key}: {container.num_words} words, v2 {len(v2)} B, "
+              f"v1 {len(v1)} B")
+
+
+if __name__ == "__main__":
+    main()

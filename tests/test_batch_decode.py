@@ -1,19 +1,20 @@
 """BatchDecoder: parity vs the host decoder, bucket boundaries, compile
-bounds.  (Tentpole coverage for the batched bucketed decode engine.)"""
+bounds, and the pre-concatenated device-stream entry point.  (Tentpole
+coverage for the batched bucketed decode engine.)"""
 import numpy as np
 import pytest
 
+from _synth import uniform_code_container as _uniform_code_container
 from repro.core import DOMAIN_DEFAULTS, calibrate, decode, encode
-from repro.core.container import Container
-from repro.core.huffman import build_codebook
-from repro.core.quantize import build_quant_table
-from repro.core.symlen import pack_symlen_np, unpack_symlen_np, PackedStream
+from repro.core.symlen import unpack_symlen_np, PackedStream
 from repro.data import make_signal
 from repro.serving.batch_decode import (
     BatchDecoder,
+    StreamGroup,
     _p2,
     _symlen_bucket,
     bucket_cache_size,
+    streams_from_containers,
 )
 
 
@@ -131,42 +132,6 @@ def test_bit_exact_symbol_parity(power_tables, meteo_tables):
     np.testing.assert_array_equal(np.asarray(got), ref)
 
 
-def _uniform_code_container(num_words: int, n=8, e=8, l_max=8, seed=0):
-    """A synthetic container with EXACTLY ``num_words`` payload words.
-
-    A uniform 256-symbol histogram under l_max=8 yields a canonical code
-    where every codeword is 8 bits, so each 64-bit word holds exactly 8
-    symbols and word count is num_symbols / 8 precisely.  With n = e = 8,
-    one window is one word — letting tests hit bucket boundaries exactly.
-    """
-    rng = np.random.default_rng(seed)
-    hist = np.full(256, 10, dtype=np.int64)
-    book = build_codebook(hist, l_max=l_max)
-    assert int(book.lengths.max()) == 8 and int(book.lengths.min()) == 8
-    syms = rng.integers(0, 256, num_words * 8).astype(np.uint8)
-    stream = pack_symlen_np(syms, book)
-    assert stream.num_words == num_words
-    quant = build_quant_table(
-        rng.standard_normal((512, e)) * np.linspace(2.0, 0.2, e),
-        b1=2, b2=e, mu=50.0, alpha1=0.004, percentile=99.9,
-    )
-    from repro.core.calibration import DomainTables
-    from repro.core.config import CodecConfig
-
-    cfg = CodecConfig(n=n, e=e, b1=2, b2=e, l_max=l_max)
-    tables = DomainTables(config=cfg, quant=quant, book=book, domain_id=0)
-    num_windows = num_words  # 8 symbols per window == 8 symbols per word
-    container = Container(
-        words=stream.words,
-        symlen=stream.symlen.astype(np.uint8),
-        num_symbols=stream.num_symbols,
-        num_windows=num_windows,
-        signal_length=num_windows * n,
-        n=n, e=e, l_max=l_max, domain_id=0,
-    )
-    return container, tables
-
-
 @pytest.mark.parametrize("num_words", [255, 256, 257])
 def test_bucket_boundary_word_counts(num_words):
     """Exactly at / one over a power-of-two word count decodes correctly
@@ -258,3 +223,59 @@ def test_bucket_helpers():
     assert _symlen_bucket(33) == 40
     assert _symlen_bucket(64) == 64
     assert _symlen_bucket(100) == 64
+
+
+# ---------------------------------------------------------------------------
+# decode_streams: the pre-concatenated (device) stream entry point.
+# ---------------------------------------------------------------------------
+def test_decode_streams_matches_decode(power_tables, meteo_tables):
+    """Feeding streams_from_containers output through decode_streams gives
+    exactly what decode() gives (it IS decode's internal path), in group
+    member order."""
+    cs = [
+        encode(make_signal("temperature", 2048, seed=61), meteo_tables),
+        encode(make_signal("load_power", 4096, seed=62), power_tables),
+        encode(make_signal("temperature", 1000, seed=63), meteo_tables),
+    ]
+    tables = {0: power_tables, 1: meteo_tables}
+    groups, member_pos = streams_from_containers(cs)
+    assert [g.plan_key[0] for g in groups] == [1, 0]  # first-appearance order
+    assert member_pos == [0, 2, 1]  # meteo members first, then power
+
+    dec = BatchDecoder()
+    outs = dec.decode_streams(groups, tables).to_host()
+    ref = BatchDecoder().decode(cs, tables).to_host()
+    for i in range(len(cs)):
+        np.testing.assert_array_equal(outs[member_pos[i]], ref[i])
+
+
+def test_decode_streams_oversized_padding_is_harmless(power_tables):
+    """Extra zero words (symlen == 0) beyond the live stream — the situation
+    a bound-sized device stitch produces — decode to the same signals."""
+    import jax.numpy as jnp
+
+    c = encode(make_signal("load_power", 3000, seed=64), power_tables)
+    groups, _ = streams_from_containers([c])
+    g = groups[0]
+    pad = 277  # deliberately not a power of two
+    grp = StreamGroup(
+        plan_key=g.plan_key,
+        hi=jnp.pad(g.hi, (0, pad)),
+        lo=jnp.pad(g.lo, (0, pad)),
+        symlen=jnp.pad(g.symlen, (0, pad)),
+        max_symlen=64,  # a loose bound must also be safe
+        members=g.members,
+    )
+    out = BatchDecoder().decode_streams([grp], power_tables).to_host()[0]
+    # word-axis padding and a loose slot bound change integer work only —
+    # the decoded samples must match the unpadded engine bit for bit
+    ref = BatchDecoder().decode([c], power_tables).to_host()[0]
+    np.testing.assert_array_equal(out, ref)
+    np.testing.assert_allclose(out, decode(c, power_tables), atol=1e-4)
+
+
+def test_decode_streams_validates_tables(power_tables, meteo_tables):
+    c = encode(make_signal("load_power", 512, seed=65), power_tables)
+    groups, _ = streams_from_containers([c])
+    with pytest.raises(ValueError, match="plan_key"):
+        BatchDecoder().decode_streams(groups, meteo_tables)

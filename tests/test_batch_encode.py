@@ -162,6 +162,75 @@ def _gap_tables(n=8, e=8, l_max=8):
     return DomainTables(config=cfg, quant=quant, book=book, domain_id=0)
 
 
+def test_double_drain_raises(power_tables):
+    """Satellite bugfix: a second to_host() must fail loudly instead of
+    silently re-syncing possibly stale/donated device buffers."""
+    enc = BatchEncoder()
+    batch = enc.encode([make_signal("load_power", 2048, seed=70)],
+                       power_tables)
+    first = batch.to_host()
+    assert len(first) == 1
+    with pytest.raises(RuntimeError, match="already drained"):
+        batch.to_host()
+    # reading device parts after the drain is equally invalid
+    with pytest.raises(RuntimeError, match="already drained"):
+        batch.device_parts()
+
+
+def test_drain_after_transcode_donation_raises(power_tables, meteo_tables):
+    """Handing an EncodedBatch to a Transcoder consumes it: the stitched
+    buffers now feed the device pipeline, so a later drain must raise."""
+    from repro.serving import Transcoder
+
+    sig = make_signal("load_power", 2048, seed=71)
+    batch = BatchEncoder().encode([sig], power_tables)
+    out = Transcoder().transcode(batch, power_tables, meteo_tables)
+    with pytest.raises(RuntimeError, match="donated to a Transcoder"):
+        batch.to_host()
+    # the transcode result itself drains once, then raises too
+    assert len(out.to_host()) == 1
+    with pytest.raises(RuntimeError, match="already drained"):
+        out.to_host()
+
+
+def test_device_parts_expose_stream_contract(power_tables):
+    """device_parts + signal_slices are the device-resident mirror of
+    to_host(): stitching each signal's chunk runs reproduces the drained
+    containers' words exactly (no host sync needed to get there)."""
+    from repro.core import symlen as symlib
+
+    sigs = [
+        make_signal("load_power", n, seed=80 + i)
+        for i, n in enumerate([4096, 5000])
+    ]
+    enc = BatchEncoder(chunk_size=64)  # force several chunks per signal
+    batch = enc.encode(sigs, power_tables)
+    parts = batch.device_parts()
+    slices = batch.signal_slices()
+    assert len(slices) == len(sigs)
+    # per-signal word extents are device arrays summing words_per_chunk
+    for p in parts:
+        np.testing.assert_array_equal(
+            np.asarray(p.words_per_signal()),
+            np.asarray(p.words_per_chunk).sum(axis=1),
+        )
+    containers = batch.to_host()
+    for c, s in zip(containers, slices):
+        p = parts[s.bucket]
+        hi, lo, sl, nw = symlib.stitch_chunk_parts(
+            p.hi[s.row], p.lo[s.row], p.symlen[s.row],
+            p.words_per_chunk[s.row],
+            capacity=p.num_chunks * p.chunk_size,
+        )
+        nw = int(nw)
+        assert nw == c.num_words
+        np.testing.assert_array_equal(
+            symlib.u32_to_words(np.asarray(hi[:nw]), np.asarray(lo[:nw])),
+            c.words,
+        )
+        np.testing.assert_array_equal(np.asarray(sl[:nw]), c.symlen)
+
+
 def test_drain_raises_on_histogram_gap():
     """Satellite bugfix parity, batched arm: a symbol with no codeword must
     fail loudly at drain instead of emitting a garbage stream (the host
@@ -171,8 +240,13 @@ def test_drain_raises_on_histogram_gap():
     with pytest.raises(ValueError, match="no codeword"):
         encode(sig, tables)  # host oracle rejects
     enc = BatchEncoder()
+    batch = enc.encode([sig], tables)
     with pytest.raises(ValueError, match="histogram gap"):
-        enc.encode([sig], tables).to_host()
+        batch.to_host()
+    # a failed drain returned nothing, so a retry re-raises the REAL error
+    # (not a bogus "already drained")
+    with pytest.raises(ValueError, match="histogram gap"):
+        batch.to_host()
     # and a gap book with in-coverage data still encodes
     zeros = np.zeros(512, np.float32)
     cs = BatchEncoder().encode([zeros], tables).to_host()

@@ -1,0 +1,104 @@
+"""Golden bit-exactness fixtures: frozen v1 and v2 container blobs, one
+per domain (tests/golden/, regenerated only via tests/golden/regen.py).
+
+A tripwire for the container format and the chunked packer: today's
+encoder must reproduce the v2 bytes EXACTLY, and both container versions
+must keep reading and decoding identically.  Any diff here means the
+on-wire format changed — which is either an intentional version bump
+(regen the fixtures, document the bump) or a silent-corruption regression.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from _synth import (
+    GOLDEN_DOMAINS,
+    container_v1_bytes,
+    golden_signal,
+    golden_tables,
+)
+from repro.core import decode, decode_device, encode
+from repro.core.container import Container
+from repro.serving import BatchDecoder, BatchEncoder
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _blob(name):
+    with open(os.path.join(GOLDEN_DIR, name), "rb") as f:
+        return f.read()
+
+
+@pytest.mark.parametrize("domain_key,dom_id", GOLDEN_DOMAINS)
+def test_encoder_reproduces_v2_bytes(domain_key, dom_id):
+    """The host encoder — and the exact-mode batch engine — must emit the
+    frozen v2 blob byte for byte."""
+    tables = golden_tables(domain_key, dom_id)
+    syms, sig = golden_signal(tables)
+    container = encode(sig, tables)
+    assert container.to_bytes() == _blob(f"{domain_key}_v2.fptc")
+    batch = BatchEncoder(chunk_size=None).encode([sig], tables).to_host()[0]
+    assert batch.to_bytes() == _blob(f"{domain_key}_v2.fptc")
+
+
+@pytest.mark.parametrize("domain_key,dom_id", GOLDEN_DOMAINS)
+def test_v1_construction_matches_frozen(domain_key, dom_id):
+    """The v1 writer used for the fixtures is itself frozen: a drifting
+    legacy serializer would quietly invalidate the compatibility test."""
+    tables = golden_tables(domain_key, dom_id)
+    _, sig = golden_signal(tables)
+    container = encode(sig, tables)
+    assert container_v1_bytes(container) == _blob(f"{domain_key}_v1.fptc")
+
+
+@pytest.mark.parametrize("domain_key,dom_id", GOLDEN_DOMAINS)
+def test_both_versions_read_and_decode(domain_key, dom_id):
+    """from_bytes accepts v1 and v2; every decoder (host, device
+    batch-of-one, batch engine) reconstructs the same samples from both."""
+    tables = golden_tables(domain_key, dom_id)
+    c_v1 = Container.from_bytes(_blob(f"{domain_key}_v1.fptc"))
+    c_v2 = Container.from_bytes(_blob(f"{domain_key}_v2.fptc"))
+    np.testing.assert_array_equal(c_v1.words, c_v2.words)
+    np.testing.assert_array_equal(c_v1.symlen, c_v2.symlen)
+    assert c_v1.plan_key == c_v2.plan_key
+
+    ref = decode(c_v2, tables)
+    np.testing.assert_array_equal(decode(c_v1, tables), ref)
+    np.testing.assert_allclose(decode_device(c_v2, tables), ref, atol=1e-4)
+    outs = BatchDecoder().decode([c_v1, c_v2], tables).to_host()
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_allclose(outs[0], ref, atol=1e-4)
+
+
+@pytest.mark.parametrize("domain_key,dom_id", GOLDEN_DOMAINS)
+def test_golden_symbols_roundtrip(domain_key, dom_id):
+    """The inverse construction is exact: the frozen stream decodes to the
+    drawn symbols, so any future byte diff is a REAL encoding change, not
+    fixture noise."""
+    from repro.core.symlen import PackedStream, unpack_symlen_np
+
+    tables = golden_tables(domain_key, dom_id)
+    syms, _ = golden_signal(tables)
+    c = Container.from_bytes(_blob(f"{domain_key}_v2.fptc"))
+    back = unpack_symlen_np(
+        PackedStream(
+            words=c.words, symlen=c.symlen.astype(np.int32),
+            num_symbols=c.num_symbols,
+        ),
+        tables.book,
+    )
+    np.testing.assert_array_equal(back, syms.ravel())
+
+
+def test_corrupt_golden_blob_rejected():
+    """Bit flips in the frozen payload fail the CRC on v2, and the header
+    magic check everywhere."""
+    blob = bytearray(_blob("power_v2.fptc"))
+    blob[60] ^= 0x40  # payload word flip
+    with pytest.raises(ValueError, match="CRC"):
+        Container.from_bytes(bytes(blob))
+    blob = bytearray(_blob("power_v2.fptc"))
+    blob[0] ^= 0xFF
+    with pytest.raises(ValueError, match="magic"):
+        Container.from_bytes(bytes(blob))

@@ -1,0 +1,256 @@
+"""Property-based round-trip suite (via the _hypothesis_compat shim).
+
+Two families of properties, each with pinned regression cases that run
+even without hypothesis installed (the @given variants skip through the
+shim and execute for real on the CI leg that installs ``.[test]``):
+
+  * ``encode -> transcode -> decode`` over drawn (signal length, n, e,
+    l_max, chunk size): the transcoded container is byte-identical to the
+    host round trip, and the re-quantization error it introduces is
+    bounded by the target quantizer's zone cell widths.
+  * ``pack_symlen_chunked`` output always unpacks — bit-exactly — under
+    both the serial host decoder (``unpack_symlen_np``) and the Pallas
+    ``huffman_decode_tile`` kernel (interpret mode).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import decode, encode
+from repro.core.calibration import DomainTables
+from repro.core.config import CodecConfig
+from repro.core.dct import forward_dct, window_signal
+from repro.core.huffman import build_codebook
+from repro.core.quantize import (
+    build_quant_table,
+    dequantize,
+    quant_grid,
+    quantize,
+)
+from repro.core.symlen import (
+    PackedStream,
+    compact_padded_scatter,
+    pack_symlen_chunked,
+    u32_to_words,
+    unpack_symlen_np,
+    words_to_u32,
+)
+from repro.serving import BatchDecoder, BatchEncoder, Transcoder
+
+
+# ---------------------------------------------------------------------------
+# Deterministic synthetic domains (no dataset dependence, fast to build).
+# ---------------------------------------------------------------------------
+def _walk(rng, length, scale=8.0):
+    """A random-walk strip: smooth enough to compress, rough enough to
+    populate many quantizer levels."""
+    if length == 0:
+        return np.empty(0, np.float32)
+    return np.cumsum(
+        rng.standard_normal(length).astype(np.float32)
+    ) * np.float32(scale / max(length, 1) ** 0.5)
+
+
+def _tables(seed, n, e, l_max, domain_id=0):
+    """Calibration in miniature: quant table from a calibration walk's
+    coefficient percentiles, codebook from its (Laplace-smoothed) symbol
+    histogram — every uint8 symbol encodable, b2 == e so no zone-2 bins
+    (whose 'cell width' is the whole coefficient range and would make the
+    error-bound property vacuous)."""
+    rng = np.random.default_rng(seed)
+    calib = _walk(rng, 4096)
+    coeffs = np.asarray(forward_dct(window_signal(jnp.asarray(calib), n), e))
+    quant = build_quant_table(
+        coeffs, b1=min(2, e), b2=e, mu=50.0, alpha1=0.004, percentile=99.5,
+        scale_headroom=1.25,
+    )
+    syms = np.asarray(quantize(jnp.asarray(coeffs), quant)).ravel()
+    hist = np.bincount(syms, minlength=256).astype(np.int64) + 1
+    book = build_codebook(hist, l_max=l_max)
+    cfg = CodecConfig(n=n, e=e, b1=min(2, e), b2=e, l_max=l_max)
+    return DomainTables(
+        config=cfg, quant=quant, book=book, domain_id=domain_id
+    )
+
+
+def _cell_width_bound(quant):
+    """Per-bin upper bound on the reconstruction error of one quantize ->
+    dequantize pass for in-range coefficients: the largest gap between
+    adjacent reconstruction levels (midpoint reconstruction keeps every
+    in-cell point within one level gap of its reconstruction)."""
+    grid, _ = quant_grid(quant)
+    grid = np.sort(np.asarray(grid), axis=1)  # [E, 256]
+    return np.max(np.diff(grid, axis=1), axis=1)  # [E]
+
+
+# ---------------------------------------------------------------------------
+# Property 1: encode -> transcode -> decode.
+# ---------------------------------------------------------------------------
+def check_transcode_roundtrip(seed, length, n_src, e_src, l_max_src,
+                              n_dst, e_dst, chunk_size):
+    rng = np.random.default_rng(seed)
+    src_tab = _tables(seed, n_src, e_src, l_max_src, domain_id=0)
+    dst_tab = _tables(seed + 1, n_dst, e_dst, 12, domain_id=1)
+    sig = _walk(rng, length)
+
+    c_src = encode(sig, src_tab)
+    tc = Transcoder(chunk_size=chunk_size)
+    out = tc.transcode_to_host([c_src], src_tab, dst_tab)[0]
+
+    # byte-identity vs the host round trip at the same chunk size
+    src_rec = BatchDecoder().decode([c_src], src_tab).to_host()[0]
+    ref = BatchEncoder(chunk_size=chunk_size).encode(
+        [src_rec], dst_tab
+    ).to_host()[0]
+    assert out.to_bytes() == ref.to_bytes()
+
+    # reconstruction error bound: re-quantizing the decoded source signal
+    # under the target tables moves each retained coefficient by at most
+    # one quantizer cell (plus any clip excess beyond the calibrated
+    # scale)
+    if length == 0:
+        return
+    coeffs = np.asarray(forward_dct(
+        window_signal(jnp.asarray(src_rec), n_dst), e_dst
+    ))  # [W, E] target-side coefficients of the signal that was re-encoded
+    stream = PackedStream(
+        words=out.words, symlen=out.symlen.astype(np.int32),
+        num_symbols=out.num_symbols,
+    )
+    syms = unpack_symlen_np(stream, dst_tab.book)
+    coeffs_hat = np.asarray(dequantize(
+        jnp.asarray(syms.reshape(out.num_windows, e_dst)), dst_tab.quant
+    ))
+    err = np.abs(coeffs_hat - coeffs)
+    scale = np.asarray(dst_tab.quant.scale)
+    clip_excess = np.maximum(np.abs(coeffs) - scale[None, :], 0.0)
+    bound = _cell_width_bound(dst_tab.quant)[None, :] * (1 + 1e-3) + (
+        clip_excess + 1e-4
+    )
+    assert np.all(err <= bound), (
+        f"requantization error {err.max()} exceeds zone cell bound at "
+        f"{np.unravel_index(np.argmax(err - bound), err.shape)}"
+    )
+
+    # end to end: the transcoded container still decodes everywhere
+    rec = decode(out, dst_tab)
+    assert rec.shape == sig.shape
+
+
+@pytest.mark.parametrize(
+    "seed,length,n_src,e_src,l_max_src,n_dst,e_dst,chunk",
+    [
+        (0, 1000, 32, 8, 12, 16, 16, 64),
+        (1, 257, 8, 4, 8, 32, 8, 7),
+        (2, 2000, 16, 16, 16, 8, 2, 1024),
+        (3, 5, 32, 6, 10, 8, 8, 33),
+        (4, 0, 8, 8, 12, 16, 4, 16),  # empty signal
+    ],
+)
+def test_transcode_roundtrip_pinned(seed, length, n_src, e_src, l_max_src,
+                                    n_dst, e_dst, chunk):
+    """Pinned draws of the property below — run with or without
+    hypothesis."""
+    check_transcode_roundtrip(
+        seed, length, n_src, e_src, l_max_src, n_dst, e_dst, chunk
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(0, 2**16),
+    st.integers(0, 2000),
+    st.sampled_from([8, 16, 32]),
+    st.sampled_from([2, 4, 8]),
+    st.sampled_from([8, 12, 16]),
+    st.sampled_from([8, 16, 32]),
+    st.sampled_from([2, 4, 8]),
+    st.integers(1, 300),
+)
+def test_transcode_roundtrip_property(seed, length, n_src, e_div, l_max_src,
+                                      n_dst, e_div_dst, chunk):
+    # e drawn as a divisor of n so every (n, e) pairing is valid
+    check_transcode_roundtrip(
+        seed, length, n_src, max(n_src // e_div, 1), l_max_src,
+        n_dst, max(n_dst // e_div_dst, 1), chunk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Property 2: chunked pack -> (serial | Pallas-interpret) unpack.
+# ---------------------------------------------------------------------------
+def check_chunked_pack_unpacks_everywhere(seed, num_symbols, chunk_size,
+                                          l_max):
+    rng = np.random.default_rng(seed)
+    raw = rng.zipf(1.3, max(num_symbols, 1))[:num_symbols]
+    syms = np.clip(raw, 0, 255).astype(np.uint8)
+    freqs = np.bincount(syms, minlength=256).astype(np.int64) + 1
+    book = build_codebook(freqs, l_max=l_max)
+
+    hi, lo, sl, nw = pack_symlen_chunked(
+        jnp.asarray(syms),
+        jnp.asarray(book.codes, jnp.uint32),
+        jnp.asarray(book.lengths, jnp.int32),
+        chunk_size=chunk_size,
+    )
+    nw = int(nw)
+    hi, lo = np.asarray(hi[:nw]), np.asarray(lo[:nw])
+    sl = np.asarray(sl[:nw])
+
+    # serial host decoder
+    stream = PackedStream(
+        words=u32_to_words(hi, lo), symlen=sl, num_symbols=syms.size
+    )
+    np.testing.assert_array_equal(unpack_symlen_np(stream, book), syms)
+
+    # Pallas kernel (interpret mode), slot-major tile + scatter compaction
+    if nw == 0:
+        return
+    from repro.kernels.huffman_decode import huffman_decode_tile
+
+    max_symlen = int(sl.max()) if sl.size else 0
+    tile = huffman_decode_tile(
+        jnp.asarray(hi), jnp.asarray(lo),
+        jnp.asarray(book.limit_shifted[1:], jnp.uint32),
+        jnp.asarray(book.first_code_shifted, jnp.uint32),
+        jnp.asarray(book.rank_offset, jnp.int32),
+        jnp.asarray(book.sorted_symbols, jnp.int32),
+        l_max=book.l_max,
+        max_symlen=max(max_symlen, 1),
+        block_words=64,
+        interpret=True,
+    )
+    got = compact_padded_scatter(
+        tile.T, jnp.asarray(sl), int(syms.size)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got).astype(np.uint8), syms
+    )
+
+
+@pytest.mark.parametrize(
+    "seed,num_symbols,chunk,l_max",
+    [
+        (10, 2000, 64, 12),
+        (11, 63, 7, 8),
+        (12, 4096, 1024, 16),
+        (13, 1, 1, 9),
+        (14, 500, 501, 10),  # single chunk larger than the stream
+    ],
+)
+def test_chunked_pack_unpacks_everywhere_pinned(seed, num_symbols, chunk,
+                                                l_max):
+    check_chunked_pack_unpacks_everywhere(seed, num_symbols, chunk, l_max)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(0, 2**16),
+    st.integers(1, 3000),
+    st.integers(1, 600),
+    st.integers(8, 16),
+)
+def test_chunked_pack_unpacks_everywhere_property(seed, num_symbols, chunk,
+                                                  l_max):
+    check_chunked_pack_unpacks_everywhere(seed, num_symbols, chunk, l_max)

@@ -1,0 +1,345 @@
+"""Transcoder conformance: device-resident decode->re-encode must be
+byte-identical to the host round trip (decode to host, re-encode), with
+zero device->host syncs in between — over every (domain, config) pair in
+the test tables, mixed-domain batches straddling bucket boundaries, and
+the degenerate inputs of test_degenerate.py.  (Tentpole coverage for the
+transcode pipeline.)"""
+import jax
+import numpy as np
+import pytest
+
+from _synth import gap_tables, single_symbol_tables, uniform_code_container
+from repro.core import (
+    DOMAIN_DEFAULTS,
+    calibrate,
+    decode,
+    encode,
+    transcode as codec_transcode,
+)
+from repro.serving import (
+    BatchDecoder,
+    BatchEncoder,
+    Transcoder,
+)
+from repro.serving.batch_encode import DEFAULT_CHUNK_SIZE
+
+# (domain_id, dataset, DOMAIN_DEFAULTS key): one calibrated table set per
+# (domain, config) pair under test — distinct n/e/l_max operating points
+_DOMAINS = [
+    (0, "load_power", "power"),
+    (1, "temperature", "meteorological"),
+    (2, "mitbih", "biomedical"),
+]
+_LENGTHS = [2048, 1533, 700]  # mixed window buckets, one sub-window tail
+
+
+@pytest.fixture(scope="module")
+def domain_tables():
+    from repro.data import make_signal
+
+    out = {}
+    for dom_id, dataset, key in _DOMAINS:
+        out[dom_id] = calibrate(
+            make_signal(dataset, 65536, seed=7 + dom_id),
+            DOMAIN_DEFAULTS[key],
+            domain_id=dom_id,
+        )
+    return out
+
+
+def _src_containers(dom_id, tables):
+    from repro.data import make_signal
+
+    dataset = next(ds for d, ds, _ in _DOMAINS if d == dom_id)
+    sigs = [
+        make_signal(dataset, n, seed=100 * dom_id + i)
+        for i, n in enumerate(_LENGTHS)
+    ]
+    return [encode(s, tables[dom_id]) for s in sigs]
+
+
+def _reference(containers, src_tables, dst_tables, *, dst_domain_ids=None,
+               chunk_size=DEFAULT_CHUNK_SIZE, use_kernels=False):
+    """The host round trip the Transcoder must reproduce byte for byte:
+    batch-decode to host signals, then batch re-encode them (same packing
+    chunk size as the transcoder's encoder — Transcoder() defaults to
+    DEFAULT_CHUNK_SIZE)."""
+    sigs = BatchDecoder(use_kernels=use_kernels).decode(
+        containers, src_tables
+    ).to_host()
+    return BatchEncoder(chunk_size=chunk_size).encode(
+        sigs, dst_tables, domain_ids=dst_domain_ids
+    ).to_host()
+
+
+def _assert_identical(got, ref):
+    assert len(got) == len(ref)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a.words, b.words)
+        np.testing.assert_array_equal(a.symlen, b.symlen)
+        assert a.num_symbols == b.num_symbols
+        assert a.num_windows == b.num_windows
+        assert a.signal_length == b.signal_length
+        assert a.plan_key == b.plan_key
+        assert a.to_bytes() == b.to_bytes()
+
+
+@pytest.mark.parametrize("src_dom", [d for d, _, _ in _DOMAINS])
+@pytest.mark.parametrize("dst_dom", [d for d, _, _ in _DOMAINS])
+def test_conformance_every_domain_pair(domain_tables, src_dom, dst_dom):
+    """Acceptance: for every (domain, config) source/target pairing,
+    Transcoder output containers are byte-identical to the host round
+    trip, with zero device->host transfers between decode and re-encode."""
+    containers = _src_containers(src_dom, domain_tables)
+    src = domain_tables[src_dom]
+    dst = domain_tables[dst_dom]
+    ref = _reference(containers, src, dst)
+
+    tc = Transcoder()
+    with jax.transfer_guard_device_to_host("disallow"):
+        batch = tc.transcode(containers, src, dst)
+    _assert_identical(batch.to_host(), ref)
+
+
+@pytest.mark.parametrize("chunk_size", [None, 64])
+def test_conformance_explicit_chunk_sizes(domain_tables, chunk_size):
+    """Exact mode (None) and a chunk size small enough to force multi-chunk
+    re-packing both stay byte-identical to the equally-configured round
+    trip."""
+    containers = _src_containers(0, domain_tables)
+    src, dst = domain_tables[0], domain_tables[2]
+    ref = _reference(containers, src, dst, chunk_size=chunk_size)
+    got = Transcoder(chunk_size=chunk_size).transcode_to_host(
+        containers, src, dst
+    )
+    _assert_identical(got, ref)
+
+
+def test_mixed_domain_batch_straddling_bucket_boundaries(domain_tables):
+    """A mixed-domain archive whose per-group word counts land exactly at /
+    one over a power of two (255/256/257 words): padding words must
+    contribute no symbols through the whole transcode pipeline."""
+    c255, t255 = uniform_code_container(255, seed=255, domain_id=10)
+    c256, t256 = uniform_code_container(256, seed=256, domain_id=11)
+    c257, _ = uniform_code_container(257, seed=257, domain_id=10)
+    containers = [c255, c256, c257]
+    src = {10: t255, 11: t256}
+    dst = domain_tables[1]
+
+    ref = _reference(containers, src, dst)
+    tc = Transcoder()
+    with jax.transfer_guard_device_to_host("disallow"):
+        batch = tc.transcode(containers, src, dst)
+    _assert_identical(batch.to_host(), ref)
+
+
+def test_degenerate_inputs(domain_tables):
+    """test_degenerate.py's pathological shapes through the transcoder:
+    empty signal, shorter-than-one-window signal, single-symbol alphabet."""
+    power = domain_tables[0]
+    n = power.config.n
+    from repro.data import make_signal
+
+    sub_window = make_signal("load_power", n // 4, seed=3)
+    containers = [
+        encode(np.empty(0, np.float32), power),
+        encode(sub_window, power),
+    ]
+    ref = _reference(containers, power, domain_tables[1])
+    got = Transcoder().transcode_to_host(containers, power, domain_tables[1])
+    _assert_identical(got, ref)
+    assert got[0].num_windows == 0 and got[0].num_words == 0
+
+    # single-symbol alphabet: 1-bit codes, 64 symbols per word
+    ss = single_symbol_tables(domain_id=5)
+    c = encode(np.zeros(100, np.float32), ss)
+    ref = _reference([c], ss, power)
+    got = Transcoder().transcode_to_host([c], ss, power)
+    _assert_identical(got, ref)
+    rec = decode(got[0], power)
+    np.testing.assert_allclose(rec, np.zeros(100, np.float32), atol=1e-5)
+
+
+def test_encoded_batch_source_multi_chunk(domain_tables):
+    """The EncodedBatch source path: un-stitched chunk parts feed the
+    decoder through the device-side stitch (chunk_size small enough that
+    every signal spans many chunks), byte-identical to draining the batch
+    to containers and round-tripping those."""
+    from repro.data import make_signal
+
+    sigs = [
+        make_signal("load_power", n, seed=40 + i)
+        for i, n in enumerate([4096, 3001, 500])
+    ]
+    power, dst = domain_tables[0], domain_tables[2]
+
+    # reference: an identically-encoded batch drained to containers, then
+    # the host round trip
+    ref_containers = BatchEncoder(chunk_size=32).encode(
+        sigs, power
+    ).to_host()
+    ref = _reference(ref_containers, power, dst)
+
+    batch = BatchEncoder(chunk_size=32).encode(sigs, power)
+    tc = Transcoder()
+    with jax.transfer_guard_device_to_host("disallow"):
+        out = tc.transcode(batch, power, dst)
+    assert tc.stats.stitches >= 1
+    _assert_identical(out.to_host(), ref)
+
+    # the source batch was consumed by the stitch
+    with pytest.raises(RuntimeError, match="donated"):
+        batch.to_host()
+
+
+def test_encoded_batch_source_mixed_domains(domain_tables):
+    """Mixed-domain EncodedBatch source: several encode buckets per
+    plan_key merge into per-(domain, config) decode groups."""
+    from repro.data import make_signal
+
+    sigs, doms = [], []
+    for i, n in enumerate([2048, 1000, 3000, 257 * 8]):
+        dom = i % 2
+        ds = "load_power" if dom == 0 else "temperature"
+        sigs.append(make_signal(ds, n, seed=50 + i))
+        doms.append(dom)
+    src = {0: domain_tables[0], 1: domain_tables[1]}
+    dst = domain_tables[1]
+
+    ref_containers = BatchEncoder(chunk_size=128).encode(
+        sigs, src, domain_ids=doms
+    ).to_host()
+    ref = _reference(ref_containers, src, dst)
+
+    batch = BatchEncoder(chunk_size=128).encode(sigs, src, domain_ids=doms)
+    got = Transcoder().transcode_to_host(batch, src, dst)
+    _assert_identical(got, ref)
+
+
+def test_dst_domain_routing(domain_tables):
+    """Mapping dst_tables: explicit per-signal routing, and the default
+    (source domain ids) when dst_domain_ids is omitted."""
+    containers = (
+        _src_containers(0, domain_tables) + _src_containers(1, domain_tables)
+    )
+    src = {0: domain_tables[0], 1: domain_tables[1]}
+
+    # default routing: re-encode each signal under its own domain's tables
+    ref = _reference(
+        containers, src, src, dst_domain_ids=[0] * 3 + [1] * 3
+    )
+    got = Transcoder().transcode_to_host(containers, src, src)
+    _assert_identical(got, ref)
+    assert [c.domain_id for c in got] == [0] * 3 + [1] * 3
+
+    # explicit cross-routing: swap the domains
+    swap = [1] * 3 + [0] * 3
+    ref = _reference(containers, src, src, dst_domain_ids=swap)
+    got = Transcoder().transcode_to_host(
+        containers, src, src, dst_domain_ids=swap
+    )
+    _assert_identical(got, ref)
+    assert [c.domain_id for c in got] == swap
+
+
+def test_use_kernels_parity(domain_tables):
+    """Pallas (interpret) decode inside the transcoder matches the kernel
+    round trip byte for byte."""
+    containers = _src_containers(0, domain_tables)[:2]
+    src, dst = domain_tables[0], domain_tables[1]
+    ref = _reference(containers, src, dst, use_kernels=True)
+    got = Transcoder(use_kernels=True).transcode_to_host(
+        containers, src, dst
+    )
+    _assert_identical(got, ref)
+
+
+def test_codec_transcode_batch_of_one(domain_tables):
+    """core.codec.transcode is the exact-mode container-of-one wrapper."""
+    c = _src_containers(0, domain_tables)[0]
+    src, dst = domain_tables[0], domain_tables[1]
+    got = codec_transcode(c, src, dst)
+    ref = _reference([c], src, dst, chunk_size=None)[0]
+    np.testing.assert_array_equal(got.words, ref.words)
+    np.testing.assert_array_equal(got.symlen, ref.symlen)
+    # and exact mode means the output matches the host encoder bit for bit
+    sig = BatchDecoder().decode([c], src).to_host()[0]
+    host = encode(sig, dst)
+    np.testing.assert_array_equal(got.words, host.words)
+
+
+def test_transcoded_containers_decode_everywhere(domain_tables):
+    """Transcoded containers are ordinary containers: both the host
+    decoder and the batch decoder read them, and the reconstruction stays
+    within the error of re-quantizing the decoded signal."""
+    containers = _src_containers(1, domain_tables)
+    src, dst = domain_tables[1], domain_tables[0]
+    got = Transcoder().transcode_to_host(containers, src, dst)
+    sigs = BatchDecoder().decode(containers, src).to_host()
+    for c, sig in zip(got, sigs):
+        host_rec = decode(c, dst)
+        ref_rec = decode(encode(sig, dst), dst)
+        np.testing.assert_allclose(host_rec, ref_rec, atol=1e-5)
+        outs = BatchDecoder().decode([c], dst).to_host()[0]
+        np.testing.assert_allclose(outs, host_rec, atol=1e-4)
+
+
+def test_empty_batch(domain_tables):
+    tc = Transcoder()
+    out = tc.transcode([], domain_tables[0], domain_tables[1])
+    assert len(out) == 0 and out.to_host() == []
+
+
+def test_failed_transcode_leaves_source_drainable(domain_tables):
+    """A transcode that dies on bad routing must NOT consume the source
+    batch — the archive stays drainable after, say, a tables-mapping
+    typo."""
+    power = domain_tables[0]
+    sig_batch = BatchEncoder().encode(
+        [np.cumsum(np.ones(512, np.float32))], power
+    )
+    with pytest.raises(KeyError, match="domain_id=0"):
+        # dst mapping has no entry for the defaulted dst domain id (0)
+        Transcoder().transcode(sig_batch, power, {5: domain_tables[1]})
+    assert len(sig_batch.to_host()) == 1  # still drainable
+
+
+def test_chained_transcode_propagates_gap_flags(domain_tables):
+    """A histogram-gap flag survives ANY number of device-resident hops:
+    transcoding a bad batch (and transcoding the result again) must still
+    fail loudly at the final drain, never laundering the garbage stream
+    into clean containers."""
+    bad_tables = gap_tables(domain_id=7)
+    sig = np.sin(np.linspace(0, 30, 512)).astype(np.float32) * 5
+    batch = BatchEncoder().encode([sig], bad_tables)  # device-side bad flag
+    dst1, dst2 = domain_tables[0], domain_tables[1]
+
+    once = Transcoder().transcode(batch, bad_tables, dst1)
+    twice = Transcoder().transcode(once, dst1, dst2)
+    with pytest.raises(ValueError, match="histogram gap"):
+        twice.to_host()
+
+
+def test_plan_pairing_cache(domain_tables):
+    """TranscodePlan pairs the decode/encode plans under one key and is
+    reused across batches."""
+    src, dst = domain_tables[0], domain_tables[1]
+    tc = Transcoder()
+    plan = tc.plan_for(src, dst)
+    assert plan.src_key == (0, src.config.n, src.config.e, src.config.l_max)
+    assert plan.dst_key == (1, dst.config.n, dst.config.e, dst.config.l_max)
+    assert plan.decode.n == src.config.n
+    assert plan.encode.n == dst.config.n
+
+    containers = _src_containers(0, domain_tables)
+    tc.transcode(containers, src, dst).to_host()
+    misses_after_first = tc._plans.misses
+    tc.transcode(containers, src, dst).to_host()
+    assert tc._plans.misses == misses_after_first  # pure cache hits
+    assert tc.stats.batches == 2
+    assert tc.stats.signals == 2 * len(containers)
+    # the pairing shares device state with the engines' own caches
+    assert plan.decode is tc.decoder._plans.get(
+        src, plan.src_key
+    )
+    assert plan.encode is tc.encoder.plan_for(dst)
