@@ -20,6 +20,13 @@ re-encode composed ON DEVICE — no decoded-signal drain, no host re-stage,
 byte-identical to the decode-to-host-then-re-encode round trip, one drain
 at the end.
 
+All three stages ride the shared serving-engine layer
+(``repro.serving.engine``): bucket staging/upload double-buffers against
+device compute (``--no-pipeline`` to compare against the strict serial
+loop), and with more than one visible device each bucket's batch axis
+shards across them (try ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+to fake a 4-device host on CPU) — neither changes a single output byte.
+
   PYTHONPATH=src python examples/signal_archive_service.py [--fleet 8]
 """
 import argparse
@@ -31,7 +38,12 @@ from repro.core import DOMAIN_DEFAULTS, calibrate
 from repro.core.metrics import prd
 from repro.data import SignalPipeline, make_signal
 from repro.data.signals import domain_of
-from repro.serving import BatchDecoder, BatchEncoder, Transcoder
+from repro.serving import (
+    BatchDecoder,
+    BatchEncoder,
+    Transcoder,
+    serving_devices,
+)
 
 
 def main():
@@ -39,7 +51,17 @@ def main():
     ap.add_argument("--fleet", type=int, default=8)
     ap.add_argument("--dataset", default="temperature")
     ap.add_argument("--strip", type=int, default=65536)
+    ap.add_argument(
+        "--no-pipeline", action="store_true",
+        help="disable the double-buffered bucket staging (serial loop)",
+    )
     args = ap.parse_args()
+    pipeline = not args.no_pipeline
+
+    shards = serving_devices("auto")
+    print(f"serving engines: pipeline={'on' if pipeline else 'off'}, "
+          f"{len(shards)} shard(s)"
+          + ("" if shards == (None,) else f" over {list(shards)}"))
 
     dom = domain_of(args.dataset)
     tables = calibrate(
@@ -59,7 +81,7 @@ def main():
         originals.append(pipe.strip(0))
 
     # --- server-side batched ingest ---------------------------------------
-    encoder = BatchEncoder()
+    encoder = BatchEncoder(pipeline=pipeline)
     t0 = time.time()
     containers = encoder.encode(originals, tables).to_host()
     archive = [c.to_bytes() for c in containers]
@@ -73,7 +95,7 @@ def main():
     # --- server-side batch decompression ----------------------------------
     from repro.core.container import Container
 
-    decoder = BatchDecoder()
+    decoder = BatchDecoder(pipeline=pipeline)
     t0 = time.time()
     containers = [Container.from_bytes(blob) for blob in archive]
     batch = decoder.decode(containers, tables)  # fused dispatch(es), on device
@@ -105,7 +127,7 @@ def main():
         domain_id=tables.domain_id + 1,
     )
 
-    transcoder = Transcoder()
+    transcoder = Transcoder(pipeline=pipeline)
     t0 = time.time()
     migrated = transcoder.transcode(containers, tables, cold_tables)
     cold_archive = [c.to_bytes() for c in migrated.to_host()]  # one drain

@@ -50,6 +50,7 @@ __all__ = [
     "pack_symlen_chunked",
     "pack_symlen_chunked_parts",
     "stitch_chunk_parts",
+    "stitch_capacity",
     "chunk_words_bound",
     "unpack_symlen_np",
     "unpack_symlen",
@@ -379,6 +380,25 @@ def chunk_words_bound(chunk_size: int, l_max: int) -> int:
     return min(int(chunk_size), (int(chunk_size) - 1) // s_min + 1)
 
 
+# Stitched-stream capacities quantize to this grid so jit specializations of
+# downstream decode stay O(log sizes) even when capacities are exact counts.
+STITCH_CAPACITY_GRID = 256
+
+
+def stitch_capacity(words: int, *, grid: int = STITCH_CAPACITY_GRID) -> int:
+    """Round a stitched-stream word capacity up to the compile grid.
+
+    ``words`` may be the static worst-case bound (``chunk_words_bound``
+    summed over chunks) or — when the caller tolerates one pre-decode sync
+    on ``words_per_chunk`` — the exact packed word count; the grid bounds
+    the number of distinct static capacities (hence XLA specializations of
+    the bucket decode) either way.  Deliberately NOT a power of two: the
+    bound is already ~2-3x the true word count and decode slot work is
+    linear in capacity, so p2 rounding on top would double it again.
+    """
+    return -(-max(int(words), 1) // grid) * grid
+
+
 @functools.partial(jax.jit, static_argnames=("capacity",))
 def stitch_chunk_parts(
     chunk_hi: jnp.ndarray,  # uint32[B, C]
@@ -400,7 +420,11 @@ def stitch_chunk_parts(
 
     ``capacity`` must be a static host-side bound on the total word count
     (exact counts are device-resident); :func:`chunk_words_bound` gives a
-    safe per-chunk bound.  Multi-signal chunk parts ``[K, B, C]`` stitch to
+    safe per-chunk bound and :func:`stitch_capacity` the compile-grid
+    rounding the serving executor's staging contract expects (its inputs
+    may live on any shard's device — the stitch follows them, so per-shard
+    streams never leave their device).  Multi-signal chunk parts
+    ``[K, B, C]`` stitch to
     one concatenated multi-signal stream by reshaping to ``[K * B, C]`` —
     row order is signal order, so the segment structure the symlen sidecar
     induces matches the per-signal window metadata.

@@ -13,6 +13,12 @@ from repro.serving.batch_encode import (
     EncodePlan,
     default_encoder,
 )
+from repro.serving.engine import (
+    BucketScheduler,
+    GatherStage,
+    PipelineExecutor,
+    serving_devices,
+)
 from repro.serving.kv_compression import (
     KVCompressionConfig,
     compress_kv_block,
@@ -39,6 +45,10 @@ __all__ = [
     "Transcoder",
     "TranscodePlan",
     "default_transcoder",
+    "BucketScheduler",
+    "GatherStage",
+    "PipelineExecutor",
+    "serving_devices",
     "KVCompressionConfig",
     "compress_kv_block",
     "decompress_kv_block",

@@ -3,16 +3,22 @@
 The engines memoize device-resident per-(domain, config) state — decode
 plans (tables + iDCT basis), encode plans (tables + gap flag), and
 transcode plans (a decode/encode plan pair) — keyed by (tables identity,
-plan_key).  Keying by ``id(tables)`` is safe only because each plan keeps
-its source :class:`DomainTables` alive (the ``source`` field, or the
-sub-plans' sources for a :class:`TranscodePlan`), so an id can never be
-reused while its cache entry exists.
+plan_key, shard device).  Keying by ``id(tables)`` is safe only because
+each plan keeps its source :class:`DomainTables` alive (the ``source``
+field, or the sub-plans' sources for a :class:`TranscodePlan`), so an id
+can never be reused while its cache entry exists.
+
+Shard-aware keys: with multi-device sharding each shard needs its own
+device-resident copy of the tables/bases, so the device a plan was built
+for is part of the cache key and the factory receives it
+(``factory(tables, key, device)``); ``device=None`` is the single-shard
+default placement and behaves exactly like the pre-sharding cache.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Callable, Tuple, TypeVar
+from typing import Any, Callable, Tuple, TypeVar
 
 Plan = TypeVar("Plan")
 PlanKey = Tuple[int, int, int, int]  # (domain_id, n, e, l_max)
@@ -52,19 +58,19 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
 
-    def get(self, tables, key) -> Plan:
+    def get(self, tables, key, device: Any = None) -> Plan:
         ident = (
             tuple(id(t) for t in tables)
             if isinstance(tables, tuple) else id(tables)
         )
-        cache_key = (ident, key)
+        cache_key = (ident, key, device)
         plan = self._plans.get(cache_key)
         if plan is not None:
             self._plans.move_to_end(cache_key)
             self.hits += 1
             return plan
         self.misses += 1
-        plan = self._factory(tables, key)
+        plan = self._factory(tables, key, device)
         self._plans[cache_key] = plan
         while len(self._plans) > self.maxsize:
             self._plans.popitem(last=False)

@@ -25,9 +25,17 @@ This module removes all three:
     symlen sidecar (``core.symlen.compact_padded_scatter``) — container
     boundaries fall out of the segment sums for free.
   * **Persistent decode plans.**  Device tables and the iDCT basis upload
-    once per (domain, config) into an LRU :class:`DecodePlan` cache; decoded
-    samples stay on device inside a :class:`DecodedBatch` until an explicit
-    ``.to_host()`` drains them.
+    once per (domain, config, shard device) into an LRU :class:`DecodePlan`
+    cache; decoded samples stay on device inside a :class:`DecodedBatch`
+    until an explicit ``.to_host()`` drains them.
+
+Scheduling, double-buffered pipelining and multi-device sharding live in
+the shared :mod:`repro.serving.engine` layer: host staging + h2d upload of
+bucket k+1 overlap device compute of bucket k, and with several visible
+devices each (domain, config) group's containers split into per-device
+shards (streams are per-signal independent, so sharding is embarrassingly
+parallel).  Neither changes the produced bytes — padding is invisible to
+decoded samples and dispatch order is deterministic.
 
 ``core.codec.decode_device`` is a batch-of-one wrapper over this engine, so
 every existing caller rides the same path.
@@ -36,7 +44,17 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from collections import deque
+from typing import (
+    Callable,
+    Dict,
+    List,
+    Mapping,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +66,16 @@ from repro.core.codec import validate_container_tables
 from repro.core.container import Container
 from repro.core.quantize import dequantize
 from repro.serving._plans import PlanCache
+from repro.serving.engine import (
+    BucketScheduler,
+    DevicesArg,
+    PipelineExecutor,
+    fetch_to_host,
+    member_positions,
+    p2,
+    putter,
+    symlen_bucket,
+)
 
 __all__ = [
     "BatchDecoder",
@@ -59,36 +87,20 @@ __all__ = [
     "bucket_cache_size",
 ]
 
-_MAX_SYMLEN_CAP = 64  # a 64-bit word holds at most 64 one-bit codes
-
 TablesArg = Union[DomainTables, Mapping[int, DomainTables]]
 
 
-def _p2(x: int) -> int:
-    """Next power of two (>= 1) — the bucket rounding."""
-    return 1 << max(int(x) - 1, 0).bit_length()
-
-
-def _symlen_bucket(x: int) -> int:
-    """Round the slot-loop trip count up to a multiple of 8 (cap 64).
-
-    The decode cost is linear in this number, so power-of-two rounding would
-    waste up to 2x slot iterations (e.g. 33 -> 64); multiples of 8 bound the
-    waste at <8 slots while keeping specializations to at most 8 variants.
-    """
-    return min(-(-max(int(x), 1) // 8) * 8, _MAX_SYMLEN_CAP)
-
-
 # ---------------------------------------------------------------------------
-# Decode plans: per-(domain, config) device state, uploaded once.
+# Decode plans: per-(domain, config, shard) device state, uploaded once.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class DecodePlan:
-    """Device-resident decode state for one (domain, config).
+    """Device-resident decode state for one (domain, config) on one shard.
 
     Holds the Huffman/quant tables and the iDCT basis as device arrays plus
     the statics that specialize the fused decode.  Everything here is
-    batch-size independent: one plan serves every bucket shape.
+    batch-size independent: one plan serves every bucket shape on its
+    device (``device=None`` is the single-shard default placement).
     """
 
     tables: DeviceTables
@@ -97,20 +109,27 @@ class DecodePlan:
     e: int
     l_max: int
     domain_id: int
+    device: object
     source: DomainTables  # host tables (kept so cache keys stay alive)
 
 
 def _build_decode_plan(
-    tables: DomainTables, key: Tuple[int, int, int, int]
+    tables: DomainTables, key: Tuple[int, int, int, int], device
 ) -> DecodePlan:
     domain_id, n, e, l_max = key
+    dev_tables = tables.device_tables()
+    basis = dct.idct_basis(n, e)
+    if device is not None:
+        dev_tables = jax.device_put(dev_tables, device)
+        basis = jax.device_put(basis, device)
     return DecodePlan(
-        tables=tables.device_tables(),
-        basis=dct.idct_basis(n, e),
+        tables=dev_tables,
+        basis=basis,
         n=n,
         e=e,
         l_max=l_max,
         domain_id=domain_id,
+        device=device,
         source=tables,
     )
 
@@ -192,7 +211,8 @@ class _Slice:
 class DecodedBatch:
     """Result of :meth:`BatchDecoder.decode` — device-resident windows.
 
-    ``to_host()`` performs the only host sync: one transfer per bucket, then
+    ``to_host()`` performs the only host sync: every bucket's d2h copy is
+    started before any is materialized (so shard drains overlap), then
     numpy slicing back to per-container signals (input order preserved).
     """
 
@@ -222,8 +242,9 @@ class DecodedBatch:
         return self
 
     def to_host(self) -> List[np.ndarray]:
-        """Drain the batch: one device->host transfer per bucket."""
-        host = [np.asarray(g) for g in self._groups]
+        """Drain the batch: one device->host transfer per bucket, all
+        copies in flight before the first materializes."""
+        host = fetch_to_host(self._groups)
         out = []
         for s in self._slices:
             rows = host[s.group][s.win_off:s.win_off + s.num_windows]
@@ -249,7 +270,11 @@ class StreamGroup:
     ``(num_windows, signal_length)`` in stream order — the word->symbol
     prefix sums recover everything else.  ``max_symlen`` is a host-side
     bound on the per-word symbol count (<= 64); exact is best (fewest slot
-    iterations) but any safe bound decodes correctly.
+    iterations) but any safe bound decodes correctly.  ``device``/``shard``
+    place the group's fused dispatch (None = default single-shard
+    placement); ``live_words`` is the host-known true word count when the
+    producer has it (container staging does; device-resident stitches
+    don't) — it feeds the padding-occupancy stats only.
     """
 
     plan_key: Tuple[int, int, int, int]  # (domain_id, n, e, l_max)
@@ -258,16 +283,55 @@ class StreamGroup:
     symlen: jnp.ndarray  # int32[Wp]
     max_symlen: int
     members: Sequence[Tuple[int, int]]  # (num_windows, signal_length)
+    device: object = None
+    shard: int = 0
+    live_words: Optional[int] = None
 
     @property
     def total_windows(self) -> int:
         return sum(nw for nw, _ in self.members)
 
 
+def _stage_container_group(
+    members: Sequence[Container],
+    key: Tuple[int, int, int, int],
+    device,
+    shard: int,
+) -> StreamGroup:
+    """Host-stage one bucket: concatenate member streams into power-of-two
+    padded word arrays and upload them (to ``device`` when sharded)."""
+    total_words = sum(c.num_words for c in members)
+    wp = p2(max(total_words, 1))
+    hi = np.zeros(wp, dtype=np.uint32)
+    lo = np.zeros(wp, dtype=np.uint32)
+    sl = np.zeros(wp, dtype=np.int32)
+    woff = 0
+    for c in members:
+        chi, clo = c.words_u32()
+        hi[woff:woff + c.num_words] = chi
+        lo[woff:woff + c.num_words] = clo
+        sl[woff:woff + c.num_words] = c.symlen
+        woff += c.num_words
+    put = putter(device)
+    return StreamGroup(
+        plan_key=key,
+        hi=put(hi),
+        lo=put(lo),
+        symlen=put(sl),
+        max_symlen=max((c.max_symlen for c in members), default=0),
+        members=[(c.num_windows, c.signal_length) for c in members],
+        device=device,
+        shard=shard,
+        live_words=total_words,
+    )
+
+
 def streams_from_containers(
     containers: Sequence[Container],
 ) -> Tuple[List[StreamGroup], List[int]]:
-    """Group host containers by plan_key and concatenate their streams.
+    """Group host containers by plan_key and concatenate their streams
+    (single-shard, default placement — the eager public form of the
+    staging :meth:`BatchDecoder.decode` pipelines lazily).
 
     Returns the :class:`StreamGroup` list (group order = first appearance;
     members in input order within a group) plus, per input container, its
@@ -275,44 +339,17 @@ def streams_from_containers(
     :meth:`BatchDecoder.decode` uses to restore caller order after
     :meth:`BatchDecoder.decode_streams`.
     """
-    group_order: List[Tuple[int, int, int, int]] = []
-    groups: Dict[Tuple[int, int, int, int], List[int]] = {}
-    for i, c in enumerate(containers):
-        key = c.plan_key
-        if key not in groups:
-            groups[key] = []
-            group_order.append(key)
-        groups[key].append(i)
-
-    stream_groups: List[StreamGroup] = []
-    member_pos: List[int] = [0] * len(containers)
-    pos = 0
-    for key in group_order:
-        members = [containers[i] for i in groups[key]]
-        total_words = sum(c.num_words for c in members)
-        wp = _p2(max(total_words, 1))
-        hi = np.zeros(wp, dtype=np.uint32)
-        lo = np.zeros(wp, dtype=np.uint32)
-        sl = np.zeros(wp, dtype=np.int32)
-        woff = 0
-        for c in members:
-            chi, clo = c.words_u32()
-            hi[woff:woff + c.num_words] = chi
-            lo[woff:woff + c.num_words] = clo
-            sl[woff:woff + c.num_words] = c.symlen
-            woff += c.num_words
-        stream_groups.append(StreamGroup(
-            plan_key=key,
-            hi=jnp.asarray(hi),
-            lo=jnp.asarray(lo),
-            symlen=jnp.asarray(sl),
-            max_symlen=max((c.max_symlen for c in members), default=0),
-            members=[(c.num_windows, c.signal_length) for c in members],
-        ))
-        for i in groups[key]:
-            member_pos[i] = pos
-            pos += 1
-    return stream_groups, member_pos
+    containers = list(containers)
+    buckets = BucketScheduler(devices=None).buckets(
+        [c.plan_key for c in containers]
+    )
+    groups = [
+        _stage_container_group(
+            [containers[i] for i in b.items], b.key, b.device, b.shard
+        )
+        for b in buckets
+    ]
+    return groups, member_positions(buckets, len(containers))
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +362,12 @@ class BatchDecoderStats:
     dispatches: int = 0  # fused bucket launches
     plan_hits: int = 0
     plan_misses: int = 0
+    # per-dispatch padding/occupancy records (bounded history) — feeds the
+    # bench JSON's bucket-waste report and the half-octave bucket-policy
+    # decision (ROADMAP)
+    bucket_pad: "deque[dict]" = dataclasses.field(
+        default_factory=lambda: deque(maxlen=1024)
+    )
 
 
 class BatchDecoder:
@@ -341,12 +384,26 @@ class BatchDecoder:
     each group's streams are concatenated word-wise and padded to
     power-of-two buckets, then decoded by one :func:`_decode_bucket` launch.
     A mixed archive of hundreds of containers therefore costs
-    #distinct-plan-keys dispatches and O(log sizes) compilations, total.
+    #distinct-plan-keys x #shards dispatches and O(log sizes) compilations,
+    total.  ``pipeline`` double-buffers host staging/upload against device
+    compute; ``devices`` controls sharding (``"auto"`` = all visible local
+    devices, ``None`` = single default device) — both change scheduling
+    only, never bytes.
     """
 
-    def __init__(self, *, use_kernels: bool = False, plan_cache_size: int = 32):
+    def __init__(
+        self,
+        *,
+        use_kernels: bool = False,
+        plan_cache_size: int = 32,
+        pipeline: bool = True,
+        devices: DevicesArg = "auto",
+        prefetch: int = 2,
+    ):
         self.use_kernels = use_kernels
         self._plans = PlanCache(_build_decode_plan, plan_cache_size)
+        self.scheduler = BucketScheduler(devices=devices)
+        self.executor = PipelineExecutor(pipeline=pipeline, prefetch=prefetch)
         self.stats = BatchDecoderStats()
 
     # -- plan management ---------------------------------------------------
@@ -364,11 +421,11 @@ class BatchDecoder:
             ) from None
 
     def _plan_for_key(
-        self, key: Tuple[int, int, int, int], tables: TablesArg
+        self, key: Tuple[int, int, int, int], tables: TablesArg, device=None
     ) -> DecodePlan:
         tab = self._tables_for(key, tables)
         validate_container_tables(key, tab)
-        return self._plans.get(tab, key)
+        return self._plans.get(tab, key, device)
 
     def plan_for(
         self, container: Container, tables: TablesArg
@@ -402,15 +459,27 @@ class BatchDecoder:
                     "single DomainTables"
                 )
 
-        stream_groups, member_pos = streams_from_containers(containers)
-        batch = self.decode_streams(stream_groups, tables)
+        buckets = self.scheduler.buckets([c.plan_key for c in containers])
+        member_pos = member_positions(buckets, len(containers))
+        # staging stays lazy: the executor's worker runs the host concat +
+        # h2d upload of bucket k+1 while bucket k's decode dispatches
+        lazy = [
+            functools.partial(
+                _stage_container_group,
+                [containers[i] for i in b.items], b.key, b.device, b.shard,
+            )
+            for b in buckets
+        ]
+        batch = self.decode_streams(lazy, tables)
         # decode_streams orders slices by (group, member); restore the
         # caller's container order
         slices = [batch._slices[member_pos[i]] for i in range(len(containers))]
         return DecodedBatch(batch._groups, slices)
 
     def decode_streams(
-        self, groups: Sequence[StreamGroup], tables: TablesArg
+        self,
+        groups: Sequence[Union[StreamGroup, Callable[[], StreamGroup]]],
+        tables: TablesArg,
     ) -> DecodedBatch:
         """Decode pre-concatenated (device- or host-resident) bucket streams.
 
@@ -419,26 +488,57 @@ class BatchDecoder:
         to host, and device-array inputs stay on device end to end — the
         entry point the transcode pipeline uses to feed an
         ``EncodedBatch``'s stitched chunk parts straight back through the
-        decoder.  The returned batch's signals are ordered group by group,
+        decoder.  A group may also be a zero-argument callable producing
+        its :class:`StreamGroup` — the executor's staging contract, letting
+        the host concat + upload of later groups overlap earlier groups'
+        decode.  The returned batch's signals are ordered group by group,
         following each group's ``members`` order.
         """
-        out_groups: List[jnp.ndarray] = []
-        slices: List[_Slice] = []
-        for g, grp in enumerate(groups):
-            plan = self._plan_for_key(tuple(grp.plan_key), tables)
+        groups = list(groups)
+
+        def upload(g) -> StreamGroup:
+            grp = g() if callable(g) else g
+            put = putter(grp.device)
+            return dataclasses.replace(
+                grp, hi=put(grp.hi), lo=put(grp.lo), symlen=put(grp.symlen)
+            )
+
+        def dispatch(g, grp: StreamGroup) -> Tuple[jnp.ndarray,
+                                                   StreamGroup]:
+            plan = self._plan_for_key(
+                tuple(grp.plan_key), tables, grp.device
+            )
+            wp = int(grp.hi.shape[0])
+            num_windows = p2(max(grp.total_windows, 1))
             windows = _decode_bucket(
-                jnp.asarray(grp.hi),
-                jnp.asarray(grp.lo),
-                jnp.asarray(grp.symlen),
+                grp.hi,
+                grp.lo,
+                grp.symlen,
                 plan.tables,
                 plan.basis,
                 l_max=plan.l_max,
-                max_symlen=_symlen_bucket(grp.max_symlen),
-                num_windows=_p2(max(grp.total_windows, 1)),
+                max_symlen=symlen_bucket(grp.max_symlen),
+                num_windows=num_windows,
                 n=plan.n,
                 e=plan.e,
                 use_kernels=self.use_kernels,
             )
+            self.stats.dispatches += 1
+            self.stats.bucket_pad.append({
+                "plan_key": tuple(grp.plan_key),
+                "shard": grp.shard,
+                "words": grp.live_words,
+                "words_padded": wp,
+                "windows": grp.total_windows,
+                "windows_padded": num_windows,
+            })
+            return windows, grp
+
+        results = self.executor.run(groups, upload, dispatch)
+
+        out_groups: List[jnp.ndarray] = []
+        slices: List[_Slice] = []
+        for g, (windows, grp) in enumerate(results):
             win_off = 0
             for num_windows, signal_length in grp.members:
                 slices.append(_Slice(
@@ -449,7 +549,6 @@ class BatchDecoder:
                 ))
                 win_off += num_windows
             out_groups.append(windows)
-            self.stats.dispatches += 1
 
         self.stats.plan_hits = self._plans.hits
         self.stats.plan_misses = self._plans.misses

@@ -27,11 +27,21 @@ This module removes all four:
     O(log sizes).  Per-signal symbol counts ride a device array into the
     packer's validity mask — never trace constants.
   * **Persistent encode plans.**  Device tables upload once per
-    (domain, config) into an LRU :class:`EncodePlan` cache.
+    (domain, config, shard device) into an LRU :class:`EncodePlan` cache.
   * **Device-resident results.**  Encoded streams stay on device inside an
     :class:`EncodedBatch` until an explicit ``.to_host()`` drain — one sync
     per bucket, where the zero-length-codeword flag is also checked (the
     device-side arm of the ``pack_symlen_np`` histogram-gap guard).
+
+Scheduling, pipelining and sharding ride the shared
+:mod:`repro.serving.engine` layer: bucket k+1's host stacking + upload
+overlap bucket k's fused DCT+quant+pack, and with several devices each
+bucket's batch axis splits into per-device shards (rows pack
+independently, so per-signal bytes never depend on which shard packed
+them).  Device-resident staging uses the :class:`~repro.serving.engine.
+GatherStage` contract — the gather then happens *inside* the bucket's
+fused dispatch (one jit per bucket, optionally donating the source
+buffer on its last use).
 
 ``core.codec.encode_device`` is a batch-of-one wrapper over this engine in
 *exact* mode (``chunk_size=None`` — one chunk per signal), which keeps its
@@ -41,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import deque
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
@@ -52,7 +63,16 @@ from repro.core.calibration import DeviceTables, DomainTables
 from repro.core.container import Container
 from repro.core.quantize import quantize
 from repro.serving._plans import PlanCache
-from repro.serving.batch_decode import _p2
+from repro.serving.engine import (
+    Bucket,
+    BucketScheduler,
+    DevicesArg,
+    GatherStage,
+    PipelineExecutor,
+    fetch_to_host,
+    p2,
+    putter,
+)
 
 __all__ = [
     "BatchEncoder",
@@ -73,16 +93,16 @@ DEFAULT_CHUNK_SIZE = 1024
 
 
 # ---------------------------------------------------------------------------
-# Encode plans: per-(domain, config) device state, uploaded once.
+# Encode plans: per-(domain, config, shard) device state, uploaded once.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class EncodePlan:
-    """Device-resident encode state for one (domain, config).
+    """Device-resident encode state for one (domain, config) on one shard.
 
     Everything here is batch-size independent: one plan serves every bucket
-    shape.  ``has_gaps`` records (host-side, at plan build) whether the
-    Huffman book has zero-length entries — only then does the fused encode
-    pay for the device-side unencodable-symbol check.
+    shape on its device.  ``has_gaps`` records (host-side, at plan build)
+    whether the Huffman book has zero-length entries — only then does the
+    fused encode pay for the device-side unencodable-symbol check.
     """
 
     tables: DeviceTables
@@ -91,20 +111,25 @@ class EncodePlan:
     l_max: int
     domain_id: int
     has_gaps: bool
+    device: object
     source: DomainTables  # host tables (kept so cache keys stay alive)
 
 
 def _build_encode_plan(
-    tables: DomainTables, key: Tuple[int, int, int, int]
+    tables: DomainTables, key: Tuple[int, int, int, int], device
 ) -> EncodePlan:
     domain_id, n, e, l_max = key
+    dev_tables = tables.device_tables()
+    if device is not None:
+        dev_tables = jax.device_put(dev_tables, device)
     return EncodePlan(
-        tables=tables.device_tables(),
+        tables=dev_tables,
         n=n,
         e=e,
         l_max=l_max,
         domain_id=domain_id,
         has_gaps=bool(np.any(np.asarray(tables.book.lengths) == 0)),
+        device=device,
         source=tables,
     )
 
@@ -112,10 +137,7 @@ def _build_encode_plan(
 # ---------------------------------------------------------------------------
 # The fused bucket encode — ONE jit specialization per bucket shape.
 # ---------------------------------------------------------------------------
-@functools.partial(
-    jax.jit, static_argnames=("n", "e", "chunk_size", "check_gaps")
-)
-def _encode_bucket(
+def _encode_bucket_math(
     signals: jnp.ndarray,  # f32[K, Wp * n] (zero-padded signals)
     counts: jnp.ndarray,  # int32[K] true symbol count per signal
     tables: DeviceTables,
@@ -161,6 +183,83 @@ def _encode_bucket(
     return hi, lo, sl, wpc, bad
 
 
+_encode_bucket = functools.partial(
+    jax.jit, static_argnames=("n", "e", "chunk_size", "check_gaps")
+)(_encode_bucket_math)
+
+
+def _gather_rows_math(
+    flat: jnp.ndarray,  # f32[T + width] (flattened decoded windows)
+    starts: jnp.ndarray,  # int32[K] first-sample flat offset per row
+    lens: jnp.ndarray,  # int32[K] true sample count per row
+    width: int,
+) -> jnp.ndarray:
+    """Stage one encode bucket's signal matrix ``f32[K, width]`` on device.
+
+    Row ``r`` gathers samples ``[starts[r], starts[r] + lens[r])`` of the
+    flattened window tensors and is exact-zero beyond ``lens[r]`` — the
+    same layout ``BatchEncoder.encode`` stages host-side (a decoded
+    signal's own window padding is *re-decoded* data, not zeros, so the
+    mask is what keeps device staging bit-identical to the host path).
+
+    ``flat`` must already carry >= ``width`` trailing zeros past the last
+    real start (the transcode pipeline pads ONCE by the widest bucket) so
+    every slice stays in bounds — dynamic_slice clamps out-of-range starts,
+    which would silently shift a tail row's window otherwise.  Every row is
+    one contiguous sample run, so the cheap lowering is a batched
+    dynamic_slice (row-wise block copy) + tail mask — NOT a per-element
+    gather, which costs ~2x the fused encode itself on CPU.
+    """
+    pos = jnp.arange(width, dtype=jnp.int32)
+
+    def row(start, length):
+        x = jax.lax.dynamic_slice(flat, (start,), (width,))
+        return jnp.where(pos < length, x, jnp.zeros((), flat.dtype))
+
+    return jax.vmap(row)(starts, lens)
+
+
+def _encode_bucket_gather_math(
+    flat: jnp.ndarray,
+    starts: jnp.ndarray,
+    lens: jnp.ndarray,
+    counts: jnp.ndarray,
+    tables: DeviceTables,
+    *,
+    width: int,
+    n: int,
+    e: int,
+    chunk_size: int,
+    check_gaps: bool,
+):
+    """Device staging fused INTO the bucket encode: gather + DCT + quantize
+    + pack in one jit per bucket (the former separate ``_gather_rows``
+    dispatch is gone — its output never materializes in HBM between two
+    launches)."""
+    x = _gather_rows_math(flat, starts, lens, width)
+    return _encode_bucket_math(
+        x, counts, tables, n=n, e=e, chunk_size=chunk_size,
+        check_gaps=check_gaps,
+    )
+
+
+_GATHER_STATICS = ("width", "n", "e", "chunk_size", "check_gaps")
+_encode_bucket_gather = functools.partial(
+    jax.jit, static_argnames=_GATHER_STATICS
+)(_encode_bucket_gather_math)
+# the last bucket to read a GatherStage's flat tensor may donate it, letting
+# XLA reuse the decoded-window buffer for the pack outputs (no-op on CPU,
+# where donation is unsupported — callers gate on the device platform)
+_encode_bucket_gather_donate = functools.partial(
+    jax.jit, static_argnames=_GATHER_STATICS, donate_argnums=(0,)
+)(_encode_bucket_gather_math)
+
+
+def _donation_supported(device) -> bool:
+    platform = device.platform if device is not None else jax.default_backend()
+    return platform in ("gpu", "tpu")
+
+
 # ---------------------------------------------------------------------------
 # Encoded batches: streams stay on device until explicitly drained.
 # ---------------------------------------------------------------------------
@@ -189,10 +288,12 @@ class EncodedBucketParts:
     pack_symlen_chunked_parts` produces per signal, batched over the
     bucket's ``K`` rows (rows past the real signals are batch padding and
     pack zero words).  ``unencodable`` is the bucket's device-side
-    histogram-gap flag, checked at drain.  This is the shared stream
-    contract between the encode engine and device-resident consumers (the
-    transcode pipeline stitches these straight into decoder bucket
-    streams via ``symlen.stitch_chunk_parts`` — no host round trip).
+    histogram-gap flag, checked at drain.  ``shard``/``device`` record the
+    scheduler placement (device None = default single-shard).  This is the
+    shared stream contract between the encode engine and device-resident
+    consumers (the transcode pipeline stitches these straight into decoder
+    bucket streams via ``symlen.stitch_chunk_parts`` — no host round
+    trip, each shard staying on its own device).
     """
 
     plan_key: Tuple[int, int, int, int]  # (domain_id, n, e, l_max)
@@ -201,6 +302,8 @@ class EncodedBucketParts:
     symlen: jnp.ndarray  # int32[K, B, C]
     words_per_chunk: jnp.ndarray  # int32[K, B]
     unencodable: jnp.ndarray  # bool[]
+    shard: int = 0
+    device: object = None
 
     @property
     def chunk_size(self) -> int:
@@ -218,8 +321,9 @@ class EncodedBucketParts:
 class EncodedBatch:
     """Result of :meth:`BatchEncoder.encode` — device-resident streams.
 
-    ``to_host()`` performs the only host sync: one drain per bucket, a
-    histogram-gap check (the device-side arm of the pack precheck), then
+    ``to_host()`` performs the only host sync: every bucket's d2h copies
+    start before any materializes (shard drains overlap), a histogram-gap
+    check runs first (the device-side arm of the pack precheck), then
     numpy slicing into per-signal :class:`Container`\\ s (input order
     preserved).
 
@@ -233,13 +337,11 @@ class EncodedBatch:
 
     def __init__(
         self,
-        buckets: List[tuple],
+        buckets: List[EncodedBucketParts],
         slices: List[_Slice],
         pending_flags: Sequence[Tuple[Tuple[int, int, int, int],
                                       jnp.ndarray]] = (),
     ):
-        # per bucket: (plan_key, hi, lo, sl, wpc, bad) device arrays with
-        # hi/lo/sl shaped [K, num_chunks, chunk_size], wpc [K, num_chunks]
         self._buckets = buckets
         self._slices = slices
         # histogram-gap flags inherited from upstream device stages (a
@@ -253,13 +355,7 @@ class EncodedBatch:
     def device_parts(self) -> List[EncodedBucketParts]:
         """The per-bucket chunk parts as device arrays — no host sync."""
         self._check_live("read device parts of")
-        return [
-            EncodedBucketParts(
-                plan_key=key, hi=hi, lo=lo, symlen=sl,
-                words_per_chunk=wpc, unencodable=bad,
-            )
-            for key, hi, lo, sl, wpc, bad in self._buckets
-        ]
+        return list(self._buckets)
 
     def signal_slices(self) -> List[_Slice]:
         """Per-signal (input order) location + header metadata: which
@@ -268,8 +364,8 @@ class EncodedBatch:
         return list(self._slices)
 
     def block_until_ready(self) -> "EncodedBatch":
-        for _, hi, lo, sl, wpc, bad in self._buckets:
-            wpc.block_until_ready()
+        for p in self._buckets:
+            p.words_per_chunk.block_until_ready()
         return self
 
     def _check_live(self, verb: str) -> None:
@@ -283,16 +379,16 @@ class EncodedBatch:
         self._consumed = reason
 
     def to_host(self) -> List[Container]:
-        """Drain the batch into containers: one sync per bucket, then a
-        host-side stitch of each signal's chunk word-runs (chunk b of
-        signal k contributes its row's first ``wpc[k, b]`` words)."""
+        """Drain the batch into containers: one sync per bucket (all d2h
+        copies in flight together), then a host-side stitch of each
+        signal's chunk word-runs (chunk b of signal k contributes its
+        row's first ``wpc[k, b]`` words)."""
         self._check_live("drain")
-        host = []
-        for key, hi, lo, sl, wpc, bad in (
-            [(k, None, None, None, None, b) for k, b in self._pending_flags]
-            + self._buckets
-        ):
-            if bool(bad):
+        flags = self._pending_flags + [
+            (p.plan_key, p.unencodable) for p in self._buckets
+        ]
+        for key, flag in flags:
+            if bool(flag):
                 # leave the batch live: a failed drain returned nothing, so
                 # a retry must re-raise this error, not a bogus
                 # "already drained" message
@@ -303,12 +399,12 @@ class EncodedBatch:
                     "garbage; recalibrate with Laplace smoothing or a "
                     "complete codebook"
                 )
-            if hi is None:  # a pending upstream flag, nothing to drain
-                continue
-            host.append(
-                (np.asarray(hi), np.asarray(lo), np.asarray(sl),
-                 np.asarray(wpc))
-            )
+        flat = fetch_to_host([
+            a for p in self._buckets
+            for a in (p.hi, p.lo, p.symlen, p.words_per_chunk)
+        ])
+        host = [tuple(flat[4 * b: 4 * b + 4])
+                for b in range(len(self._buckets))]
         self._consumed = (
             "it was already drained by to_host() — hold on to the returned "
             "containers instead of draining twice"
@@ -354,6 +450,11 @@ class BatchEncoderStats:
     dispatches: int = 0  # fused bucket launches
     plan_hits: int = 0
     plan_misses: int = 0
+    # per-dispatch padding/occupancy records (bounded history) — the
+    # encode-side twin of BatchDecoderStats.bucket_pad
+    bucket_pad: "deque[dict]" = dataclasses.field(
+        default_factory=lambda: deque(maxlen=1024)
+    )
 
 
 class BatchEncoder:
@@ -368,10 +469,13 @@ class BatchEncoder:
         containers = batch.to_host()              # one sync per bucket
 
     Signals are grouped by (domain, config) and sub-bucketed by power-of-two
-    window and batch counts; each bucket is one :func:`_encode_bucket`
-    launch.  ``chunk_size=None`` selects *exact* mode (one packing chunk per
+    window and batch counts; each bucket is one fused dispatch.
+    ``chunk_size=None`` selects *exact* mode (one packing chunk per
     signal): bit-identical output to ``core.codec.encode`` at the price of a
     length-S packing scan — that is what ``encode_device`` uses.
+    ``pipeline``/``devices``/``prefetch`` are the shared engine-layer knobs
+    (see :mod:`repro.serving.engine`): double-buffered staging and
+    per-device bucket shards, neither of which changes output bytes.
     """
 
     def __init__(
@@ -379,11 +483,16 @@ class BatchEncoder:
         *,
         chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
         plan_cache_size: int = 32,
+        pipeline: bool = True,
+        devices: DevicesArg = "auto",
+        prefetch: int = 2,
     ):
         if chunk_size is not None and chunk_size <= 0:
             raise ValueError(f"chunk_size must be positive, got {chunk_size}")
         self.chunk_size = chunk_size
         self._plans = PlanCache(_build_encode_plan, plan_cache_size)
+        self.scheduler = BucketScheduler(devices=devices)
+        self.executor = PipelineExecutor(pipeline=pipeline, prefetch=prefetch)
         self.stats = BatchEncoderStats()
 
     # -- plan management ---------------------------------------------------
@@ -397,10 +506,10 @@ class BatchEncoder:
                 f"no DomainTables registered for domain_id={domain_id}"
             ) from None
 
-    def plan_for(self, tables: DomainTables) -> EncodePlan:
+    def plan_for(self, tables: DomainTables, device=None) -> EncodePlan:
         cfg = tables.config
         key = (tables.domain_id, cfg.n, cfg.e, cfg.l_max)
-        return self._plans.get(tables, key)
+        return self._plans.get(tables, key, device)
 
     # -- the batched encode ------------------------------------------------
     def encode(
@@ -418,11 +527,11 @@ class BatchEncoder:
         """
         signals = [np.asarray(s, dtype=np.float32).ravel() for s in signals]
 
-        def stage(idxs: List[int], kp: int, wp: int, n: int) -> jnp.ndarray:
+        def stage(idxs, kp: int, wp: int, n: int, device) -> np.ndarray:
             x = np.zeros((kp, wp * n), dtype=np.float32)
             for row, i in enumerate(idxs):
                 x[row, : signals[i].shape[0]] = signals[i]
-            return jnp.asarray(x)
+            return x
 
         return self.encode_staged(
             [int(s.shape[0]) for s in signals], tables,
@@ -437,17 +546,26 @@ class BatchEncoder:
         stage,
         domain_ids: Optional[Sequence[int]] = None,
         pending_flags: Sequence[tuple] = (),
+        shard_ids: Optional[Sequence[int]] = None,
+        shard_devices: Optional[Dict[int, object]] = None,
     ) -> EncodedBatch:
         """The bucketing/dispatch core of :meth:`encode`, with the signal
         *staging* pluggable.
 
-        ``stage(idxs, kp, wp, n)`` must return the bucket's stacked signal
-        matrix ``f32[kp, wp * n]`` — row ``r`` holds signal ``idxs[r]``'s
-        samples followed by exact zeros, rows past ``len(idxs)`` all-zero —
-        as either a host array (the :meth:`encode` path) or a device array
-        (the transcode pipeline, which gathers rows from decoded windows
-        without leaving the device).  Everything else — grouping, padding,
-        chunk-size selection, the fused dispatch, slice metadata — is this
+        ``stage(idxs, kp, wp, n, device)`` must produce the bucket's
+        stacked signal matrix ``f32[kp, wp * n]`` — row ``r`` holds signal
+        ``idxs[r]``'s samples followed by exact zeros, rows past
+        ``len(idxs)`` all-zero — as a host/device array, **or** a
+        :class:`~repro.serving.engine.GatherStage` describing the rows as
+        slices of a device-resident flat tensor, in which case the gather
+        happens *inside* the bucket's fused dispatch (the transcode
+        pipeline's path).  Under pipelining the stage callback runs on the
+        executor's staging worker, one bucket ahead of dispatch.
+        Everything else — grouping, padding, chunk-size selection, shard
+        assignment (``shard_ids`` pins signals to shards, with
+        ``shard_devices`` mapping foreign shard ids to their devices when
+        the pinning comes from another scheduler; default is a contiguous
+        split per bucket), the fused dispatch, slice metadata — is this
         one code path, which is what makes device-staged encodes
         byte-identical to host-staged ones.
         """
@@ -468,61 +586,103 @@ class BatchEncoder:
                 f"{len(lengths)} signals"
             )
 
-        # group by ((domain, config), windows bucket) — one fused dispatch
-        # per group; batch dim padded to a power of two below
-        bucket_order: List[Tuple[Tuple[int, int, int, int], int]] = []
-        buckets: Dict[Tuple[Tuple[int, int, int, int], int], List[int]] = {}
-        per_tab: Dict[Tuple[Tuple[int, int, int, int], int], DomainTables] = {}
-        for i, (length, dom) in enumerate(zip(lengths, domain_ids)):
+        # group by ((domain, config), windows bucket), shard-split — one
+        # fused dispatch per (group, shard); batch dim padded to a power of
+        # two in the upload stage
+        keys = []
+        per_tab: Dict[tuple, DomainTables] = {}
+        for length, dom in zip(lengths, domain_ids):
             tab = self._tables_for(dom, tables)
             cfg = tab.config
             num_windows = -(-length // cfg.n)
             key = (
                 (dom, cfg.n, cfg.e, cfg.l_max),
-                _p2(max(num_windows, 1)),
+                p2(max(num_windows, 1)),
             )
-            if key not in buckets:
-                buckets[key] = []
-                bucket_order.append(key)
-                per_tab[key] = tab
-            buckets[key].append(i)
+            keys.append(key)
+            per_tab.setdefault(key, tab)
+        buckets = self.scheduler.buckets(
+            keys, shard_ids=shard_ids, shard_devices=shard_devices
+        )
 
-        out_buckets: List[tuple] = []
         slices: List[Optional[_Slice]] = [None] * len(lengths)
-        for b, key in enumerate(bucket_order):
-            (plan_key, wp), idxs = key, buckets[key]
-            plan = self._plans.get(per_tab[key], plan_key)
-            n, e = plan.n, plan.e
-            kp = _p2(len(idxs))  # pad batch dim; pad rows pack 0 symbols
-            counts = np.zeros((kp,), dtype=np.int32)
-            for row, i in enumerate(idxs):
-                num_windows = -(-lengths[i] // n)
-                counts[row] = num_windows * e
+        for b, bucket in enumerate(buckets):
+            plan_key, wp = bucket.key
+            _, n, e, l_max = plan_key
+            for row, i in enumerate(bucket.items):
                 slices[i] = _Slice(
                     bucket=b,
                     row=row,
-                    num_windows=num_windows,
+                    num_windows=-(-lengths[i] // n),
                     signal_length=int(lengths[i]),
                     n=n,
                     e=e,
-                    l_max=plan.l_max,
-                    domain_id=plan.domain_id,
+                    l_max=l_max,
+                    domain_id=plan_key[0],
                 )
-            x = stage(idxs, kp, wp, n)
+
+        def upload(bucket: Bucket):
+            plan_key, wp = bucket.key
+            _, n, e, _ = plan_key
+            idxs = list(bucket.items)
+            kp = p2(len(idxs))  # pad batch dim; pad rows pack 0 symbols
+            counts = np.zeros((kp,), dtype=np.int32)
+            for row, i in enumerate(idxs):
+                counts[row] = -(-lengths[i] // n) * e
+            put = putter(bucket.device)
+            x = stage(idxs, kp, wp, n, bucket.device)
+            if not isinstance(x, GatherStage):
+                # place host AND device stage results: a stage returning an
+                # uncommitted jnp array must still land on the bucket's
+                # shard, or the fused jit would see operands on two devices
+                x = put(x)
+            return x, put(counts)
+
+        def dispatch(bucket: Bucket, staged):
+            x, counts = staged
+            plan_key, wp = bucket.key
+            plan = self._plans.get(
+                per_tab[bucket.key], plan_key, bucket.device
+            )
+            n, e = plan.n, plan.e
             sp = wp * e
             chunk = sp if self.chunk_size is None else min(self.chunk_size, sp)
-            hi, lo, sl, nw, bad = _encode_bucket(
-                x if isinstance(x, jnp.ndarray) else jnp.asarray(x),
-                jnp.asarray(counts),
-                plan.tables,
-                n=n,
-                e=e,
-                chunk_size=chunk,
-                check_gaps=plan.has_gaps,
-            )
-            out_buckets.append((plan_key, hi, lo, sl, nw, bad))
+            if isinstance(x, GatherStage):
+                fused = (
+                    _encode_bucket_gather_donate
+                    if x.donate and _donation_supported(bucket.device)
+                    else _encode_bucket_gather
+                )
+                hi, lo, sl, wpc, bad = fused(
+                    x.flat, x.starts, x.lens, counts, plan.tables,
+                    width=wp * n, n=n, e=e, chunk_size=chunk,
+                    check_gaps=plan.has_gaps,
+                )
+                kp = int(x.starts.shape[0])
+            else:
+                hi, lo, sl, wpc, bad = _encode_bucket(
+                    x, counts, plan.tables,
+                    n=n, e=e, chunk_size=chunk, check_gaps=plan.has_gaps,
+                )
+                kp = int(x.shape[0])
             self.stats.dispatches += 1
+            self.stats.bucket_pad.append({
+                "plan_key": plan_key,
+                "shard": bucket.shard,
+                "rows": len(bucket.items),
+                "rows_padded": kp,
+                "windows": sum(
+                    -(-lengths[i] // n) for i in bucket.items
+                ),
+                "windows_padded": wp * kp,
+            })
+            return EncodedBucketParts(
+                plan_key=plan_key, hi=hi, lo=lo, symlen=sl,
+                words_per_chunk=wpc, unencodable=bad,
+                shard=bucket.shard, device=bucket.device,
+            )
 
+        out_buckets = self.executor.run(buckets, upload, dispatch)
         self.stats.plan_hits = self._plans.hits
         self.stats.plan_misses = self._plans.misses
         return EncodedBatch(out_buckets, slices, pending_flags)

@@ -10,23 +10,32 @@ host->device re-upload per encode bucket, all in the middle of the hot loop.
 :class:`Transcoder` removes the round trip by making the engines' internal
 stream representations a shared, device-resident contract:
 
-  * **Source streams.**  A host archive (``Container`` list) uploads once
-    via the decoder's own :func:`~repro.serving.batch_decode.
-    streams_from_containers`; a device-resident
-    :class:`~repro.serving.batch_encode.EncodedBatch` feeds its un-stitched
-    chunk parts through ``core.symlen.stitch_chunk_parts`` — a device-side
-    gather that lays the per-chunk word runs into decoder-shaped
-    concatenated bucket streams (capacity sized by the host-computable
-    :func:`~repro.core.symlen.chunk_words_bound`, so no sync on the true
-    word counts).
+  * **Source streams.**  A host archive (``Container`` list) stages through
+    the decoder's own lazy bucket staging (the executor overlaps each
+    bucket's concat+upload with the previous bucket's decode); a
+    device-resident :class:`~repro.serving.batch_encode.EncodedBatch` feeds
+    its un-stitched chunk parts through ``core.symlen.stitch_chunk_parts``
+    — a device-side gather that lays the per-chunk word runs into
+    decoder-shaped concatenated bucket streams (capacity sized by the
+    host-computable :func:`~repro.core.symlen.chunk_words_bound`, so no
+    sync on the true word counts; opt-in ``exact_capacity=True`` trades
+    ONE pre-decode sync on the true counts for ~2x less decode slot work
+    on chunk-heavy sources).
   * **Decode.**  :meth:`BatchDecoder.decode_streams` — the same fused
     bucket dispatches ``decode()`` uses, minus the container unpacking.
-  * **Re-stage on device.**  Each target encode bucket's stacked signal
-    matrix is one jitted gather out of the decoded window tensors
-    (:func:`_gather_rows`); row layout, zero padding and chunk-size
-    selection are the encoder's own (:meth:`BatchEncoder.encode_staged`),
-    which is what makes the output **byte-identical** to draining the
-    decoded signals to host and re-encoding them.
+  * **Re-stage on device, fused.**  Each target encode bucket's stacked
+    signal matrix is a batched ``dynamic_slice`` gather out of the decoded
+    window tensors that runs *inside* the bucket's fused encode dispatch
+    (the :class:`~repro.serving.engine.GatherStage` staging contract — one
+    jit per bucket, the flat source buffer donated on its last use); row
+    layout, zero padding and chunk-size selection are the encoder's own
+    (:meth:`BatchEncoder.encode_staged`), which is what makes the output
+    **byte-identical** to draining the decoded signals to host and
+    re-encoding them.
+  * **Sharding.**  With several devices, a signal re-encodes on the shard
+    that decoded it (``shard_ids`` pins the encode buckets), so the whole
+    decode -> gather -> re-encode chain stays on one device per shard and
+    the shards run embarrassingly parallel.
   * **One drain.**  The result is a normal :class:`EncodedBatch`; nothing
     syncs until its ``to_host()``.  Between decode and re-encode there are
     zero device->host transfers (the conformance suite pins this with a
@@ -52,52 +61,25 @@ from repro.serving._plans import PlanCache, TranscodePlan
 from repro.serving.batch_decode import (
     BatchDecoder,
     StreamGroup,
-    _p2,
-    streams_from_containers,
+    _stage_container_group,
 )
 from repro.serving.batch_encode import (
     DEFAULT_CHUNK_SIZE,
     BatchEncoder,
     EncodedBatch,
 )
+from repro.serving.engine import (
+    DevicesArg,
+    GatherStage,
+    member_positions,
+    p2,
+    putter,
+)
 
 __all__ = ["Transcoder", "TranscodePlan", "default_transcoder"]
 
 TablesArg = Union[DomainTables, Dict[int, DomainTables]]
 Source = Union[Sequence[Container], EncodedBatch]
-
-
-@functools.partial(jax.jit, static_argnames=("width",))
-def _gather_rows(
-    flat: jnp.ndarray,  # f32[T + 1] (flattened decoded windows)
-    starts: jnp.ndarray,  # int32[K] first-sample flat offset per row
-    lens: jnp.ndarray,  # int32[K] true sample count per row
-    *,
-    width: int,
-) -> jnp.ndarray:
-    """Stage one encode bucket's signal matrix ``f32[K, width]`` on device.
-
-    Row ``r`` gathers samples ``[starts[r], starts[r] + lens[r])`` of the
-    flattened window tensors and is exact-zero beyond ``lens[r]`` — the
-    same layout ``BatchEncoder.encode`` stages host-side (a decoded
-    signal's own window padding is *re-decoded* data, not zeros, so the
-    mask is what keeps device staging bit-identical to the host path).
-
-    ``flat`` must already carry >= ``width`` trailing zeros past the last
-    real start (transcode() pads ONCE by the widest bucket) so every slice
-    stays in bounds — dynamic_slice clamps out-of-range starts, which
-    would silently shift a tail row's window otherwise.  Every row is one
-    contiguous sample run, so the cheap lowering is a batched
-    dynamic_slice (row-wise block copy) + tail mask — NOT a per-element
-    gather, which costs ~2x the fused encode itself on CPU.
-    """
-    pos = jnp.arange(width, dtype=jnp.int32)
-
-    def row(start, length):
-        x = jax.lax.dynamic_slice(flat, (start,), (width,))
-        return jnp.where(pos < length, x, jnp.zeros((), flat.dtype))
-
-    return jax.vmap(row)(starts, lens)
 
 
 def _signal_words_bound(
@@ -115,6 +97,7 @@ class TranscoderStats:
     batches: int = 0
     signals: int = 0
     stitches: int = 0  # device-side chunk-part stitch dispatches
+    capacity_syncs: int = 0  # exact_capacity pre-decode word-count syncs
     plan_hits: int = 0
     plan_misses: int = 0
 
@@ -137,7 +120,11 @@ class Transcoder:
     Output signal order is source order.  ``dst_domain_ids`` routes each
     signal's target tables when ``dst_tables`` is a mapping; it defaults
     to the source domain ids (re-windowing / re-quantizing within the
-    same domain id).
+    same domain id).  ``pipeline``/``devices`` are the shared engine-layer
+    knobs; ``exact_capacity=True`` opts into one pre-decode sync on the
+    true stitched word counts (EncodedBatch sources only) to shrink
+    decode slot work for chunk-heavy streams — none of them change the
+    produced bytes.
     """
 
     def __init__(
@@ -148,41 +135,68 @@ class Transcoder:
         decoder: Optional[BatchDecoder] = None,
         encoder: Optional[BatchEncoder] = None,
         plan_cache_size: int = 32,
+        pipeline: bool = True,
+        devices: DevicesArg = "auto",
+        prefetch: int = 2,
+        exact_capacity: bool = False,
     ):
-        self.decoder = decoder or BatchDecoder(use_kernels=use_kernels)
-        self.encoder = encoder or BatchEncoder(chunk_size=chunk_size)
+        self.decoder = decoder or BatchDecoder(
+            use_kernels=use_kernels, pipeline=pipeline, devices=devices,
+            prefetch=prefetch,
+        )
+        self.encoder = encoder or BatchEncoder(
+            chunk_size=chunk_size, pipeline=pipeline, devices=devices,
+            prefetch=prefetch,
+        )
+        if self.decoder.scheduler.devices != self.encoder.scheduler.devices:
+            raise ValueError(
+                "decoder and encoder must shard over the same devices — a "
+                "signal re-encodes on the shard that decoded it (got "
+                f"{self.decoder.scheduler.devices} vs "
+                f"{self.encoder.scheduler.devices})"
+            )
+        self.exact_capacity = exact_capacity
         self._plans = PlanCache(self._build_plan, plan_cache_size)
         self.stats = TranscoderStats()
 
+    @property
+    def scheduler(self):
+        """The shard scheduler both halves of the pipeline follow."""
+        return self.decoder.scheduler
+
     # -- plan pairing ------------------------------------------------------
-    def _build_plan(self, tables, key) -> TranscodePlan:
+    def _build_plan(self, tables, key, device) -> TranscodePlan:
         (src_tab, dst_tab), (src_key, dst_key) = tables, key
         return TranscodePlan(
-            decode=self.decoder._plans.get(src_tab, src_key),
-            encode=self.encoder.plan_for(dst_tab),
+            decode=self.decoder._plans.get(src_tab, src_key, device),
+            encode=self.encoder.plan_for(dst_tab, device),
             src_key=src_key,
             dst_key=dst_key,
         )
 
     def plan_for(
-        self, src_tables: DomainTables, dst_tables: DomainTables
+        self, src_tables: DomainTables, dst_tables: DomainTables, device=None
     ) -> TranscodePlan:
         src_cfg, dst_cfg = src_tables.config, dst_tables.config
         src_key = (src_tables.domain_id, src_cfg.n, src_cfg.e, src_cfg.l_max)
         dst_key = (dst_tables.domain_id, dst_cfg.n, dst_cfg.e, dst_cfg.l_max)
-        return self._plans.get((src_tables, dst_tables), (src_key, dst_key))
+        return self._plans.get(
+            (src_tables, dst_tables), (src_key, dst_key), device
+        )
 
     # -- source normalization ----------------------------------------------
     def _streams_from_encoded(
         self, batch: EncodedBatch, src_tables: TablesArg
     ) -> Tuple[List[StreamGroup], List[int], List[Tuple[int, int]],
-               List[tuple]]:
+               List[tuple], List[int]]:
         """Stitch an EncodedBatch's chunk parts into decoder streams,
-        entirely on device.  Returns (groups, per-signal member position,
-        per-signal (length, src plan key) in source order, pending gap
-        flags).  Does NOT consume the batch — transcode() marks it consumed
-        only once the whole pipeline is committed, so a failed transcode
-        (bad routing, missing tables) leaves the source drainable."""
+        entirely on device (each shard's parts stitch on their own
+        device).  Returns (groups, per-signal member position, per-signal
+        (length, src plan key) in source order, pending gap flags,
+        per-signal shard ids).  Does NOT consume the batch — transcode()
+        marks it consumed only once the whole pipeline is committed, so a
+        failed transcode (bad routing, missing tables) leaves the source
+        drainable."""
         parts = batch.device_parts()
         slices = batch.signal_slices()
         # signals per bucket, in row order (== stream symbol order)
@@ -192,21 +206,27 @@ class Transcoder:
         for rows in per_bucket:
             rows.sort(key=lambda s: s.row)
 
-        # merge buckets sharing a plan_key into one decode group, mirroring
-        # streams_from_containers' grouping (same fused-dispatch count and
-        # window bucket as the drained-container round trip)
-        key_order: List[Tuple[int, int, int, int]] = []
-        by_key: Dict[Tuple[int, int, int, int], List[int]] = {}
-        for b, p in enumerate(parts):
-            if p.plan_key not in by_key:
-                by_key[p.plan_key] = []
-                key_order.append(p.plan_key)
-            by_key[p.plan_key].append(b)
+        # merge source buckets sharing (plan_key, shard) into one decode
+        # group, mirroring the container path's grouping — same
+        # fused-dispatch count and window bucket as the drained-container
+        # round trip, with every shard's stream staying on its device
+        key_order, by_key = self.scheduler.group_by(
+            [(p.plan_key, p.shard) for p in parts]
+        )
+
+        # exact_capacity: ONE batched pre-decode sync on the true per-chunk
+        # word counts, so the stitched streams are sized by what was packed
+        # instead of the l_max worst case (~2-3x looser); decode work is
+        # linear in capacity, bytes are identical either way
+        wpc_host = None
+        if self.exact_capacity:
+            wpc_host = jax.device_get([p.words_per_chunk for p in parts])
+            self.stats.capacity_syncs += 1
 
         groups: List[StreamGroup] = []
         member_pos_by_sig: Dict[Tuple[int, int], int] = {}
         pos = 0
-        for key in key_order:
+        for key, shard in key_order:
             l_max = key[3]
             seg_hi, seg_lo, seg_sl = [], [], []
             members: List[Tuple[int, int]] = []
@@ -216,26 +236,26 @@ class Transcoder:
             min_len = int(nonzero.min()) if nonzero.size else 1
             max_sl = min(symlen.WORD_BITS // max(min_len, 1),
                          symlen.WORD_BITS)
-            for b in by_key[key]:
+            device = None
+            for b in by_key[(key, shard)]:
                 p = parts[b]
-                cap = sum(
-                    _signal_words_bound(
-                        s.num_windows * s.e, p.chunk_size, l_max
+                device = p.device
+                if wpc_host is not None:
+                    cap = int(np.sum(wpc_host[b]))
+                else:
+                    cap = sum(
+                        _signal_words_bound(
+                            s.num_windows * s.e, p.chunk_size, l_max
+                        )
+                        for s in per_bucket[b]
                     )
-                    for s in per_bucket[b]
-                )
                 c = p.chunk_size
-                # round capacity to a coarse grid (not a power of two:
-                # the bound is already ~2-3x the true word count, and
-                # decode slot work is linear in capacity — p2 rounding on
-                # top would double it again)
-                cap = -(-max(cap, 1) // 256) * 256
                 shi, slo, ssl, _ = symlen.stitch_chunk_parts(
                     p.hi.reshape(-1, c),
                     p.lo.reshape(-1, c),
                     p.symlen.reshape(-1, c),
                     p.words_per_chunk.reshape(-1),
-                    capacity=cap,
+                    capacity=symlen.stitch_capacity(cap),
                 )
                 self.stats.stitches += 1
                 seg_hi.append(shi)
@@ -254,6 +274,8 @@ class Transcoder:
                 ),
                 max_symlen=max_sl,
                 members=members,
+                device=device,
+                shard=shard,
             ))
 
         member_pos = [
@@ -263,13 +285,14 @@ class Transcoder:
             (s.signal_length, (s.domain_id, s.n, s.e, s.l_max))
             for s in slices
         ]
+        shard_ids = [parts[s.bucket].shard for s in slices]
         # inherit the source's own pending flags too: a chained transcode
         # must not launder an upstream histogram-gap batch into a clean
         # drain
         flags = list(batch._pending_flags) + [
             (p.plan_key, p.unencodable) for p in parts
         ]
-        return groups, member_pos, meta, flags
+        return groups, member_pos, meta, flags, shard_ids
 
     # -- the transcode -----------------------------------------------------
     def transcode(
@@ -289,14 +312,38 @@ class Transcoder:
         src_batch: Optional[EncodedBatch] = None
         if isinstance(source, EncodedBatch):
             src_batch = source
-            groups, member_pos, meta, flags = self._streams_from_encoded(
-                source, src_tables
+            groups, member_pos, meta, flags, shard_ids = (
+                self._streams_from_encoded(source, src_tables)
             )
+            # placement follows the DATA: the source batch's shard ids may
+            # come from a different scheduler (e.g. a sharded encoder
+            # feeding a single-device transcoder), so its parts' devices —
+            # not this scheduler's tuple — decide where each shard runs
+            shard_devices = {g.shard: g.device for g in groups}
         else:
             containers = list(source)
-            groups, member_pos = streams_from_containers(containers)
+            buckets = self.scheduler.buckets(
+                [c.plan_key for c in containers]
+            )
+            member_pos = member_positions(buckets, len(containers))
+            # lazy staging: the decode executor's worker concatenates and
+            # uploads bucket k+1 while bucket k decodes
+            groups = [
+                functools.partial(
+                    _stage_container_group,
+                    [containers[i] for i in b.items],
+                    b.key, b.device, b.shard,
+                )
+                for b in buckets
+            ]
             meta = [(c.signal_length, c.plan_key) for c in containers]
             flags = []
+            shard_ids = [0] * len(containers)
+            shard_devices = {}
+            for b in buckets:
+                shard_devices[b.shard] = b.device
+                for i in b.items:
+                    shard_ids[i] = b.shard
         self.stats.batches += 1
         self.stats.signals += len(meta)
 
@@ -309,51 +356,92 @@ class Transcoder:
         # resolve the (source, target) plan pairings up front: device
         # tables/bases upload through the shared caches before dispatch.
         # max_width (the widest dst encode bucket) sizes the one-time zero
-        # pad that keeps every _gather_rows dynamic_slice in bounds.
+        # pad that keeps every fused gather's dynamic_slice in bounds.
         dst_doms = (
             [dst_tables.domain_id] * len(meta)
             if isinstance(dst_tables, DomainTables) else list(dst_domain_ids)
         )
         max_width = 1
-        for (length, src_key), dst_dom in zip(meta, dst_doms):
+        for (length, src_key), dst_dom, shard in zip(
+            meta, dst_doms, shard_ids
+        ):
             src_tab = self.decoder._tables_for(src_key, src_tables)
             dst_tab = self.encoder._tables_for(dst_dom, dst_tables)
-            self.plan_for(src_tab, dst_tab)
+            self.plan_for(src_tab, dst_tab, shard_devices[shard])
             n_dst = dst_tab.config.n
             max_width = max(
-                max_width, _p2(max(-(-length // n_dst), 1)) * n_dst
+                max_width, p2(max(-(-length // n_dst), 1)) * n_dst
             )
         self.stats.plan_hits = self._plans.hits
         self.stats.plan_misses = self._plans.misses
 
         decoded = self.decoder.decode_streams(groups, src_tables)
+        group_shards = [
+            g.shard if isinstance(g, StreamGroup) else None for g in groups
+        ]
+        if None in group_shards:
+            # lazy container staging: shard rides the scheduler buckets
+            group_shards = [b.shard for b in buckets]
 
-        # flatten the decoded window tensors once (padded once, by the
-        # widest bucket); per-signal sample runs are contiguous, so encode
-        # staging is one batched dynamic_slice per bucket
+        # flatten each shard's decoded window tensors once (zero-padded by
+        # the widest bucket so every gather slice stays in bounds, then up
+        # to a power-of-two length: the flat tensor is an operand of the
+        # fused gather+encode jit, so an unbucketed data-dependent length
+        # would recompile the whole DCT+quant+pack per distinct archive
+        # size — p2 rounding keeps those specializations O(log sizes) like
+        # every other traced shape in the engines); per-signal sample runs
+        # are contiguous, so encode staging is one batched dynamic_slice
+        # fused into each bucket's encode dispatch
         tensors = decoded.device_windows
         starts = np.zeros((len(meta),), dtype=np.int64)
+        flats: Dict[int, jnp.ndarray] = {}
+        remaining: Dict[int, int] = {}
         if tensors:
-            flat = jnp.concatenate(
-                [w.reshape(-1) for w in tensors]
-                + [jnp.zeros((max_width,), tensors[0].dtype)]
-            )
-            bases = np.concatenate(
-                [[0], np.cumsum([w.size for w in tensors])]
-            ).astype(np.int64)
+            bases = np.zeros((len(tensors),), dtype=np.int64)
+            for shard in sorted(set(group_shards)):
+                gidx = [g for g, s in enumerate(group_shards) if s == shard]
+                off = 0
+                for g in gidx:
+                    bases[g] = off
+                    off += tensors[g].size
+                if off + max_width > np.iinfo(np.int32).max:
+                    # gather starts ride int32 (jax default x32): a flat
+                    # tensor past 2^31 samples would wrap offsets negative
+                    # and re-encode the wrong samples SILENTLY — refuse
+                    raise ValueError(
+                        f"shard {shard}'s decoded windows span "
+                        f"{off + max_width} samples, past the int32 gather "
+                        "range — transcode the archive in smaller batches"
+                    )
+                pad = putter(shard_devices[shard])(np.zeros(
+                    (p2(off + max_width) - off,), np.float32
+                ))
+                flats[shard] = jnp.concatenate(
+                    [tensors[g].reshape(-1) for g in gidx] + [pad]
+                )
+                remaining[shard] = 0
             widths = [w.shape[1] for w in tensors]
             for i in range(len(meta)):
                 s = decoded._slices[member_pos[i]]
                 starts[i] = bases[s.group] + s.win_off * widths[s.group]
+                remaining[shard_ids[i]] += 1
 
-        def stage(idxs: List[int], kp: int, wp: int, n: int) -> jnp.ndarray:
+        def stage(idxs, kp: int, wp: int, n: int, device) -> GatherStage:
+            shard = shard_ids[idxs[0]]  # bucket rows share one shard (pinned)
             st = np.zeros((kp,), dtype=np.int32)
             ln = np.zeros((kp,), dtype=np.int32)
             for row, i in enumerate(idxs):
                 st[row] = starts[i]
                 ln[row] = lengths[i]
-            return _gather_rows(
-                flat, jnp.asarray(st), jnp.asarray(ln), width=wp * n
+            put = putter(device)
+            remaining[shard] -= len(idxs)
+            return GatherStage(
+                flat=flats[shard],
+                starts=put(st),
+                lens=put(ln),
+                # last bucket gathering from this shard's decoded windows:
+                # donate the flat buffer into the fused encode
+                donate=remaining[shard] == 0,
             )
 
         out = self.encoder.encode_staged(
@@ -361,6 +449,8 @@ class Transcoder:
             domain_ids=dst_domain_ids,
             stage=stage,
             pending_flags=flags,
+            shard_ids=shard_ids,
+            shard_devices=shard_devices,
         )
         if src_batch is not None:
             # commit point: the source's buffers now back the transcode

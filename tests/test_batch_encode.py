@@ -116,7 +116,11 @@ def test_bucketing_bounds_dispatches(power_tables):
     ]  # all land in the 1024-window bucket (n=32)
     enc = BatchEncoder()
     enc.encode(sigs, power_tables).to_host()
-    assert enc.stats.dispatches == 1
+    # one fused dispatch per shard of the single bucket (shard count > 1
+    # only under the multi-device CI leg)
+    assert enc.stats.dispatches == min(
+        len(sigs), enc.scheduler.num_shards
+    )
 
 
 def test_plan_cache_reuse(power_tables):

@@ -11,6 +11,10 @@ shim and execute for real on the CI leg that installs ``.[test]``):
   * ``pack_symlen_chunked`` output always unpacks — bit-exactly — under
     both the serial host decoder (``unpack_symlen_np``) and the Pallas
     ``huffman_decode_tile`` kernel (interpret mode).
+  * drawn *mixed-domain batches* through the full serving pipeline —
+    container-source AND device-resident ``EncodedBatch``-source transcode
+    arms — are byte-identical to the engine round trip (decode to host,
+    re-encode), signal order and routing preserved.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -254,3 +258,83 @@ def test_chunked_pack_unpacks_everywhere_pinned(seed, num_symbols, chunk,
 def test_chunked_pack_unpacks_everywhere_property(seed, num_symbols, chunk,
                                                   l_max):
     check_chunked_pack_unpacks_everywhere(seed, num_symbols, chunk, l_max)
+
+
+# ---------------------------------------------------------------------------
+# Property 3: drawn mixed-domain batches, container- and EncodedBatch-source.
+# ---------------------------------------------------------------------------
+def check_mixed_domain_batch(seed, specs, chunk_size, from_encoded):
+    """``specs`` is [(length, domain)] per signal.  The whole serving
+    pipeline on a mixed-domain batch — batched encode, then transcode from
+    either drained containers or the device-resident EncodedBatch — must
+    be byte-identical to the engine round trip (decode to host signals,
+    re-encode under the target tables), order and domain routing
+    preserved."""
+    rng = np.random.default_rng(seed)
+    # two source domains with distinct (n, e, l_max) operating points, one
+    # target config: fixed shapes keep XLA bucket compiles bounded while
+    # the drawn lengths sweep window/batch bucket boundaries
+    src = {
+        0: _tables(seed, 16, 4, 12, domain_id=0),
+        1: _tables(seed + 1, 8, 4, 10, domain_id=1),
+    }
+    dst = _tables(seed + 2, 32, 8, 12, domain_id=2)
+    lengths = [length for length, _ in specs]
+    doms = [dom for _, dom in specs]
+    sigs = [_walk(rng, length) for length in lengths]
+
+    batch = BatchEncoder(chunk_size=chunk_size).encode(
+        sigs, src, domain_ids=doms
+    )
+    if from_encoded:
+        # reference containers from an identically-configured second encode
+        # (the batch itself is consumed by the transcode)
+        ref_containers = BatchEncoder(chunk_size=chunk_size).encode(
+            sigs, src, domain_ids=doms
+        ).to_host()
+        source = batch
+    else:
+        ref_containers = batch.to_host()
+        source = ref_containers
+
+    ref_sigs = BatchDecoder().decode(ref_containers, src).to_host()
+    ref = BatchEncoder(chunk_size=chunk_size).encode(ref_sigs, dst).to_host()
+    got = Transcoder(chunk_size=chunk_size).transcode_to_host(
+        source, src, dst
+    )
+    assert len(got) == len(ref) == len(sigs)
+    for a, b in zip(got, ref):
+        assert a.to_bytes() == b.to_bytes()
+        assert a.domain_id == dst.domain_id
+    # transcoded containers still decode to the source order's shapes
+    for c, sig in zip(got, sigs):
+        assert decode(c, dst).shape == sig.shape
+
+
+@pytest.mark.parametrize(
+    "seed,specs,chunk,from_encoded",
+    [
+        (20, [(1000, 0), (257, 1), (0, 0), (129, 1)], 64, False),
+        (21, [(513, 1), (512, 0), (511, 1)], 33, True),
+        (22, [(2000, 0)], 1024, True),  # single-signal degenerate draw
+        (23, [(5, 1), (700, 1), (700, 0), (64, 0), (63, 1)], 7, False),
+    ],
+)
+def test_mixed_domain_batch_pinned(seed, specs, chunk, from_encoded):
+    """Pinned draws of the mixed-domain property — run with or without
+    hypothesis."""
+    check_mixed_domain_batch(seed, specs, chunk, from_encoded)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(0, 2**16),
+    st.lists(
+        st.tuples(st.integers(0, 1200), st.integers(0, 1)),
+        min_size=1, max_size=6,
+    ),
+    st.sampled_from([16, 64, 1024]),
+    st.booleans(),
+)
+def test_mixed_domain_batch_property(seed, specs, chunk, from_encoded):
+    check_mixed_domain_batch(seed, specs, chunk, from_encoded)
