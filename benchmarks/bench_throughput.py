@@ -682,15 +682,21 @@ def bench_pipeline(
     return results
 
 
-def smoke(mode: str = "all", pipeline: bool = False, num_devices: int = 0):
+def smoke(mode: str = "all", pipeline: bool = False, num_devices: int = 0,
+          use_kernels: bool = False):
     """Tiny-size encode+decode+transcode batched smoke for CI: exercises
     the serving hot paths (bucketing, plan caches, fused dispatches,
     chunked packing, the device-resident transcode — and, with
     ``--pipeline``, the double-buffered/sharded executor axes) end to end
     in well under a minute, and sanity-checks the speedup/CR numbers are
-    finite."""
+    finite.  ``--use-kernels`` flips every engine the smoke constructs
+    onto the fused Pallas path (via the FPTC_USE_KERNELS process default),
+    so the same sections report the kernel-path dispatch counts/timings —
+    bytes are identical by construction, so every assertion still holds."""
+    if use_kernels:
+        os.environ["FPTC_USE_KERNELS"] = "1"
     os.makedirs(ART, exist_ok=True)
-    results = {}
+    results = {"config": {"use_kernels": use_kernels}}
     if mode in ("all", "decode"):
         results["batched"] = bench_batched(fast=True, log2_range=(11.0, 12.0))
     if mode in ("all", "encode"):
@@ -719,8 +725,8 @@ def smoke(mode: str = "all", pipeline: bool = False, num_devices: int = 0):
             rec = results["pipeline"][m]
             assert np.isfinite(rec["pipeline_speedup_warm"]), (m, rec)
     for section, recs in results.items():
-        if section == "pipeline":
-            continue  # different shape, asserted above
+        if section in ("pipeline", "config"):
+            continue  # different shape; pipeline asserted above
         for bs, rec in recs.items():
             assert np.isfinite(rec["speedup_warm"]), (section, bs, rec)
     if "transcode" in results:
@@ -835,10 +841,19 @@ if __name__ == "__main__":
         "visible; fake N CPU devices with "
         "XLA_FLAGS=--xla_force_host_platform_device_count=N)",
     )
+    ap.add_argument(
+        "--use-kernels",
+        action="store_true",
+        help="run every engine the smoke constructs on the fused Pallas "
+        "kernel path (interpret mode off-TPU; bytes identical to the XLA "
+        "path by construction)",
+    )
     args = ap.parse_args()
     if args.smoke:
         smoke(mode=args.mode, pipeline=args.pipeline,
-              num_devices=args.devices)
+              num_devices=args.devices, use_kernels=args.use_kernels)
     else:
+        if args.use_kernels:
+            os.environ["FPTC_USE_KERNELS"] = "1"
         run(fast=args.fast, mode=args.mode, pipeline=args.pipeline,
             num_devices=args.devices)

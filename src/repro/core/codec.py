@@ -14,7 +14,7 @@ Two matched implementations:
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -187,14 +187,20 @@ def _decode_device(
 
 
 def decode_device(
-    container: Container, tables: DomainTables, *, use_kernels: bool = False
+    container: Container,
+    tables: DomainTables,
+    *,
+    use_kernels: Optional[bool] = None,
 ) -> np.ndarray:
     """Word-parallel decode (the paper's dual-fused GPU pipeline on XLA/TPU).
 
     Batch-of-one wrapper over the bucketed batch engine
     (:mod:`repro.serving.batch_decode`): shape buckets bound recompilation,
-    tables/bases ride the persistent plan cache.  Decode many containers at
-    once with :class:`repro.serving.batch_decode.BatchDecoder` directly.
+    tables/bases ride the persistent plan cache.  ``use_kernels`` selects
+    the fused Pallas megakernel path (``None`` defers to the process-wide
+    ``FPTC_USE_KERNELS`` default; the kernel path is bit-identical to the
+    XLA path).  Decode many containers at once with
+    :class:`repro.serving.batch_decode.BatchDecoder` directly.
     """
     from repro.serving.batch_decode import default_decoder
 

@@ -256,6 +256,30 @@ def _pack_chunk(
     Returns (hi uint32[M], lo uint32[M], symlen int32[M], num_words int32);
     the valid word prefix is ``num_words``.
 
+    The (code, length) table lookup happens here; the packing math itself
+    lives in :func:`_pack_chunk_emit` so the fused Pallas encode kernel
+    (``repro.kernels.encode_fused``), which looks the tables up via the
+    one-hot MXU idiom instead of a gather, runs the *same* emit code —
+    that sharing is what makes the kernel path bit-identical by
+    construction.
+    """
+    m = symbols.shape[0]
+    if m == 0:
+        z = jnp.zeros((0,), jnp.uint32)
+        return z, z, jnp.zeros((0,), jnp.int32), jnp.int32(0)
+    # masked slots emit a zero-length, zero-valued code: a no-op
+    code = jnp.where(valid, codes[symbols], jnp.uint32(0))
+    clen = jnp.where(valid, lengths[symbols], 0)
+    return _pack_chunk_emit(code, clen, valid)
+
+
+def _pack_chunk_emit(
+    code: jnp.ndarray,  # uint32[M] right-aligned codewords (0 when masked)
+    clen: jnp.ndarray,  # int32[M] codeword lengths (0 when masked)
+    valid: jnp.ndarray,  # bool[M]
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Greedy word materialization from per-symbol (code, length) pairs.
+
     The only truly sequential part of greedy packing is the (bit offset,
     word index) recurrence — an O(1) carry per symbol — so that is *all* the
     ``lax.scan`` computes (carrying the output buffers instead, as
@@ -267,13 +291,7 @@ def _pack_chunk(
     of one cumulative sum at segment boundaries found by ``searchsorted``
     (uint32 overflow wraps; differences stay exact mod 2^32).
     """
-    m = symbols.shape[0]
-    if m == 0:
-        z = jnp.zeros((0,), jnp.uint32)
-        return z, z, jnp.zeros((0,), jnp.int32), jnp.int32(0)
-    # masked slots emit a zero-length, zero-valued code: a no-op
-    code = jnp.where(valid, codes[symbols], jnp.uint32(0))
-    clen = jnp.where(valid, lengths[symbols], 0)
+    m = code.shape[0]
 
     def step(carry, cl):
         bit_size, w = carry

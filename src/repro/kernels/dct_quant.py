@@ -9,6 +9,14 @@ the accelerator matters.
 
     f32[W_blk, N] @ dct_basis[N, E]  --(MXU)-->  coeffs f32[W_blk, E]
     coeffs --(3-zone quantize, elementwise)-->  levels int32[W_blk, E]
+
+Two quantization arms share the tile: the default inlines the 3-zone math
+(hand-written for the VPU; may differ from the reference by one level at a
+cell boundary for a ~1e-3 fraction of samples), while ``exact=True``
+traces ``repro.core.quantize.quantize`` itself inside the kernel — the
+bit-parity arm the fused encode kernel (``repro.kernels.encode_fused``,
+which extends this tile all the way into Huffman codeword emission) is
+built on.
 """
 from __future__ import annotations
 
@@ -17,6 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.quantize import QuantTable, quantize as _quantize_exact
 
 __all__ = ["dct_quant"]
 
@@ -32,10 +42,21 @@ def _kernel(
     mu_ref,  # f32[1]
     alpha1_ref,  # f32[1]
     out_ref,  # int32[BW, E]
+    *,
+    exact: bool = False,
 ):
     c = jnp.dot(
         windows_ref[...], basis_ref[...], preferred_element_type=jnp.float32
     )  # [BW, E]
+    if exact:
+        table = QuantTable(
+            zone=zone_ref[...],
+            scale=scale_ref[...],
+            mu=mu_ref[0],
+            alpha1=alpha1_ref[0],
+        )
+        out_ref[...] = _quantize_exact(c, table).astype(jnp.int32)
+        return
     zone = zone_ref[...]
     a = scale_ref[...]
     mu = mu_ref[0]
@@ -74,7 +95,7 @@ def _kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("e", "block_windows", "interpret")
+    jax.jit, static_argnames=("e", "block_windows", "interpret", "exact")
 )
 def dct_quant(
     windows: jnp.ndarray,  # f32[W, N]
@@ -87,8 +108,12 @@ def dct_quant(
     e: int,
     block_windows: int = BLOCK_WINDOWS,
     interpret: bool = True,
+    exact: bool = False,
 ) -> jnp.ndarray:
-    """Fused forward DCT + 3-zone quantize: [W, N] samples -> [W, E] levels."""
+    """Fused forward DCT + 3-zone quantize: [W, N] samples -> [W, E] levels.
+
+    ``exact=True`` selects the reference-parity quantization arm (see the
+    module docstring)."""
     w, n = windows.shape
     num_blocks = -(-w // block_windows)
     wp = num_blocks * block_windows
@@ -96,7 +121,7 @@ def dct_quant(
         windows = jnp.pad(windows, ((0, wp - w), (0, 0)))
 
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, exact=exact),
         grid=(num_blocks,),
         in_specs=[
             pl.BlockSpec((block_windows, n), lambda i: (i, 0)),

@@ -1,0 +1,244 @@
+"""Pallas TPU megakernel: single-dispatch bucket decode (paper §4.2 fused).
+
+FPTC's decoder is "one massively parallel pass" in the paper, but the
+serving engine's kernel path used to be three device programs stitched by
+XLA — the Huffman tile, an XLA scatter compaction, and the iDCT kernel —
+each paying an HBM round trip for the ``[max_symlen, W]`` padded tile.
+This kernel is the single-dispatch shape: one ``pallas_call`` whose grid
+has two *phases* (the coarse/fine fusion of Tian et al., "Revisiting
+Huffman Coding", and cuSZ+'s fused gap-array design):
+
+  phase 1 (steps ``0 .. num_word_blocks``): per word block, the arithmetic
+    canonical Huffman decode fills a VMEM tile, a VMEM-resident exclusive
+    prefix-scan of the symlen sidecar assigns output offsets (running base
+    in SMEM scratch across the sequential TPU grid), and the cooperative
+    word-major store compacts symbols into a dense VMEM *scratch* stream —
+    the padded tile and the dense symbol stream never touch HBM;
+  phase 2 (remaining steps): per window block, levels are read back out of
+    the dense scratch, dequantized by *exact selection* from the
+    materialized 256-level reconstruction LUT
+    (``repro.core.quantize.quant_grid`` — precomputed once per decode
+    plan, so the fused path and the XLA reference path consume literally
+    the same float values and stay bit-identical under jit), and
+    multiplied against the iDCT basis on the MXU into the output block.
+
+VMEM budget per grid step (BLOCK_WORDS=512, BLOCK_WINDOWS=256, MS<=64,
+N, E <= 128):
+  word block in: hi/lo/symlen    3 * 512 * 4 B          =    6 KiB
+  decode tables                                         <    3 KiB
+  dequant LUT                    128 * 256 * 4 B        =  128 KiB
+  tile scratch                   64 * 512 * 4 B         =  128 KiB
+  dense symbol scratch           4 B * (Wn * E + MS)    = data-dependent
+  idct basis                     128 * 128 * 4 B        =   64 KiB
+  out window block               256 * 128 * 4 B        =  128 KiB
+The dense scratch (and the resident output) scale with the bucket, so a
+1M-symbol bucket costs ~4 MiB of VMEM — inside a v5e core's ~16 MiB, and
+``repro.kernels.ops`` guards the int32 offset range long before VMEM does.
+
+Like every kernel in this package the megakernel is validated in interpret
+mode (CPU); ``core.symlen.compact_padded_scatter`` + the staged kernels
+remain the interpret-mode oracle it is tested against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.huffman_decode import BLOCK_WORDS, decode_block_to_dense
+
+__all__ = ["decode_fused", "lut_dequant", "BLOCK_WINDOWS"]
+
+BLOCK_WINDOWS = 256
+
+
+def lut_dequant(levels: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Exact-selection dequant: levels int32[W, E], lut f32[E, 256] ->
+    coeffs f32[W, E] with ``coeffs[w, k] = lut[k, levels[w, k]]``.
+
+    A masked sum over the 256 level values — each element selects exactly
+    one LUT entry, so the result is bit-identical to a gather while
+    lowering to pure vector compares/selects (no per-element VMEM gather,
+    which TPUs lack).  Both the fused kernel and the XLA bucket path
+    dequantize through the same plan-resident LUT, which is what makes
+    their float outputs identical.
+    """
+
+    def step(v, acc):
+        return acc + jnp.where(levels == v, lut[:, v][None, :], 0.0)
+
+    init = jnp.zeros(levels.shape, jnp.float32)
+    return jax.lax.fori_loop(0, 256, step, init)
+
+
+def _fused_kernel(
+    hi_ref,
+    lo_ref,
+    sl_ref,
+    dec_limit_ref,
+    dec_first_ref,
+    dec_rank_ref,
+    dec_syms_ref,
+    lut_ref,  # f32[E, 256] — quant_grid reconstruction values
+    basis_ref,  # f32[E, N]
+    out_ref,  # f32[BLOCK_WINDOWS, N]
+    syms_ref,  # VMEM scratch int32[cap]: the dense symbol stream
+    tile_ref,  # VMEM scratch int32[max_symlen, BLOCK_WORDS]
+    base_ref,  # SMEM scratch int32[1]
+    *,
+    l_max: int,
+    max_symlen: int,
+    num_word_blocks: int,
+    block_windows: int,
+    e: int,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        base_ref[0] = 0
+        syms_ref[...] = jnp.zeros(syms_ref.shape, syms_ref.dtype)
+
+    @pl.when(i < num_word_blocks)
+    def _decode_phase():
+        base = base_ref[0]
+        decoded = decode_block_to_dense(
+            hi_ref[...],
+            lo_ref[...],
+            sl_ref[...],
+            dec_limit_ref[...],
+            dec_first_ref[...],
+            dec_rank_ref[...],
+            dec_syms_ref[...].astype(jnp.float32),
+            syms_ref,
+            tile_ref,
+            base,
+            l_max=l_max,
+            max_symlen=max_symlen,
+        )
+        base_ref[0] = base + decoded
+
+    @pl.when(i >= num_word_blocks)
+    def _idct_phase():
+        j = i - num_word_blocks
+        levels = pl.load(
+            syms_ref, (pl.dslice(j * block_windows * e, block_windows * e),)
+        ).reshape(block_windows, e)
+        coeffs = lut_dequant(levels, lut_ref[...])
+        out_ref[...] = jnp.dot(
+            coeffs, basis_ref[...], preferred_element_type=jnp.float32
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "l_max",
+        "max_symlen",
+        "num_windows",
+        "n",
+        "e",
+        "block_words",
+        "block_windows",
+        "interpret",
+    ),
+)
+def decode_fused(
+    hi: jnp.ndarray,  # uint32[W] (concatenated, zero-padded bucket words)
+    lo: jnp.ndarray,  # uint32[W]
+    symlen: jnp.ndarray,  # int32[W] (0 on padding words)
+    dec_limit: jnp.ndarray,
+    dec_first: jnp.ndarray,
+    dec_rank: jnp.ndarray,
+    dec_syms: jnp.ndarray,
+    lut: jnp.ndarray,  # f32[E, 256] quant_grid LUT
+    basis: jnp.ndarray,  # f32[E, N] idct basis
+    *,
+    l_max: int,
+    max_symlen: int,
+    num_windows: int,
+    n: int,
+    e: int,
+    block_words: int = BLOCK_WORDS,
+    block_windows: int = BLOCK_WINDOWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One ``pallas_call``: packed bucket words -> windows f32[num_windows, N].
+
+    The whole decode bucket — Huffman + prefix-scan compaction + dequant +
+    iDCT — in a single dispatch with no intermediate HBM tensor: the padded
+    tile and the dense symbol stream live in VMEM scratch only.  Positions
+    past the stream's true symbol total read as level 0 (zero-initialized
+    scratch + re-zeroed spill, matching the XLA scatter's zero fill), so
+    even padding windows come out bit-identical to the XLA bucket arm.
+    """
+    w = hi.shape[0]
+    block_words = min(block_words, max(w, 1))
+    num_word_blocks = -(-w // block_words)
+    wp = num_word_blocks * block_words
+    if wp != w:
+        hi = jnp.pad(hi, (0, wp - w))
+        lo = jnp.pad(lo, (0, wp - w))
+        symlen = jnp.pad(symlen, (0, wp - w))
+    block_windows = min(block_windows, max(num_windows, 1))
+    num_win_blocks = -(-num_windows // block_windows)
+    nwp = num_win_blocks * block_windows
+
+    # dense symbol scratch: every window slot plus one tile row of spill
+    cap = -(-(nwp * e + max_symlen) // 128) * 128
+    nwb = num_word_blocks
+    kernel = functools.partial(
+        _fused_kernel,
+        l_max=l_max,
+        max_symlen=max_symlen,
+        num_word_blocks=nwb,
+        block_windows=block_windows,
+        e=e,
+    )
+
+    def word_ix(i):
+        return (jnp.minimum(i, nwb - 1),)
+
+    def rep(i):
+        return (0,)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(nwb + num_win_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_words,), word_ix),
+            pl.BlockSpec((block_words,), word_ix),
+            pl.BlockSpec((block_words,), word_ix),
+            pl.BlockSpec((dec_limit.shape[0],), rep),
+            pl.BlockSpec((dec_first.shape[0],), rep),
+            pl.BlockSpec((dec_rank.shape[0],), rep),
+            pl.BlockSpec((256,), rep),
+            pl.BlockSpec((e, 256), lambda i: (0, 0)),
+            pl.BlockSpec((e, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_windows, n),
+            lambda i: (jnp.maximum(i - nwb, 0), 0),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nwp, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((cap,), jnp.int32),
+            pltpu.VMEM((max_symlen, block_words), jnp.int32),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        hi,
+        lo,
+        symlen.astype(jnp.int32),
+        dec_limit,
+        dec_first,
+        dec_rank,
+        dec_syms,
+        lut,
+        basis,
+    )
+    return out[:num_windows]

@@ -1,0 +1,218 @@
+"""Pallas TPU kernel: fused encode bucket — DCT + quantize + SymLen pack.
+
+``kernels/dct_quant.py`` hand-tiles the lossy half of the encoder; this
+kernel extends that tile all the way into Huffman codeword emission so a
+whole encode bucket is ONE ``pallas_call``: windows -> DCT (MXU) ->
+3-zone quantize -> per-symbol (length, code) lookup via the one-hot
+matmul idiom -> chunk-parallel SymLen word materialization, all in one
+VMEM residency.  The grid runs one signal per step; each step packs the
+signal's chunks concurrently (the scan carries only the O(1)
+bit-offset/word-index recurrence, vectorized across the chunk axis).
+
+Bit parity is by construction, not by luck:
+
+  * the quantizer is ``repro.core.quantize.quantize`` itself (the exact
+    reference math, traced inside the kernel);
+  * the (code, length) lookup is a one-hot ``[C, 256]`` matmul whose f32
+    sums are exact (codewords are < 2^l_max <= 2^24, lengths <= 64);
+  * the word materialization calls ``repro.core.symlen._pack_chunk_emit``
+    — literally the same segment-sum code the XLA path runs — under an
+    in-kernel ``vmap`` over chunks.
+
+So ``BatchEncoder(use_kernels=True)`` produces byte-identical streams to
+the XLA engine path (pinned by the golden + conformance suites in
+interpret mode).
+
+VMEM budget per grid step (Wp windows, N, E <= 128, chunk C, B chunks):
+  signal row                     4 B * Wp * N
+  coeffs / levels                4 B * Wp * E (x2)
+  one-hot lookup block           4 B * B * C * 256  (whole-signal; the
+                                 kernel's largest transient — 4 MiB at
+                                 Sp = 4096 symbols)
+  chunk parts out                4 B * 3 * B * C
+On real TPU the one-hot block wants per-chunk tiling (a ROADMAP
+follow-up); in interpret mode (how these kernels are validated) XLA fuses
+it and the block never materializes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quantize import QuantTable, quantize
+from repro.core.symlen import _pack_chunk_emit
+
+__all__ = ["encode_fused"]
+
+
+def _kernel(
+    sig_ref,  # f32[1, Wp * N]
+    counts_ref,  # int32[1] — true symbol count for this signal
+    codes_ref,  # uint32[256]
+    lengths_ref,  # int32[256]
+    zone_ref,  # int32[E]
+    scale_ref,  # f32[E]
+    mu_ref,  # f32[1]
+    alpha1_ref,  # f32[1]
+    basis_ref,  # f32[N, E] (dct_basis)
+    hi_ref,  # uint32[1, B, C]
+    lo_ref,  # uint32[1, B, C]
+    sl_ref,  # int32[1, B, C]
+    wpc_ref,  # int32[1, B]
+    bad_ref,  # int32[1] — histogram-gap flag for this signal
+    *,
+    n: int,
+    e: int,
+    num_chunks: int,
+    chunk_size: int,
+    check_gaps: bool,
+):
+    windows = sig_ref[...].reshape(-1, n)  # [Wp, N]
+    coeffs = jnp.dot(
+        windows, basis_ref[...], preferred_element_type=jnp.float32
+    )  # [Wp, E]
+    quant = QuantTable(
+        zone=zone_ref[...],
+        scale=scale_ref[...],
+        mu=mu_ref[0],
+        alpha1=alpha1_ref[0],
+    )
+    # the exact reference quantizer — same ops the XLA path traces, so the
+    # levels (hence every packed bit) are identical under jit
+    syms = quantize(coeffs, quant).reshape(-1).astype(jnp.int32)  # [Sp]
+    cap = num_chunks * chunk_size
+    if cap != syms.shape[0]:
+        syms = jnp.pad(syms, (0, cap - syms.shape[0]))
+    valid = jnp.arange(cap, dtype=jnp.int32) < counts_ref[0]
+
+    codes_f = codes_ref[...].astype(jnp.float32)  # exact: < 2^l_max <= 2^24
+    lengths_f = lengths_ref[...].astype(jnp.float32)
+    sym_iota = jnp.arange(256, dtype=jnp.int32)
+
+    # one batched one-hot lookup for the whole signal (a single MXU matmul
+    # equation — an unrolled per-chunk loop traces O(B) ops for the same
+    # exact integer selections); the [cap, 256] block is the kernel's
+    # largest transient, see the module docstring's VMEM note
+    onehot = (syms[:, None] == sym_iota[None, :]).astype(jnp.float32)
+    raw_code = (
+        jnp.dot(onehot, codes_f, preferred_element_type=jnp.float32)
+        .astype(jnp.uint32).reshape(num_chunks, chunk_size)
+    )
+    raw_len = (
+        jnp.dot(onehot, lengths_f, preferred_element_type=jnp.float32)
+        .astype(jnp.int32).reshape(num_chunks, chunk_size)
+    )
+    valid = valid.reshape(num_chunks, chunk_size)
+
+    if check_gaps:
+        bad_ref[...] = jnp.any((raw_len == 0) & valid).astype(
+            jnp.int32
+        )[None]
+    else:
+        bad_ref[...] = jnp.zeros((1,), jnp.int32)
+
+    # masked slots emit a zero-length, zero-valued code: a no-op (the same
+    # masking _pack_chunk applies before its emit)
+    code = jnp.where(valid, raw_code, jnp.uint32(0))
+    clen = jnp.where(valid, raw_len, 0)
+    hi, lo, sl, wpc = jax.vmap(_pack_chunk_emit)(code, clen, valid)
+    hi_ref[...] = hi[None]
+    lo_ref[...] = lo[None]
+    sl_ref[...] = sl[None]
+    wpc_ref[...] = wpc[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "e", "chunk_size", "check_gaps", "interpret"),
+)
+def encode_fused(
+    signals: jnp.ndarray,  # f32[K, Wp * N] (zero-padded signal rows)
+    counts: jnp.ndarray,  # int32[K] true symbol count per signal
+    codes: jnp.ndarray,  # uint32[256]
+    lengths: jnp.ndarray,  # int32[256]
+    zone: jnp.ndarray,  # int32[E]
+    scale: jnp.ndarray,  # f32[E]
+    mu: jnp.ndarray,
+    alpha1: jnp.ndarray,
+    basis: jnp.ndarray,  # f32[N, E] dct_basis
+    *,
+    n: int,
+    e: int,
+    chunk_size: int,
+    check_gaps: bool,
+    interpret: bool = True,
+):
+    """Fused bucket encode, one ``pallas_call``: signal rows -> chunk parts.
+
+    Returns ``(hi uint32[K, B, C], lo uint32[K, B, C], symlen int32[K, B,
+    C], words_per_chunk int32[K, B], bad bool[])`` — exactly the contract
+    of the XLA path (``vmap`` of :func:`repro.core.symlen.
+    pack_symlen_chunked_parts` plus the batch-wide histogram-gap flag),
+    byte for byte.
+    """
+    k, width = signals.shape
+    sp = (width // n) * e
+    num_chunks = max(-(-sp // chunk_size), 1)
+    kernel = functools.partial(
+        _kernel,
+        n=n,
+        e=e,
+        num_chunks=num_chunks,
+        chunk_size=chunk_size,
+        check_gaps=check_gaps,
+    )
+
+    def row(i):
+        return (i, 0)
+
+    def row3(i):
+        return (i, 0, 0)
+
+    def rep(i):
+        return (0,)
+
+    hi, lo, sl, wpc, bad = pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, width), row),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((256,), rep),
+            pl.BlockSpec((256,), rep),
+            pl.BlockSpec((e,), rep),
+            pl.BlockSpec((e,), rep),
+            pl.BlockSpec((1,), rep),
+            pl.BlockSpec((1,), rep),
+            pl.BlockSpec((n, e), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, num_chunks, chunk_size), row3),
+            pl.BlockSpec((1, num_chunks, chunk_size), row3),
+            pl.BlockSpec((1, num_chunks, chunk_size), row3),
+            pl.BlockSpec((1, num_chunks), row),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, num_chunks, chunk_size), jnp.uint32),
+            jax.ShapeDtypeStruct((k, num_chunks, chunk_size), jnp.uint32),
+            jax.ShapeDtypeStruct((k, num_chunks, chunk_size), jnp.int32),
+            jax.ShapeDtypeStruct((k, num_chunks), jnp.int32),
+            jax.ShapeDtypeStruct((k,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        signals,
+        counts.astype(jnp.int32),
+        codes,
+        lengths,
+        zone,
+        scale,
+        jnp.reshape(mu.astype(jnp.float32), (1,)),
+        jnp.reshape(alpha1.astype(jnp.float32), (1,)),
+        basis,
+    )
+    return hi, lo, sl, wpc, jnp.any(bad > 0)

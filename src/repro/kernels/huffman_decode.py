@@ -13,16 +13,29 @@ warp-shuffle cooperative writes.  TPU adaptation (DESIGN.md §2):
     idiom for small-table lookups);
   * 64-bit words are processed as (hi, lo) uint32 pairs with funnel shifts
     (TPU int64 is emulated; uint32 is native VPU width);
-  * the warp-cooperative coalesced write stage becomes a dense **padded tile**
-    ``[MAX_SYMS, BLOCK_WORDS]`` store; compaction (exclusive prefix-sum of
-    symlen + gather) happens at the XLA level in ``ops.huffman_decode`` —
-    exactly the paper's prefix-scan, lifted out of the kernel.
+  * the warp-cooperative coalesced write stage comes in two forms.  The
+    *staged* kernel (:func:`huffman_decode_tile`) stores a dense **padded
+    tile** ``[MAX_SYMS, BLOCK_WORDS]`` and leaves compaction (exclusive
+    prefix-sum of symlen + scatter) to the XLA level — exactly the paper's
+    prefix-scan, lifted out of the kernel.  The *fused* kernel
+    (:func:`huffman_decode_dense`) brings that stage back inside the
+    ``pallas_call``: the symlen sidecar rides into the kernel, a
+    VMEM-resident exclusive prefix-scan gives every word its output offset
+    (a running base carried across the sequential TPU grid in SMEM
+    scratch), and a cooperative word-major store compacts the tile — which
+    now lives only in VMEM scratch — straight into the dense symbol
+    stream.  One dispatch, no ``[max_symlen, W]`` HBM round trip (the
+    coarse/fine fusion of Tian et al., "Revisiting Huffman Coding").
 
 VMEM budget per block (BLOCK_WORDS=512, MAX_SYMS<=64, L_max<=16):
   in:  hi/lo/symlen          3 * 512 * 4 B            =   6 KiB
   tables: limits/first/rank/ symbols                  <   3 KiB
-  out: padded tile           64 * 512 * 4 B           = 128 KiB
+  tile (out or scratch)      64 * 512 * 4 B           = 128 KiB
 well under the ~16 MiB VMEM of a TPU v5e core; BLOCK_WORDS can scale to 4096.
+The fused kernel's dense output block additionally stays resident across
+grid steps (each block writes a different run): ``4 B x num_symbols``, i.e.
+a 1M-symbol bucket holds a 4 MiB output block — callers bound bucket sizes
+(``repro.kernels.ops`` guards the int32 offset range long before VMEM does).
 """
 from __future__ import annotations
 
@@ -31,8 +44,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["huffman_decode_padded", "huffman_decode_tile"]
+__all__ = [
+    "huffman_decode_padded",
+    "huffman_decode_tile",
+    "huffman_decode_dense",
+]
 
 BLOCK_WORDS = 512
 
@@ -47,6 +65,49 @@ def _shr32(x, s):
     return x >> s
 
 
+def _decode_slot(cur_hi, cur_lo, dec_limit, dec_first, dec_rank, syms_f,
+                 *, l_max: int):
+    """Decode ONE symbol for every word in the block simultaneously.
+
+    Returns (sym int32[BW], new_hi, new_lo) — the arithmetic canonical
+    decode (vectorized length compare, rank arithmetic, one-hot MXU symbol
+    lookup) plus the funnel shift that consumes the codeword.  Shared by
+    the staged tile kernel and the fused dense kernels.
+    """
+    lengths_iota = jnp.arange(dec_first.shape[0], dtype=jnp.int32)  # [L+1]
+    prefix = _shr32(cur_hi, 32 - l_max)  # uint32[BW]
+    # --- code length: vectorized compares against limit boundaries ---
+    ge = (prefix[None, :] >= dec_limit[:, None]).astype(jnp.int32)
+    length = 1 + jnp.sum(ge, axis=0)  # int32[BW] in [1, L_max+1]
+    length = jnp.minimum(length, l_max)  # clamp padding-bit garbage
+    # --- first_code / rank_offset lookup via one-hot over lengths ---
+    len_onehot = (
+        length[:, None] == lengths_iota[None, :]
+    )  # bool[BW, L+1]
+    fcs = jnp.sum(
+        jnp.where(len_onehot, dec_first[None, :], jnp.uint32(0)),
+        axis=1,
+        dtype=jnp.uint32,
+    )
+    roff = jnp.sum(
+        jnp.where(len_onehot, dec_rank[None, :], 0), axis=1,
+        dtype=jnp.int32,
+    )
+    rank = roff + _shr32(prefix - fcs, l_max - length).astype(jnp.int32)
+    rank = jnp.clip(rank, 0, 255)
+    # --- symbol: one-hot [BW, 256] @ table[256] on the MXU ---
+    sym_onehot = (
+        rank[:, None] == jnp.arange(256, dtype=jnp.int32)[None, :]
+    ).astype(jnp.float32)
+    sym = jnp.dot(
+        sym_onehot, syms_f, preferred_element_type=jnp.float32
+    ).astype(jnp.int32)
+    # --- funnel-shift the (hi, lo) buffer left by `length` ---
+    new_hi = _shl32(cur_hi, length) | _shr32(cur_lo, 32 - length)
+    new_lo = _shl32(cur_lo, length)
+    return sym, new_hi, new_lo
+
+
 def _decode_kernel(
     hi_ref,
     lo_ref,
@@ -59,54 +120,203 @@ def _decode_kernel(
     l_max: int,
     max_symlen: int,
 ):
-    cur_hi = hi_ref[...]  # uint32[BW]
-    cur_lo = lo_ref[...]
-    bw = cur_hi.shape[0]
-
     dec_limit = dec_limit_ref[...]
     dec_first = dec_first_ref[...]
     dec_rank = dec_rank_ref[...]
     # symbol table as f32 matmul operand (one-hot lookup)
     syms_f = dec_syms_ref[...].astype(jnp.float32)  # [256]
 
-    lengths_iota = jnp.arange(l_max + 1, dtype=jnp.int32)  # [L+1]
+    def slot(j, carry):
+        cur_hi, cur_lo = carry
+        sym, new_hi, new_lo = _decode_slot(
+            cur_hi, cur_lo, dec_limit, dec_first, dec_rank, syms_f,
+            l_max=l_max,
+        )
+        out_ref[pl.dslice(j, 1), :] = sym[None, :]
+        return new_hi, new_lo
+
+    jax.lax.fori_loop(0, max_symlen, slot, (hi_ref[...], lo_ref[...]))
+
+
+def decode_block_to_dense(
+    hi,
+    lo,
+    sl,
+    dec_limit,
+    dec_first,
+    dec_rank,
+    syms_f,
+    out_ref,  # int32[cap] — the dense symbol stream (whole-array block)
+    tile_ref,  # VMEM scratch int32[max_symlen, BLOCK_WORDS]
+    base,  # int32 scalar: output offset of this block's first symbol
+    *,
+    l_max: int,
+    max_symlen: int,
+):
+    """Decode one word block and compact it into ``out_ref`` at ``base``.
+
+    The in-kernel form of the paper's prefix-scan + cooperative-write
+    stage: an exclusive prefix-scan of the block's symlen sidecar (VMEM)
+    gives every word its local output offset, the slot loop fills the
+    padded tile in VMEM *scratch*, and a word-major loop stores each
+    word's ``max_symlen``-wide row at ``base + local[w]``.  Fixed-width
+    rows overlap: word ``w``'s garbage tail ``[symlen[w], max_symlen)`` is
+    exactly covered by word ``w+1``'s row (which starts at
+    ``local[w] + symlen[w]``), so every position before the stream's end
+    holds its true symbol; the one row of spill past the block's end is
+    re-zeroed (callers pad the dense capacity by ``max_symlen`` so the
+    blanking store stays in bounds).
+
+    Returns the number of symbols this block decoded (int32), so callers
+    carrying a running base across sequential grid steps can advance it.
+    """
+    bw = hi.shape[0]
+    local = jnp.cumsum(sl) - sl  # VMEM-resident exclusive prefix scan
 
     def slot(j, carry):
         cur_hi, cur_lo = carry
-        prefix = _shr32(cur_hi, 32 - l_max)  # uint32[BW]
-        # --- code length: vectorized compares against limit boundaries ---
-        ge = (prefix[None, :] >= dec_limit[:, None]).astype(jnp.int32)
-        length = 1 + jnp.sum(ge, axis=0)  # int32[BW] in [1, L_max+1]
-        length = jnp.minimum(length, l_max)  # clamp padding-bit garbage
-        # --- first_code / rank_offset lookup via one-hot over lengths ---
-        len_onehot = (
-            length[:, None] == lengths_iota[None, :]
-        )  # bool[BW, L+1]
-        fcs = jnp.sum(
-            jnp.where(len_onehot, dec_first[None, :], jnp.uint32(0)),
-            axis=1,
-            dtype=jnp.uint32,
+        sym, new_hi, new_lo = _decode_slot(
+            cur_hi, cur_lo, dec_limit, dec_first, dec_rank, syms_f,
+            l_max=l_max,
         )
-        roff = jnp.sum(
-            jnp.where(len_onehot, dec_rank[None, :], 0), axis=1,
-            dtype=jnp.int32,
-        )
-        rank = roff + _shr32(prefix - fcs, l_max - length).astype(jnp.int32)
-        rank = jnp.clip(rank, 0, 255)
-        # --- symbol: one-hot [BW, 256] @ table[256] on the MXU ---
-        sym_onehot = (
-            rank[:, None] == jnp.arange(256, dtype=jnp.int32)[None, :]
-        ).astype(jnp.float32)
-        sym = jnp.dot(
-            sym_onehot, syms_f, preferred_element_type=jnp.float32
-        ).astype(jnp.int32)
-        out_ref[pl.dslice(j, 1), :] = sym[None, :]
-        # --- funnel-shift the (hi, lo) buffer left by `length` ---
-        new_hi = _shl32(cur_hi, length) | _shr32(cur_lo, 32 - length)
-        new_lo = _shl32(cur_lo, length)
+        tile_ref[pl.dslice(j, 1), :] = sym[None, :]
         return new_hi, new_lo
 
-    jax.lax.fori_loop(0, max_symlen, slot, (cur_hi, cur_lo))
+    jax.lax.fori_loop(0, max_symlen, slot, (hi, lo))
+    tile_t = tile_ref[...].T  # [BW, max_symlen], word-major
+
+    def word(w, _):
+        row = jax.lax.dynamic_slice(
+            tile_t, (w, 0), (1, max_symlen)
+        ).reshape(max_symlen)
+        pl.store(out_ref, (pl.dslice(base + local[w], max_symlen),), row)
+        return 0
+
+    jax.lax.fori_loop(0, bw, word, 0)
+    decoded = jnp.sum(sl)
+    # the block's final row wrote < max_symlen junk symbols past its true
+    # end; re-zero them.  For interior blocks the next block overwrites the
+    # same region with real symbols either way — for the LAST block this is
+    # what makes positions beyond the stream read exactly like the XLA
+    # scatter's zero fill (so fused and unfused buckets match bit for bit
+    # even in padding windows).
+    pl.store(
+        out_ref,
+        (pl.dslice(base + decoded, max_symlen),),
+        jnp.zeros((max_symlen,), jnp.int32),
+    )
+    return decoded
+
+
+def _dense_kernel(
+    hi_ref,
+    lo_ref,
+    sl_ref,  # int32[BLOCK_WORDS] — the symlen sidecar rides into the kernel
+    dec_limit_ref,
+    dec_first_ref,
+    dec_rank_ref,
+    dec_syms_ref,
+    out_ref,  # int32[cap] — whole dense stream, revisited every grid step
+    tile_ref,  # VMEM scratch int32[max_symlen, BLOCK_WORDS]
+    base_ref,  # SMEM scratch int32[1]: running output offset across blocks
+    *,
+    l_max: int,
+    max_symlen: int,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        base_ref[0] = 0
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    base = base_ref[0]
+    decoded = decode_block_to_dense(
+        hi_ref[...],
+        lo_ref[...],
+        sl_ref[...],
+        dec_limit_ref[...],
+        dec_first_ref[...],
+        dec_rank_ref[...],
+        dec_syms_ref[...].astype(jnp.float32),
+        out_ref,
+        tile_ref,
+        base,
+        l_max=l_max,
+        max_symlen=max_symlen,
+    )
+    base_ref[0] = base + decoded
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "l_max", "max_symlen", "num_symbols", "block_words", "interpret"
+    ),
+)
+def huffman_decode_dense(
+    hi: jnp.ndarray,  # uint32[W]
+    lo: jnp.ndarray,  # uint32[W]
+    symlen: jnp.ndarray,  # int32[W]
+    dec_limit: jnp.ndarray,
+    dec_first: jnp.ndarray,
+    dec_rank: jnp.ndarray,
+    dec_syms: jnp.ndarray,
+    *,
+    l_max: int,
+    max_symlen: int,
+    num_symbols: int,
+    block_words: int = BLOCK_WORDS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused decode + compaction: packed words -> dense int32[num_symbols].
+
+    ONE ``pallas_call``: the ``[max_symlen, W]`` tile only ever exists as a
+    per-block VMEM scratch, and the dense output offsets come from the
+    in-kernel prefix scan of the symlen sidecar (the running cross-block
+    base rides SMEM scratch across the sequential grid).  Trailing padding
+    words must carry ``symlen == 0``; every position past the true symbol
+    total reads as zero (the cooperative store re-zeroes its one row of
+    spill), exactly like ``compact_padded_scatter``'s zero fill.
+    """
+    w = hi.shape[0]
+    block_words = min(block_words, max(w, 1))
+    num_blocks = -(-w // block_words)
+    wp = num_blocks * block_words
+    if wp != w:
+        hi = jnp.pad(hi, (0, wp - w))
+        lo = jnp.pad(lo, (0, wp - w))
+        symlen = jnp.pad(symlen, (0, wp - w))
+
+    # over-allocate by one tile row for the final word's fixed-width spill,
+    # rounded to the f32/i32 lane tile so the block shape is TPU-friendly
+    cap = -(-(num_symbols + max_symlen) // 128) * 128
+    kernel = functools.partial(
+        _dense_kernel, l_max=l_max, max_symlen=max_symlen
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_words,), lambda i: (i,)),
+            pl.BlockSpec((block_words,), lambda i: (i,)),
+            pl.BlockSpec((block_words,), lambda i: (i,)),
+            # small decode tables: replicated to every block
+            pl.BlockSpec((dec_limit.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((dec_first.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((dec_rank.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((cap,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((cap,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((max_symlen, block_words), jnp.int32),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hi, lo, symlen.astype(jnp.int32), dec_limit, dec_first, dec_rank,
+      dec_syms)
+    return out[:num_symbols]
 
 
 @functools.partial(

@@ -4,6 +4,25 @@ These are the entry points the codec (``repro.core.codec`` with
 ``use_kernels=True``) and the serving/benchmark layers call.  On CPU they run
 the kernels in interpret mode; on TPU set ``interpret=False`` (the default
 flips automatically on TPU backends).
+
+Since the megakernel PR the kernel surface is:
+
+  * :func:`huffman_decode` — ONE dispatch: the fused dense kernel decodes
+    and compacts in the same ``pallas_call`` (the symlen sidecar rides into
+    the kernel; no ``[max_symlen, W]`` HBM tile).
+  * :func:`decode_bucket_fused` — the full decode megakernel: Huffman +
+    compaction + LUT dequant + iDCT in a single ``pallas_call``.
+  * :func:`encode_bucket_fused` — the encode-side twin: DCT + quantize +
+    one-hot codeword lookup + chunk-parallel SymLen pack in one
+    ``pallas_call``, bit-identical to the XLA engine path.
+  * :func:`idct_dequant` / :func:`dct_quant` — the staged per-stage tiles
+    (kept as oracles and for the legacy per-container baseline).
+
+Every wrapper guards the int32 offset range before dispatch: symbol/word
+offsets inside the kernels are int32 (jax default x32), so a bucket whose
+dense symbol stream would cross the 2^31-byte mark must raise loudly
+instead of wrapping offsets negative and compacting the wrong positions
+silently (the same guard discipline as the transcoder's flat-gather path).
 """
 from __future__ import annotations
 
@@ -11,16 +30,28 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dct as _dct
-from repro.core import symlen as _symlen
 from repro.core.calibration import DeviceTables
 from repro.core.quantize import QuantTable
 from repro.kernels import dct_quant as _dq
+from repro.kernels import decode_fused as _df
+from repro.kernels import encode_fused as _ef
 from repro.kernels import huffman_decode as _hd
 from repro.kernels import idct_dequant as _idq
 
-__all__ = ["huffman_decode", "idct_dequant", "dct_quant", "on_tpu"]
+__all__ = [
+    "huffman_decode",
+    "decode_bucket_fused",
+    "encode_bucket_fused",
+    "idct_dequant",
+    "dct_quant",
+    "check_i32_offsets",
+    "on_tpu",
+]
+
+_I32_MAX = np.iinfo(np.int32).max
 
 
 def on_tpu() -> bool:
@@ -29,6 +60,33 @@ def on_tpu() -> bool:
 
 def _interp() -> bool:
     return not on_tpu()
+
+
+def check_i32_offsets(num_symbols: int, max_symlen: int) -> None:
+    """Refuse a decode whose dense symbol offsets would overflow int32.
+
+    The fused kernels' compaction offsets (and the output capacity, which
+    over-allocates one ``max_symlen`` row for the final word's spill) are
+    int32; a bucket past the 2^31-symbol (= 2^31-byte) mark would wrap
+    offsets negative and scatter symbols to the WRONG positions silently.
+    Mirrors the transcoder's flat-gather int32 guard.
+    """
+    if int(num_symbols) + int(max_symlen) > _I32_MAX:
+        raise ValueError(
+            f"decode bucket of {num_symbols} symbols (+{max_symlen} spill) "
+            "exceeds the int32 offset range of the fused kernels — decode "
+            "the archive in smaller batches"
+        )
+
+
+def _check_encode_i32(width: int, e: int, n: int) -> None:
+    """Encode-side arm of the int32 guard: per-signal symbol capacity."""
+    sp = (int(width) // int(n)) * int(e)
+    if sp > _I32_MAX:
+        raise ValueError(
+            f"encode bucket rows of {sp} symbols exceed the int32 offset "
+            "range of the fused pack kernel — encode in smaller windows"
+        )
 
 
 def huffman_decode(
@@ -43,25 +101,99 @@ def huffman_decode(
 ) -> jnp.ndarray:
     """SymLen decode + compaction: packed words -> dense uint8[num_symbols].
 
-    Kernel stage: slot-major per-word tile, grid over word blocks — container
-    boundaries are invisible to the kernel, so concatenated batch streams
-    decode in one dispatch.  Compaction stage: segment-aware scatter driven
-    by one exclusive prefix-sum of the symlen sidecar (core.symlen).
+    ONE dispatch: the symlen sidecar rides into the kernel, a VMEM-resident
+    exclusive prefix-scan assigns per-word output offsets, and the
+    cooperative store compacts symbols inside the same ``pallas_call`` —
+    container boundaries are invisible (the prefix sums are segment sums),
+    so concatenated batch streams decode in this single dispatch with no
+    ``[max_symlen, W]`` HBM tile.  ``core.symlen.compact_padded_scatter``
+    (over the staged tile kernel) remains the interpret-mode oracle.
     """
-    tile = _hd.huffman_decode_tile(
+    check_i32_offsets(num_symbols, max_symlen)
+    dense = _hd.huffman_decode_dense(
         hi,
         lo,
+        symlen,
         tables.dec_limit,
         tables.dec_first,
         tables.dec_rank,
         tables.dec_syms,
         l_max=l_max,
         max_symlen=max_symlen,
+        num_symbols=num_symbols,
         interpret=_interp(),
-    )  # [max_symlen, W] int32
-    return _symlen.compact_padded_scatter(
-        tile.T, symlen, num_symbols
-    ).astype(jnp.uint8)
+    )
+    return dense.astype(jnp.uint8)
+
+
+def decode_bucket_fused(
+    hi: jnp.ndarray,
+    lo: jnp.ndarray,
+    symlen: jnp.ndarray,
+    tables: DeviceTables,
+    lut: jnp.ndarray,  # f32[E, 256] quant_grid reconstruction LUT
+    basis: jnp.ndarray,  # f32[E, N] idct basis
+    *,
+    l_max: int,
+    max_symlen: int,
+    num_windows: int,
+    n: int,
+    e: int,
+) -> jnp.ndarray:
+    """The decode megakernel: packed bucket -> windows f32[num_windows, N]
+    in exactly one ``pallas_call`` (Huffman + compaction + LUT dequant +
+    iDCT; see :mod:`repro.kernels.decode_fused`)."""
+    check_i32_offsets(num_windows * e, max_symlen)
+    return _df.decode_fused(
+        hi,
+        lo,
+        symlen,
+        tables.dec_limit,
+        tables.dec_first,
+        tables.dec_rank,
+        tables.dec_syms,
+        lut,
+        basis,
+        l_max=l_max,
+        max_symlen=max_symlen,
+        num_windows=num_windows,
+        n=n,
+        e=e,
+        interpret=_interp(),
+    )
+
+
+def encode_bucket_fused(
+    signals: jnp.ndarray,  # f32[K, Wp * N]
+    counts: jnp.ndarray,  # int32[K]
+    tables: DeviceTables,
+    basis: jnp.ndarray,  # f32[N, E] dct_basis
+    *,
+    n: int,
+    e: int,
+    chunk_size: int,
+    check_gaps: bool,
+):
+    """The encode megakernel: signal rows -> SymLen chunk parts in one
+    ``pallas_call``, bit-identical to the XLA engine path (see
+    :mod:`repro.kernels.encode_fused`)."""
+    _check_encode_i32(signals.shape[1], e, n)
+    return _ef.encode_fused(
+        signals,
+        counts,
+        tables.codes,
+        tables.lengths,
+        tables.quant.zone,
+        tables.quant.scale,
+        tables.quant.mu,
+        tables.quant.alpha1,
+        basis,
+        n=n,
+        e=e,
+        chunk_size=chunk_size,
+        check_gaps=check_gaps,
+        interpret=_interp(),
+    )
 
 
 def idct_dequant(

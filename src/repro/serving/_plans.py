@@ -17,6 +17,7 @@ default placement and behaves exactly like the pre-sharding cache.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, Tuple, TypeVar
 
@@ -49,12 +50,23 @@ class PlanCache:
 
     ``tables`` may be a single object or a tuple of objects (the transcode
     pairing); identity keying covers every element.
+
+    ``get`` is thread-safe (a lock around lookup/insert, with the factory
+    running OUTSIDE it so hits never stall behind a concurrent build):
+    the engines *prefetch* plans from the :class:`~repro.serving.engine.
+    PipelineExecutor`'s staging worker — the per-device table/basis
+    ``device_put`` of bucket k+1's plan overlaps bucket k's dispatch
+    instead of the first dispatch on each shard paying it — so the cache
+    is hit from both the worker and the dispatching caller thread.  Plan
+    factories only build device arrays (transfers, no jit tracing), which
+    keeps the worker inside its transfers-only contract.
     """
 
     def __init__(self, factory: Callable[..., Plan], maxsize: int = 32):
         self._factory = factory
         self.maxsize = maxsize
         self._plans: "OrderedDict[tuple, Plan]" = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
 
@@ -64,17 +76,28 @@ class PlanCache:
             if isinstance(tables, tuple) else id(tables)
         )
         cache_key = (ident, key, device)
-        plan = self._plans.get(cache_key)
-        if plan is not None:
-            self._plans.move_to_end(cache_key)
-            self.hits += 1
-            return plan
-        self.misses += 1
+        with self._lock:
+            plan = self._plans.get(cache_key)
+            if plan is not None:
+                self._plans.move_to_end(cache_key)
+                self.hits += 1
+                return plan
+            self.misses += 1
+        # build OUTSIDE the lock: the factory runs device transfers, and a
+        # dispatch-thread cache HIT must not stall behind the staging
+        # worker's build (that stall is what plan prefetch removes).  Two
+        # threads racing the same miss build twice; first insert wins and
+        # the duplicate's buffers are dropped — harmless, bytes unaffected.
         plan = self._factory(tables, key, device)
-        self._plans[cache_key] = plan
-        while len(self._plans) > self.maxsize:
-            self._plans.popitem(last=False)
-        return plan
+        with self._lock:
+            existing = self._plans.get(cache_key)
+            if existing is not None:
+                self._plans.move_to_end(cache_key)
+                return existing
+            self._plans[cache_key] = plan
+            while len(self._plans) > self.maxsize:
+                self._plans.popitem(last=False)
+            return plan
 
     def __len__(self) -> int:
         return len(self._plans)

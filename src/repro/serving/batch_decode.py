@@ -64,12 +64,13 @@ from repro.core import dct, symlen
 from repro.core.calibration import DeviceTables, DomainTables
 from repro.core.codec import validate_container_tables
 from repro.core.container import Container
-from repro.core.quantize import dequantize
+from repro.core.quantize import quant_grid
 from repro.serving._plans import PlanCache
 from repro.serving.engine import (
     BucketScheduler,
     DevicesArg,
     PipelineExecutor,
+    default_use_kernels,
     fetch_to_host,
     member_positions,
     p2,
@@ -105,6 +106,7 @@ class DecodePlan:
 
     tables: DeviceTables
     basis: jnp.ndarray  # f32[E, N]
+    lut: jnp.ndarray  # f32[E, 256] — quant_grid reconstruction LUT
     n: int
     e: int
     l_max: int
@@ -119,12 +121,19 @@ def _build_decode_plan(
     domain_id, n, e, l_max = key
     dev_tables = tables.device_tables()
     basis = dct.idct_basis(n, e)
+    # the 256-level reconstruction LUT (quant_grid): dequantization becomes
+    # an exact selection instead of per-symbol transcendentals, and —
+    # because the fused Pallas kernel and the XLA path select from the SAME
+    # materialized values — the two paths' float outputs are bit-identical
+    lut, _ = quant_grid(tables.quant)
     if device is not None:
         dev_tables = jax.device_put(dev_tables, device)
         basis = jax.device_put(basis, device)
+        lut = jax.device_put(lut, device)
     return DecodePlan(
         tables=dev_tables,
         basis=basis,
+        lut=lut,
         n=n,
         e=e,
         l_max=l_max,
@@ -137,17 +146,12 @@ def _build_decode_plan(
 # ---------------------------------------------------------------------------
 # The fused bucket decode — ONE jit specialization per bucket shape.
 # ---------------------------------------------------------------------------
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "l_max", "max_symlen", "num_windows", "n", "e", "use_kernels"
-    ),
-)
-def _decode_bucket(
+def _decode_bucket_math(
     hi: jnp.ndarray,  # uint32[Wp]   (concatenated + zero-padded words)
     lo: jnp.ndarray,  # uint32[Wp]
     sl: jnp.ndarray,  # int32[Wp]    (0 on padding words)
     tables: DeviceTables,
+    lut: jnp.ndarray,  # f32[E, 256] quant_grid reconstruction LUT
     basis: jnp.ndarray,  # f32[E, N]
     *,
     l_max: int,
@@ -164,25 +168,41 @@ def _decode_bucket(
     prefix sums) or stays host-side slice metadata.  Padding words carry
     symlen == 0 and therefore scatter no symbols; padding windows decode to
     don't-care rows that the host slicing never reads.
+
+    Both arms dequantize by exact selection from the plan's materialized
+    256-level LUT (``quant_grid``): faster than per-symbol transcendentals,
+    and — since the fused kernel selects from the SAME values — it is what
+    makes ``use_kernels=True`` bit-identical to this XLA arm.  With
+    ``use_kernels=True`` the whole bucket lowers to exactly ONE
+    ``pallas_call`` (the decode megakernel, ``kernels/decode_fused.py``) —
+    no intermediate ``[max_symlen, W]`` tile, no separate compaction or
+    iDCT program.
     """
     num_symbols = num_windows * e
     if use_kernels:
         from repro.kernels import ops as kops
 
-        syms = kops.huffman_decode(
-            hi, lo, sl, tables,
-            l_max=l_max, max_symlen=max_symlen, num_symbols=num_symbols,
-        )
-        return kops.idct_dequant(
-            syms.reshape(num_windows, e), tables.quant, n=n, basis=basis
+        return kops.decode_bucket_fused(
+            hi, lo, sl, tables, lut, basis,
+            l_max=l_max, max_symlen=max_symlen, num_windows=num_windows,
+            n=n, e=e,
         )
     syms = symlen.unpack_symlen(
         hi, lo, sl,
         tables.dec_limit, tables.dec_first, tables.dec_rank, tables.dec_syms,
         l_max=l_max, max_symlen=max_symlen, num_symbols=num_symbols,
     )
-    coeffs = dequantize(syms.reshape(num_windows, e), tables.quant)
+    levels = syms.reshape(num_windows, e).astype(jnp.int32)
+    coeffs = lut[jnp.arange(e, dtype=jnp.int32)[None, :], levels]
     return coeffs @ basis
+
+
+_decode_bucket = functools.partial(
+    jax.jit,
+    static_argnames=(
+        "l_max", "max_symlen", "num_windows", "n", "e", "use_kernels"
+    ),
+)(_decode_bucket_math)
 
 
 def bucket_cache_size() -> Optional[int]:
@@ -394,12 +414,16 @@ class BatchDecoder:
     def __init__(
         self,
         *,
-        use_kernels: bool = False,
+        use_kernels: Optional[bool] = None,
         plan_cache_size: int = 32,
         pipeline: bool = True,
         devices: DevicesArg = "auto",
         prefetch: int = 2,
     ):
+        # None defers to the process-wide FPTC_USE_KERNELS default — the
+        # kernels-interpret CI leg flips every engine onto the fused path
+        if use_kernels is None:
+            use_kernels = default_use_kernels()
         self.use_kernels = use_kernels
         self._plans = PlanCache(_build_decode_plan, plan_cache_size)
         self.scheduler = BucketScheduler(devices=devices)
@@ -499,6 +523,11 @@ class BatchDecoder:
         def upload(g) -> StreamGroup:
             grp = g() if callable(g) else g
             put = putter(grp.device)
+            # shard-aware plan prefetch: build/upload this bucket's decode
+            # plan (tables + basis + LUT device_put) from the staging
+            # worker, so the first dispatch on each shard doesn't pay it —
+            # PlanCache.get is thread-safe and the factory only transfers
+            self._plan_for_key(tuple(grp.plan_key), tables, grp.device)
             return dataclasses.replace(
                 grp, hi=put(grp.hi), lo=put(grp.lo), symlen=put(grp.symlen)
             )
@@ -515,6 +544,7 @@ class BatchDecoder:
                 grp.lo,
                 grp.symlen,
                 plan.tables,
+                plan.lut,
                 plan.basis,
                 l_max=plan.l_max,
                 max_symlen=symlen_bucket(grp.max_symlen),
@@ -567,7 +597,9 @@ class BatchDecoder:
 _DEFAULTS: Dict[bool, BatchDecoder] = {}
 
 
-def default_decoder(use_kernels: bool = False) -> BatchDecoder:
+def default_decoder(use_kernels: Optional[bool] = None) -> BatchDecoder:
+    if use_kernels is None:
+        use_kernels = default_use_kernels()
     dec = _DEFAULTS.get(use_kernels)
     if dec is None:
         dec = _DEFAULTS[use_kernels] = BatchDecoder(use_kernels=use_kernels)

@@ -69,7 +69,8 @@ from repro.serving.engine import (
     DevicesArg,
     GatherStage,
     PipelineExecutor,
-    fetch_to_host,
+    default_use_kernels,
+    fetch_to_host_stitched,
     p2,
     putter,
 )
@@ -106,6 +107,7 @@ class EncodePlan:
     """
 
     tables: DeviceTables
+    basis: jnp.ndarray  # f32[N, E] dct basis — the fused kernel's operand
     n: int
     e: int
     l_max: int
@@ -120,10 +122,13 @@ def _build_encode_plan(
 ) -> EncodePlan:
     domain_id, n, e, l_max = key
     dev_tables = tables.device_tables()
+    basis = dct.dct_basis(n, e)
     if device is not None:
         dev_tables = jax.device_put(dev_tables, device)
+        basis = jax.device_put(basis, device)
     return EncodePlan(
         tables=dev_tables,
+        basis=basis,
         n=n,
         e=e,
         l_max=l_max,
@@ -261,6 +266,50 @@ def _donation_supported(device) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# The kernel-path twins: the fused Pallas encode tile instead of the XLA
+# DCT+quant+pack — bit-identical output (pinned by the golden/conformance
+# suites), one pallas_call per bucket.
+# ---------------------------------------------------------------------------
+def _encode_bucket_kernels_math(
+    signals, counts, tables, basis, *, n, e, chunk_size, check_gaps
+):
+    from repro.kernels import ops as kops
+
+    return kops.encode_bucket_fused(
+        signals, counts, tables, basis,
+        n=n, e=e, chunk_size=chunk_size, check_gaps=check_gaps,
+    )
+
+
+_encode_bucket_kernels = functools.partial(
+    jax.jit, static_argnames=("n", "e", "chunk_size", "check_gaps")
+)(_encode_bucket_kernels_math)
+
+
+def _encode_bucket_gather_kernels_math(
+    flat, starts, lens, counts, tables, basis,
+    *, width, n, e, chunk_size, check_gaps,
+):
+    """GatherStage staging for the kernel path: the row gather stays an XLA
+    ``dynamic_slice`` batch fused into the same jit as the pallas_call (the
+    gather feeds straight into the kernel's operand; no HBM round trip of a
+    separately-dispatched signal matrix)."""
+    x = _gather_rows_math(flat, starts, lens, width)
+    return _encode_bucket_kernels_math(
+        x, counts, tables, basis,
+        n=n, e=e, chunk_size=chunk_size, check_gaps=check_gaps,
+    )
+
+
+_encode_bucket_gather_kernels = functools.partial(
+    jax.jit, static_argnames=_GATHER_STATICS
+)(_encode_bucket_gather_kernels_math)
+_encode_bucket_gather_kernels_donate = functools.partial(
+    jax.jit, static_argnames=_GATHER_STATICS, donate_argnums=(0,)
+)(_encode_bucket_gather_kernels_math)
+
+
+# ---------------------------------------------------------------------------
 # Encoded batches: streams stay on device until explicitly drained.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -382,7 +431,10 @@ class EncodedBatch:
         """Drain the batch into containers: one sync per bucket (all d2h
         copies in flight together), then a host-side stitch of each
         signal's chunk word-runs (chunk b of signal k contributes its
-        row's first ``wpc[k, b]`` words)."""
+        row's first ``wpc[k, b]`` words).  The stitch is double-buffered
+        (:func:`repro.serving.engine.fetch_to_host_stitched`): a worker
+        concatenates bucket k's numpy chunk runs while bucket k+1's d2h
+        copies land."""
         self._check_live("drain")
         flags = self._pending_flags + [
             (p.plan_key, p.unencodable) for p in self._buckets
@@ -399,33 +451,30 @@ class EncodedBatch:
                     "garbage; recalibrate with Laplace smoothing or a "
                     "complete codebook"
                 )
-        flat = fetch_to_host([
-            a for p in self._buckets
-            for a in (p.hi, p.lo, p.symlen, p.words_per_chunk)
-        ])
-        host = [tuple(flat[4 * b: 4 * b + 4])
-                for b in range(len(self._buckets))]
-        self._consumed = (
-            "it was already drained by to_host() — hold on to the returned "
-            "containers instead of draining twice"
-        )
-        out = []
-        for s in self._slices:
-            hi, lo, sl, wpc = host[s.bucket]
-            runs = [
-                (hi[s.row, b, :w], lo[s.row, b, :w], sl[s.row, b, :w])
-                for b, w in enumerate(wpc[s.row])
-                if w
-            ]
-            if runs:
-                hi_cat = np.concatenate([r[0] for r in runs])
-                lo_cat = np.concatenate([r[1] for r in runs])
-                sl_cat = np.concatenate([r[2] for r in runs])
-            else:
-                hi_cat = lo_cat = np.empty(0, np.uint32)
-                sl_cat = np.empty(0, np.int32)
-            out.append(
-                Container(
+
+        per_bucket: List[List[Tuple[int, _Slice]]] = [
+            [] for _ in self._buckets
+        ]
+        for i, s in enumerate(self._slices):
+            per_bucket[s.bucket].append((i, s))
+
+        def stitch_bucket(b: int, host: List[np.ndarray]):
+            hi, lo, sl, wpc = host
+            stitched = []
+            for i, s in per_bucket[b]:
+                runs = [
+                    (hi[s.row, c, :w], lo[s.row, c, :w], sl[s.row, c, :w])
+                    for c, w in enumerate(wpc[s.row])
+                    if w
+                ]
+                if runs:
+                    hi_cat = np.concatenate([r[0] for r in runs])
+                    lo_cat = np.concatenate([r[1] for r in runs])
+                    sl_cat = np.concatenate([r[2] for r in runs])
+                else:
+                    hi_cat = lo_cat = np.empty(0, np.uint32)
+                    sl_cat = np.empty(0, np.int32)
+                stitched.append((i, Container(
                     words=symlen.u32_to_words(hi_cat, lo_cat),
                     symlen=sl_cat.astype(np.uint8),
                     num_symbols=s.num_windows * s.e,
@@ -435,8 +484,22 @@ class EncodedBatch:
                     e=s.e,
                     l_max=s.l_max,
                     domain_id=s.domain_id,
-                )
-            )
+                )))
+            return stitched
+
+        results = fetch_to_host_stitched(
+            [(p.hi, p.lo, p.symlen, p.words_per_chunk)
+             for p in self._buckets],
+            stitch_bucket,
+        )
+        self._consumed = (
+            "it was already drained by to_host() — hold on to the returned "
+            "containers instead of draining twice"
+        )
+        out: List[Optional[Container]] = [None] * len(self._slices)
+        for stitched in results:
+            for i, c in stitched:
+                out[i] = c
         return out
 
 
@@ -482,6 +545,7 @@ class BatchEncoder:
         self,
         *,
         chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
+        use_kernels: Optional[bool] = None,
         plan_cache_size: int = 32,
         pipeline: bool = True,
         devices: DevicesArg = "auto",
@@ -490,6 +554,12 @@ class BatchEncoder:
         if chunk_size is not None and chunk_size <= 0:
             raise ValueError(f"chunk_size must be positive, got {chunk_size}")
         self.chunk_size = chunk_size
+        # None defers to the process-wide FPTC_USE_KERNELS default; the
+        # fused Pallas tile is bit-identical to the XLA path, so the toggle
+        # changes which device programs run — never bytes
+        if use_kernels is None:
+            use_kernels = default_use_kernels()
+        self.use_kernels = use_kernels
         self._plans = PlanCache(_build_encode_plan, plan_cache_size)
         self.scheduler = BucketScheduler(devices=devices)
         self.executor = PipelineExecutor(pipeline=pipeline, prefetch=prefetch)
@@ -630,6 +700,9 @@ class BatchEncoder:
             for row, i in enumerate(idxs):
                 counts[row] = -(-lengths[i] // n) * e
             put = putter(bucket.device)
+            # shard-aware plan prefetch: the staging worker pays this
+            # bucket's table/basis device_put, not its first dispatch
+            self._plans.get(per_tab[bucket.key], plan_key, bucket.device)
             x = stage(idxs, kp, wp, n, bucket.device)
             if not isinstance(x, GatherStage):
                 # place host AND device stage results: a stage returning an
@@ -648,17 +721,34 @@ class BatchEncoder:
             sp = wp * e
             chunk = sp if self.chunk_size is None else min(self.chunk_size, sp)
             if isinstance(x, GatherStage):
-                fused = (
-                    _encode_bucket_gather_donate
-                    if x.donate and _donation_supported(bucket.device)
-                    else _encode_bucket_gather
-                )
-                hi, lo, sl, wpc, bad = fused(
-                    x.flat, x.starts, x.lens, counts, plan.tables,
-                    width=wp * n, n=n, e=e, chunk_size=chunk,
-                    check_gaps=plan.has_gaps,
-                )
+                donate = x.donate and _donation_supported(bucket.device)
+                if self.use_kernels:
+                    fused = (
+                        _encode_bucket_gather_kernels_donate
+                        if donate else _encode_bucket_gather_kernels
+                    )
+                    hi, lo, sl, wpc, bad = fused(
+                        x.flat, x.starts, x.lens, counts, plan.tables,
+                        plan.basis, width=wp * n, n=n, e=e,
+                        chunk_size=chunk, check_gaps=plan.has_gaps,
+                    )
+                else:
+                    fused = (
+                        _encode_bucket_gather_donate
+                        if donate else _encode_bucket_gather
+                    )
+                    hi, lo, sl, wpc, bad = fused(
+                        x.flat, x.starts, x.lens, counts, plan.tables,
+                        width=wp * n, n=n, e=e, chunk_size=chunk,
+                        check_gaps=plan.has_gaps,
+                    )
                 kp = int(x.starts.shape[0])
+            elif self.use_kernels:
+                hi, lo, sl, wpc, bad = _encode_bucket_kernels(
+                    x, counts, plan.tables, plan.basis,
+                    n=n, e=e, chunk_size=chunk, check_gaps=plan.has_gaps,
+                )
+                kp = int(x.shape[0])
             else:
                 hi, lo, sl, wpc, bad = _encode_bucket(
                     x, counts, plan.tables,
@@ -701,21 +791,29 @@ class BatchEncoder:
 # ---------------------------------------------------------------------------
 # Process-wide default encoders (codec.encode_device rides the exact one).
 # ---------------------------------------------------------------------------
-_DEFAULTS: Dict[Optional[int], BatchEncoder] = {}
+_DEFAULTS: Dict[Tuple[Optional[int], bool], BatchEncoder] = {}
 
 
 def default_encoder(chunk_size: Optional[int] = None) -> BatchEncoder:
-    """Shared encoder per chunk size.  ``None`` (the default) is *exact*
-    mode — bit-identical to the host encoder — which is what
-    ``core.codec.encode_device`` rides; pass ``DEFAULT_CHUNK_SIZE`` (or any
-    chunk) for the fast chunk-parallel packer.
+    """Shared encoder per (chunk size, resolved use_kernels).  ``None``
+    chunk size (the default) is *exact* mode — bit-identical to the host
+    encoder — which is what ``core.codec.encode_device`` rides; pass
+    ``DEFAULT_CHUNK_SIZE`` (or any chunk) for the fast chunk-parallel
+    packer.  The kernel toggle resolves from ``FPTC_USE_KERNELS`` *per
+    call* (mirroring ``batch_decode.default_decoder``), so flipping the
+    env mid-process switches which cached engine serves — bytes are
+    identical either way.
 
     Being process-global, its plan cache keeps up to ``plan_cache_size``
     (32) recently-used DomainTables — and their device buffers — alive for
     the process lifetime (same trade as ``batch_decode.default_decoder``);
     callers churning many ephemeral table sets should hold their own
     :class:`BatchEncoder` and drop it when done."""
-    enc = _DEFAULTS.get(chunk_size)
+    use_kernels = default_use_kernels()
+    key = (chunk_size, use_kernels)
+    enc = _DEFAULTS.get(key)
     if enc is None:
-        enc = _DEFAULTS[chunk_size] = BatchEncoder(chunk_size=chunk_size)
+        enc = _DEFAULTS[key] = BatchEncoder(
+            chunk_size=chunk_size, use_kernels=use_kernels
+        )
     return enc

@@ -33,6 +33,7 @@ single-device path is the degenerate case (one shard, no prefetch).
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from collections import OrderedDict, deque
@@ -57,6 +58,7 @@ __all__ = [
     "p2",
     "symlen_bucket",
     "serving_devices",
+    "default_use_kernels",
     "putter",
     "Bucket",
     "BucketScheduler",
@@ -64,6 +66,7 @@ __all__ = [
     "ExecutorStats",
     "GatherStage",
     "fetch_to_host",
+    "fetch_to_host_stitched",
 ]
 
 MAX_SYMLEN_CAP = 64  # a 64-bit word holds at most 64 one-bit codes
@@ -84,6 +87,25 @@ def symlen_bucket(x: int) -> int:
     waste at <8 slots while keeping specializations to at most 8 variants.
     """
     return min(-(-max(int(x), 1) // 8) * 8, MAX_SYMLEN_CAP)
+
+
+def default_use_kernels() -> bool:
+    """Process-wide default for the engines' ``use_kernels`` stage toggle.
+
+    Engines constructed with ``use_kernels=None`` resolve it here, so one
+    environment variable flips every default-constructed engine (and the
+    ``codec.*_device`` batch-of-one wrappers) onto the fused Pallas kernel
+    path — how the ``kernels-interpret`` CI leg re-runs the whole
+    engine/conformance/property surface against the kernels:
+
+        FPTC_USE_KERNELS=1 pytest ...
+
+    The kernel path is bit-identical to the XLA path by construction, so
+    the toggle changes which device programs run — never bytes.
+    """
+    return os.environ.get("FPTC_USE_KERNELS", "").strip().lower() in (
+        "1", "true", "yes", "on"
+    )
 
 
 def serving_devices(devices: DevicesArg = "auto") -> Tuple[Any, ...]:
@@ -390,3 +412,38 @@ def fetch_to_host(arrays: Sequence[Any]) -> List[np.ndarray]:
         if start is not None:
             start()
     return [np.asarray(a) for a in arrays]
+
+
+def fetch_to_host_stitched(
+    bucket_arrays: Sequence[Sequence[Any]],
+    stitch: Callable[[int, List[np.ndarray]], Any],
+) -> List[Any]:
+    """Drain per-bucket device arrays and overlap the host-side stitch.
+
+    The drain-side double buffer, extended into the numpy post-processing:
+    every bucket's d2h copies start up front (as :func:`fetch_to_host`),
+    then the main thread materializes bucket ``k+1``'s arrays while a
+    single worker runs ``stitch(k, host_arrays)`` — so the per-signal
+    chunk-run concatenation of bucket ``k`` happens while bucket ``k+1``'s
+    copies land, instead of serializing all transfers before the first
+    stitch.  Results come back in bucket order; a stitch exception
+    propagates to the caller (remaining stitches are abandoned with the
+    pool).
+    """
+    for arrays in bucket_arrays:
+        for a in arrays:
+            start = getattr(a, "copy_to_host_async", None)
+            if start is not None:
+                start()
+    if not bucket_arrays:
+        return []
+    if len(bucket_arrays) == 1:
+        return [stitch(0, [np.asarray(a) for a in bucket_arrays[0]])]
+    with ThreadPoolExecutor(
+        max_workers=1, thread_name_prefix="fptc-stitch"
+    ) as pool:
+        futures = []
+        for b, arrays in enumerate(bucket_arrays):
+            host = [np.asarray(a) for a in arrays]  # waits on bucket b only
+            futures.append(pool.submit(stitch, b, host))
+        return [f.result() for f in futures]

@@ -131,7 +131,7 @@ class Transcoder:
         self,
         *,
         chunk_size: Optional[int] = DEFAULT_CHUNK_SIZE,
-        use_kernels: bool = False,
+        use_kernels: Optional[bool] = None,
         decoder: Optional[BatchDecoder] = None,
         encoder: Optional[BatchEncoder] = None,
         plan_cache_size: int = 32,
@@ -140,13 +140,16 @@ class Transcoder:
         prefetch: int = 2,
         exact_capacity: bool = False,
     ):
+        # use_kernels threads through BOTH stage definitions: the decode
+        # megakernel and the fused encode tile (None = FPTC_USE_KERNELS
+        # env default; bytes are identical either way)
         self.decoder = decoder or BatchDecoder(
             use_kernels=use_kernels, pipeline=pipeline, devices=devices,
             prefetch=prefetch,
         )
         self.encoder = encoder or BatchEncoder(
-            chunk_size=chunk_size, pipeline=pipeline, devices=devices,
-            prefetch=prefetch,
+            chunk_size=chunk_size, use_kernels=use_kernels,
+            pipeline=pipeline, devices=devices, prefetch=prefetch,
         )
         if self.decoder.scheduler.devices != self.encoder.scheduler.devices:
             raise ValueError(

@@ -340,6 +340,52 @@ def test_sharded_batch_into_narrower_transcoder(tables, archive):
     assert _container_bytes(got) == _container_bytes(ref)
 
 
+def test_fused_kernels_byte_identical(tables, archive):
+    """use_kernels=True (the fused Pallas megakernel decode + fused encode
+    tile, interpret mode on CPU) is byte-identical to the XLA stage
+    definitions across all three engines — under however many devices are
+    visible, so the 4-fake-device CI leg pins the sharded + pipelined
+    kernel path too."""
+    sigs, doms, containers = archive
+
+    ref = BatchDecoder(use_kernels=False).decode(containers, tables)
+    got = BatchDecoder(use_kernels=True).decode(containers, tables)
+    for a, b in zip(got.to_host(), ref.to_host()):
+        np.testing.assert_array_equal(a, b)
+
+    ref = BatchEncoder(use_kernels=False, chunk_size=64).encode(
+        sigs, tables, domain_ids=doms
+    ).to_host()
+    got = BatchEncoder(use_kernels=True, chunk_size=64).encode(
+        sigs, tables, domain_ids=doms
+    ).to_host()
+    assert _container_bytes(got) == _container_bytes(ref)
+
+    ref = Transcoder(use_kernels=False, chunk_size=64).transcode_to_host(
+        containers, tables, tables[1], dst_domain_ids=[1] * len(containers)
+    )
+    got = Transcoder(use_kernels=True, chunk_size=64).transcode_to_host(
+        containers, tables, tables[1], dst_domain_ids=[1] * len(containers)
+    )
+    assert _container_bytes(got) == _container_bytes(ref)
+
+    # device-resident EncodedBatch source: stitch + megakernel decode +
+    # fused re-encode, all kernels, still the same bytes
+    src_k = BatchEncoder(use_kernels=True, chunk_size=64).encode(
+        sigs, tables, domain_ids=doms
+    )
+    got = Transcoder(use_kernels=True, chunk_size=64).transcode_to_host(
+        src_k, tables, tables[0], dst_domain_ids=[0] * len(sigs)
+    )
+    src_x = BatchEncoder(use_kernels=False, chunk_size=64).encode(
+        sigs, tables, domain_ids=doms
+    )
+    ref = Transcoder(use_kernels=False, chunk_size=64).transcode_to_host(
+        src_x, tables, tables[0], dst_domain_ids=[0] * len(sigs)
+    )
+    assert _container_bytes(got) == _container_bytes(ref)
+
+
 def test_pinned_shard_without_device_mapping_raises():
     sched = BucketScheduler(devices=None)
     with pytest.raises(ValueError, match="shard_devices"):
@@ -392,18 +438,25 @@ def test_pipelining_adds_no_d2h_before_drain(tables, archive, monkeypatch):
     before the explicit drain.  The jax transfer guard is set process-wide
     (the staging worker thread would escape a thread-local context
     manager); because same-platform CPU 'transfers' may not register with
-    the guard, the drain entry point itself is instrumented too — it must
-    run exactly once, at to_host()."""
+    the guard, the drain entry points themselves are instrumented too —
+    exactly one must run, at to_host()."""
     _, _, containers = archive
     drains = {"n": 0}
     real_fetch = batch_decode_mod.fetch_to_host
+    real_stitched = batch_encode_mod.fetch_to_host_stitched
 
     def counting_fetch(arrays):
         drains["n"] += 1
         return real_fetch(arrays)
 
+    def counting_stitched(bucket_arrays, stitch):
+        drains["n"] += 1
+        return real_stitched(bucket_arrays, stitch)
+
     monkeypatch.setattr(batch_decode_mod, "fetch_to_host", counting_fetch)
-    monkeypatch.setattr(batch_encode_mod, "fetch_to_host", counting_fetch)
+    monkeypatch.setattr(
+        batch_encode_mod, "fetch_to_host_stitched", counting_stitched
+    )
 
     tc = Transcoder(pipeline=True)
     jax.config.update("jax_transfer_guard_device_to_host", "disallow")

@@ -211,7 +211,10 @@ def check_chunked_pack_unpacks_everywhere(seed, num_symbols, chunk_size,
     # Pallas kernel (interpret mode), slot-major tile + scatter compaction
     if nw == 0:
         return
-    from repro.kernels.huffman_decode import huffman_decode_tile
+    from repro.kernels.huffman_decode import (
+        huffman_decode_dense,
+        huffman_decode_tile,
+    )
 
     max_symlen = int(sl.max()) if sl.size else 0
     tile = huffman_decode_tile(
@@ -230,6 +233,23 @@ def check_chunked_pack_unpacks_everywhere(seed, num_symbols, chunk_size,
     )
     np.testing.assert_array_equal(
         np.asarray(got).astype(np.uint8), syms
+    )
+
+    # fused dense kernel: in-kernel prefix-scan compaction, one dispatch
+    dense = huffman_decode_dense(
+        jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(sl),
+        jnp.asarray(book.limit_shifted[1:], jnp.uint32),
+        jnp.asarray(book.first_code_shifted, jnp.uint32),
+        jnp.asarray(book.rank_offset, jnp.int32),
+        jnp.asarray(book.sorted_symbols, jnp.int32),
+        l_max=book.l_max,
+        max_symlen=max(max_symlen, 1),
+        num_symbols=int(syms.size),
+        block_words=64,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(dense).astype(np.uint8), syms
     )
 
 
