@@ -224,7 +224,28 @@ def _legacy_encode(sig, tables) -> Container:
     )
 
 
-def bench_batched(fast: bool = False, log2_range=(14.0, 16.0)):
+def _pad_report(pad_records):
+    """Aggregate an engine's per-bucket padding records into the JSON
+    occupancy report (per-bucket detail + batch-level waste) — the uniform
+    shape every batched section and the policy sweep emit."""
+    records = [dict(r) for r in pad_records]
+    report = {"buckets": records}
+    for live_key, pad_key, name in (
+        ("words", "words_padded", "word"),
+        ("windows", "windows_padded", "window"),
+        ("rows", "rows_padded", "row"),
+    ):
+        live = sum(r[live_key] for r in records
+                   if r.get(live_key) is not None and pad_key in r)
+        padded = sum(r[pad_key] for r in records
+                     if r.get(live_key) is not None and pad_key in r)
+        if padded:
+            report[f"{name}_occupancy"] = live / padded
+            report[f"{name}_padding_waste"] = 1.0 - live / padded
+    return report
+
+
+def bench_batched(fast: bool = False, log2_range=(14.0, 16.0), policy=None):
     """containers/sec + aggregate GB/s at batch sizes 1/8/64.
 
     Cold numbers are only unbiased in a fresh process (run() therefore runs
@@ -249,7 +270,7 @@ def bench_batched(fast: bool = False, log2_range=(14.0, 16.0)):
         loop_warm = time.perf_counter() - t0
 
         # --- batched engine -------------------------------------------
-        dec = BatchDecoder()
+        dec = BatchDecoder(policy=policy)
         t0 = time.perf_counter()
         dec.decode(containers, by_id).block_until_ready()
         batch_cold = time.perf_counter() - t0
@@ -271,6 +292,8 @@ def bench_batched(fast: bool = False, log2_range=(14.0, 16.0)):
             "speedup_warm": loop_warm / batch_warm,
             "speedup_cold": loop_cold / batch_cold,
             "dispatches": dec.stats.dispatches // dec.stats.batches,
+            "policy": dec.scheduler.policy.name,
+            "occupancy": _pad_report(dec.stats.bucket_pad),
         }
         results[bs] = rec
         emit(
@@ -288,6 +311,7 @@ def bench_encode_batched(
     fast: bool = False,
     log2_range=(14.0, 16.0),
     chunk_size: int = DEFAULT_CHUNK_SIZE,
+    policy=None,
 ):
     """Encode-side mirror of bench_batched: signals/sec + GB/s ingested at
     batch sizes 1/8/64, legacy per-signal loop vs BatchEncoder, plus the
@@ -318,7 +342,7 @@ def bench_encode_batched(
         loop_warm = float(np.median(warm_times))
 
         # --- batched engine (chunk-parallel packing) ------------------
-        enc = BatchEncoder(chunk_size=chunk_size)
+        enc = BatchEncoder(chunk_size=chunk_size, policy=policy)
         t0 = time.perf_counter()
         chunked = enc.encode(signals, by_id, domain_ids=domain_ids).to_host()
         batch_cold = time.perf_counter() - t0
@@ -353,6 +377,8 @@ def bench_encode_batched(
             "exact_words": exact_words,
             "chunked_words": chunk_words,
             "cr_loss": cr_loss,
+            "policy": enc.scheduler.policy.name,
+            "occupancy": _pad_report(enc.stats.bucket_pad),
         }
         results[bs] = rec
         emit(
@@ -393,6 +419,7 @@ def bench_transcode(
     fast: bool = False,
     log2_range=(14.0, 16.0),
     chunk_size: int = DEFAULT_CHUNK_SIZE,
+    policy=None,
 ):
     """Archive migration throughput: containers/sec re-compressed under a
     new (domain, config) at batch 1/8/64, three pipelines:
@@ -444,11 +471,16 @@ def bench_transcode(
         loop_warm_min = float(np.min(warm_times))
 
         # --- batched-engine round trip --------------------------------
+        # same policy as the Transcoder: chunked-mode encode bytes depend
+        # on the bucket rounding, so the byte-identity assert below needs
+        # both pipelines on one ladder
         def engine_roundtrip():
-            sigs = BatchDecoder().decode(containers, by_id).to_host()
-            return BatchEncoder(chunk_size=chunk_size).encode(
-                sigs, dst
+            sigs = BatchDecoder(policy=policy).decode(
+                containers, by_id
             ).to_host()
+            return BatchEncoder(
+                chunk_size=chunk_size, policy=policy
+            ).encode(sigs, dst).to_host()
 
         t0 = time.perf_counter()
         ref = engine_roundtrip()
@@ -461,7 +493,7 @@ def bench_transcode(
         eng_warm = float(np.median(warm_times))
 
         # --- device-resident Transcoder -------------------------------
-        tc = Transcoder(chunk_size=chunk_size)
+        tc = Transcoder(chunk_size=chunk_size, policy=policy)
         t0 = time.perf_counter()
         got = tc.transcode(containers, by_id, dst).to_host()
         dev_cold = time.perf_counter() - t0
@@ -502,6 +534,11 @@ def bench_transcode(
             "speedup_engines_warm": eng_warm / dev_warm,
             "speedup_engines_cold": eng_cold / dev_cold,
             "chunk_size": chunk_size,
+            "policy": tc.decoder.scheduler.policy.name,
+            "occupancy": {
+                "decode": _pad_report(tc.decoder.stats.bucket_pad),
+                "encode": _pad_report(tc.encoder.stats.bucket_pad),
+            },
         }
         results[bs] = rec
         emit(
@@ -515,31 +552,12 @@ def bench_transcode(
     return results
 
 
-def _pad_report(pad_records):
-    """Aggregate an engine's per-bucket padding records into the JSON
-    occupancy report (per-bucket detail + batch-level waste)."""
-    records = [dict(r) for r in pad_records]
-    report = {"buckets": records}
-    for live_key, pad_key, name in (
-        ("words", "words_padded", "word"),
-        ("windows", "windows_padded", "window"),
-        ("rows", "rows_padded", "row"),
-    ):
-        live = sum(r[live_key] for r in records
-                   if r.get(live_key) is not None and pad_key in r)
-        padded = sum(r[pad_key] for r in records
-                     if r.get(live_key) is not None and pad_key in r)
-        if padded:
-            report[f"{name}_occupancy"] = live / padded
-            report[f"{name}_padding_waste"] = 1.0 - live / padded
-    return report
-
-
 def bench_pipeline(
     fast: bool = False,
     log2_range=(14.0, 16.0),
     chunk_size: int = DEFAULT_CHUNK_SIZE,
     num_devices: int = 0,
+    policy=None,
 ):
     """The serving-engine scheduling axes on one mixed archive:
 
@@ -635,13 +653,15 @@ def bench_pipeline(
         "devices_visible": len(local),
         "devices_used": len(devs),
         "decode": arm(
-            lambda **kw: BatchDecoder(**kw),
+            lambda **kw: BatchDecoder(policy=policy, **kw),
             lambda eng: eng.decode(containers, by_id).to_host(),
             lambda eng: [eng.executor],
             sig_bytes,
         ),
         "encode": arm(
-            lambda **kw: BatchEncoder(chunk_size=chunk_size, **kw),
+            lambda **kw: BatchEncoder(
+                chunk_size=chunk_size, policy=policy, **kw
+            ),
             lambda eng: eng.encode(
                 signals, by_id, domain_ids=domain_ids
             ).to_host(),
@@ -649,7 +669,9 @@ def bench_pipeline(
             cont_bytes,
         ),
         "transcode": arm(
-            lambda **kw: Transcoder(chunk_size=chunk_size, **kw),
+            lambda **kw: Transcoder(
+                chunk_size=chunk_size, policy=policy, **kw
+            ),
             lambda eng: eng.transcode(containers, by_id, dst).to_host(),
             lambda eng: [eng.decoder.executor, eng.encoder.executor],
             cont_bytes,
@@ -657,12 +679,16 @@ def bench_pipeline(
     }
 
     # padding occupancy per bucket, from one fresh pass of each engine
-    dec = BatchDecoder(devices=devs if len(devs) > 1 else None)
+    dec = BatchDecoder(
+        devices=devs if len(devs) > 1 else None, policy=policy
+    )
     dec.decode(containers, by_id).to_host()
     enc = BatchEncoder(
-        chunk_size=chunk_size, devices=devs if len(devs) > 1 else None
+        chunk_size=chunk_size, policy=policy,
+        devices=devs if len(devs) > 1 else None,
     )
     enc.encode(signals, by_id, domain_ids=domain_ids).to_host()
+    results["policy"] = dec.scheduler.policy.name
     results["decode"]["occupancy"] = _pad_report(dec.stats.bucket_pad)
     results["encode"]["occupancy"] = _pad_report(enc.stats.bucket_pad)
 
@@ -682,8 +708,127 @@ def bench_pipeline(
     return results
 
 
+def bench_policy_sweep(
+    log2_range=(14.0, 16.0),
+    chunk_size: int = DEFAULT_CHUNK_SIZE,
+    batch_size: int = 16,
+):
+    """The ROADMAP item-4 measurement: one mixed archive of ``batch_size``
+    containers drained under each bucket policy (p2 / half-octave /
+    cost-balanced), reporting per-policy padding occupancy, warm latency,
+    and the fused-decode compile count each ladder added — the numbers the
+    bucket-policy decision is made from.  Written to
+    ``BENCH_bucket_policy.json`` (uploaded by the CI ``tuning`` leg).
+
+    Decoded outputs are asserted byte-identical across policies (bucket
+    edges pad with dead words, they never change samples).  Encoded word
+    totals are reported per policy, not asserted: chunked-mode packing
+    pads per chunk, so its stream length legitimately depends on the
+    bucket the signal landed in (exact mode is policy-invariant — that
+    contract lives in the engine test suite).
+    """
+    from repro.serving.batch_decode import bucket_cache_size
+    from repro.tuning.policy import POLICY_NAMES
+
+    bs = batch_size
+    containers, by_id = _mixed_archive(
+        bs, seed=5000 + bs, log2_range=log2_range
+    )
+    signals, domain_ids, _ = _mixed_signals(
+        bs, seed=5000 + bs, log2_range=log2_range
+    )
+    results = {"batch_size": bs, "policies": {}}
+    ref_sig = None
+    for pol in POLICY_NAMES:
+        dec = BatchDecoder(policy=pol)
+        c0 = bucket_cache_size() or 0
+        t0 = time.perf_counter()
+        sigs = dec.decode(containers, by_id).to_host()
+        dec_cold = time.perf_counter() - t0
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            dec.decode(containers, by_id).to_host()
+            times.append(time.perf_counter() - t0)
+        dec_warm = float(np.median(times))
+        dec_compiles = (bucket_cache_size() or 0) - c0
+
+        got = [s.tobytes() for s in sigs]
+        if ref_sig is None:
+            ref_sig = got
+        else:
+            assert got == ref_sig, (
+                f"decode bytes diverged under policy {pol}"
+            )
+
+        enc = BatchEncoder(chunk_size=chunk_size, policy=pol)
+        t0 = time.perf_counter()
+        conts = enc.encode(signals, by_id, domain_ids=domain_ids).to_host()
+        enc_cold = time.perf_counter() - t0
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            enc.encode(signals, by_id, domain_ids=domain_ids).to_host()
+            times.append(time.perf_counter() - t0)
+        enc_warm = float(np.median(times))
+
+        dec_occ = _pad_report(dec.stats.bucket_pad)
+        enc_occ = _pad_report(enc.stats.bucket_pad)
+        results["policies"][pol] = {
+            "decode": {
+                "cold_s": dec_cold,
+                "warm_s": dec_warm,
+                "new_bucket_compiles": dec_compiles,
+                "dispatches": dec.stats.dispatches // dec.stats.batches,
+                "occupancy": dec_occ,
+            },
+            "encode": {
+                "cold_s": enc_cold,
+                "warm_s": enc_warm,
+                "dispatches": enc.stats.dispatches // enc.stats.batches,
+                "total_words": sum(c.num_words for c in conts),
+                "occupancy": enc_occ,
+            },
+        }
+        emit(
+            f"throughput/policy/{pol}/bs{bs}",
+            1e6 * dec_warm / bs,
+            f"word_waste={dec_occ.get('word_padding_waste', 0.0):.3f} "
+            f"row_waste={enc_occ.get('row_padding_waste', 0.0):.3f} "
+            f"compiles=+{dec_compiles} enc_warm_s={enc_warm:.3f}",
+        )
+
+    # the policy claim, asserted on the measurement itself: the finer
+    # ladders must cut the p2 word-padding waste (absolute levels ride on
+    # the drawn lengths and live in the JSON)
+    p2_waste = results["policies"]["p2"]["decode"]["occupancy"].get(
+        "word_padding_waste", 0.0
+    )
+    finer = {
+        pol: results["policies"][pol]["decode"]["occupancy"].get(
+            "word_padding_waste", 0.0
+        )
+        for pol in ("half-octave", "cost-balanced")
+    }
+    assert min(finer.values()) < p2_waste, (
+        f"finer bucket ladders did not reduce p2 word waste: "
+        f"p2={p2_waste:.3f} {finer}"
+    )
+    # the acceptance target (25% -> <=15%); the archive is seeded, so this
+    # is deterministic — measured 10.0% (half-octave) / 6.9%
+    # (cost-balanced) vs 25.0% (p2) on the CPU smoke
+    assert min(finer.values()) <= 0.15, (
+        f"best finer-ladder word waste {min(finer.values()):.3f} > 15%"
+    )
+    results["word_waste"] = {"p2": p2_waste, **finer}
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "BENCH_bucket_policy.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    return results
+
+
 def smoke(mode: str = "all", pipeline: bool = False, num_devices: int = 0,
-          use_kernels: bool = False):
+          use_kernels: bool = False, policy: str = None):
     """Tiny-size encode+decode+transcode batched smoke for CI: exercises
     the serving hot paths (bucketing, plan caches, fused dispatches,
     chunked packing, the device-resident transcode — and, with
@@ -692,25 +837,35 @@ def smoke(mode: str = "all", pipeline: bool = False, num_devices: int = 0,
     finite.  ``--use-kernels`` flips every engine the smoke constructs
     onto the fused Pallas path (via the FPTC_USE_KERNELS process default),
     so the same sections report the kernel-path dispatch counts/timings —
-    bytes are identical by construction, so every assertion still holds."""
+    bytes are identical by construction, so every assertion still holds.
+    ``--policy`` pins the bucket ladder (``--policy sweep`` instead runs
+    the per-policy comparison section alone)."""
     if use_kernels:
         os.environ["FPTC_USE_KERNELS"] = "1"
     os.makedirs(ART, exist_ok=True)
-    results = {"config": {"use_kernels": use_kernels}}
+    if policy == "sweep":
+        bench_policy_sweep(log2_range=(11.0, 13.0), chunk_size=128)
+        print("policy sweep OK")
+        return
+    results = {"config": {"use_kernels": use_kernels, "policy": policy}}
     if mode in ("all", "decode"):
-        results["batched"] = bench_batched(fast=True, log2_range=(11.0, 12.0))
+        results["batched"] = bench_batched(
+            fast=True, log2_range=(11.0, 12.0), policy=policy
+        )
     if mode in ("all", "encode"):
         # chunk_size=128 so even tiny smoke signals span several chunks —
         # the multi-chunk pack lanes and the host stitch must execute
         results["encode_batched"] = bench_encode_batched(
-            fast=True, log2_range=(11.0, 12.0), chunk_size=128
+            fast=True, log2_range=(11.0, 12.0), chunk_size=128,
+            policy=policy,
         )
     if mode in ("all", "transcode"):
         # fast=False so batch 64 runs even in the smoke (the acceptance
         # measurement is the bs-64 device-vs-roundtrip speedup); tiny
         # signals keep it fast
         results["transcode"] = bench_transcode(
-            fast=False, log2_range=(11.0, 12.0), chunk_size=128
+            fast=False, log2_range=(11.0, 12.0), chunk_size=128,
+            policy=policy,
         )
     if pipeline or mode == "pipeline":
         # LAST: its passes warm the same tiny bucket shapes the batched
@@ -719,7 +874,7 @@ def smoke(mode: str = "all", pipeline: bool = False, num_devices: int = 0,
         # cold-cache claim — its cold numbers are labeled as such)
         results["pipeline"] = bench_pipeline(
             fast=True, log2_range=(11.0, 12.0), chunk_size=128,
-            num_devices=num_devices,
+            num_devices=num_devices, policy=policy,
         )
         for m in ("decode", "encode", "transcode"):
             rec = results["pipeline"][m]
@@ -750,8 +905,11 @@ def smoke(mode: str = "all", pipeline: bool = False, num_devices: int = 0,
 
 
 def run(fast: bool = False, mode: str = "all", pipeline: bool = False,
-        num_devices: int = 0):
+        num_devices: int = 0, policy: str = None):
     os.makedirs(ART, exist_ok=True)
+    if policy == "sweep":
+        bench_policy_sweep()
+        return
     datasets = ["mitbih", "load_power", "wind_speed"] if fast else sorted(
         DATASETS
     )
@@ -759,13 +917,15 @@ def run(fast: bool = False, mode: str = "all", pipeline: bool = False,
     # batched sections first: their cold-vs-cold comparisons are only fair
     # while the process-wide bucket jit caches are empty
     if mode in ("all", "decode"):
-        results["batched"] = bench_batched(fast)
+        results["batched"] = bench_batched(fast, policy=policy)
     if mode in ("all", "encode"):
-        results["encode_batched"] = bench_encode_batched(fast)
+        results["encode_batched"] = bench_encode_batched(fast, policy=policy)
     if mode in ("all", "transcode"):
-        results["transcode"] = bench_transcode(fast)
+        results["transcode"] = bench_transcode(fast, policy=policy)
     if pipeline or mode == "pipeline":
-        results["pipeline"] = bench_pipeline(fast, num_devices=num_devices)
+        results["pipeline"] = bench_pipeline(
+            fast, num_devices=num_devices, policy=policy
+        )
     if mode != "all":
         with open(os.path.join(ART, f"throughput_{mode}.json"), "w") as f:
             json.dump(results, f, indent=1, default=float)
@@ -848,12 +1008,22 @@ if __name__ == "__main__":
         "kernel path (interpret mode off-TPU; bytes identical to the XLA "
         "path by construction)",
     )
+    ap.add_argument(
+        "--policy",
+        choices=["p2", "half-octave", "cost-balanced", "sweep"],
+        default=None,
+        help="bucket-edge policy for every engine the benchmark "
+        "constructs (default: FPTC_BUCKET_POLICY, else p2); 'sweep' "
+        "instead runs the per-policy occupancy/latency/compile-count "
+        "comparison and writes BENCH_bucket_policy.json",
+    )
     args = ap.parse_args()
     if args.smoke:
         smoke(mode=args.mode, pipeline=args.pipeline,
-              num_devices=args.devices, use_kernels=args.use_kernels)
+              num_devices=args.devices, use_kernels=args.use_kernels,
+              policy=args.policy)
     else:
         if args.use_kernels:
             os.environ["FPTC_USE_KERNELS"] = "1"
         run(fast=args.fast, mode=args.mode, pipeline=args.pipeline,
-            num_devices=args.devices)
+            num_devices=args.devices, policy=args.policy)

@@ -1,3 +1,3 @@
-from repro.analysis.hlo_cost import HloCost, analyze_hlo
+from repro.analysis.hlo_cost import HloCost, analyze_hlo, analyze_jaxpr
 
-__all__ = ["HloCost", "analyze_hlo"]
+__all__ = ["HloCost", "analyze_hlo", "analyze_jaxpr"]

@@ -25,7 +25,7 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["analyze_hlo", "HloCost"]
+__all__ = ["analyze_hlo", "analyze_jaxpr", "HloCost"]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -134,6 +134,7 @@ class HloCost:
     num_whiles: int
     unknown_trip_whiles: int
     collective_f32_bytes: float = 0.0
+    pallas_calls: int = 0  # jaxpr-level analysis only (analyze_jaxpr)
 
     @property
     def collective_bytes_tpu(self) -> float:
@@ -391,4 +392,235 @@ def analyze_hlo(text: str) -> HloCost:
         num_whiles=p.num_whiles,
         unknown_trip_whiles=p.unknown_trips,
         collective_f32_bytes=cost.coll_f32_bytes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr-level analysis: the pre-lowering twin of analyze_hlo.
+#
+# Post-megakernel, the serving kernel path is all ``pallas_call`` — an
+# opaque primitive whose kernel body never reaches the HLO text this
+# module parses (on TPU it lowers to a custom-call; in interpret mode to
+# an XLA while-nest whose structure has nothing to do with the kernel's
+# declared tiling).  analyze_jaxpr walks the *jaxpr* instead and
+# attributes each pallas_call from what the kernel declares:
+#
+#   flops = (kernel body cost) x prod(grid)       — every grid step runs
+#           the body once;
+#   hbm   = prod(grid) x sum(BlockSpec block bytes) — the pallas block
+#           pipeline moves each operand/output block HBM<->VMEM once per
+#           step; the body's own memory ops are VMEM traffic and are NOT
+#           counted (same boundary-bytes model as analyze_hlo's fusions).
+#
+# scan multiplies its body by the static trip count (jax lowers
+# fori_loop with concrete bounds to scan, so the kernels' slot loops and
+# the 256-level LUT select are trip-counted exactly); while bodies with
+# unknown trips count once and are flagged, mirroring the HLO parser.
+# Elementwise traffic is attributed as whole-jaxpr I/O, not per-op: a
+# jaxpr is pre-fusion, so summing every add/mul's operands would count
+# register traffic as HBM.
+# ---------------------------------------------------------------------------
+_REDUCE_PRIMS = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "argmax", "argmin", "cumsum", "cummax", "cummin",
+    "cumprod", "cumlogsumexp",
+}
+
+
+def _aval_bytes(aval) -> float:
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0.0
+    n = 1
+    for d in shape:
+        try:
+            n *= int(d)
+        except TypeError:  # dynamic dim: count as 1
+            pass
+    try:
+        return float(n * dtype.itemsize)
+    except AttributeError:
+        return 0.0
+
+
+def _aval_elems(aval) -> float:
+    shape = getattr(aval, "shape", ())
+    n = 1
+    for d in shape:
+        try:
+            n *= int(d)
+        except TypeError:
+            pass
+    return float(n)
+
+
+class _JaxprState:
+    def __init__(self):
+        self.num_whiles = 0
+        self.unknown_trips = 0
+        self.pallas_calls = 0
+
+
+def _unwrap_jaxpr(obj):
+    """Accept Jaxpr, ClosedJaxpr, or anything carrying a .jaxpr."""
+    inner = getattr(obj, "jaxpr", None)
+    return obj if inner is None else _unwrap_jaxpr(inner)
+
+
+def _pallas_block_bytes(grid_mapping, eqn) -> Tuple[float, float]:
+    """(steps, per-step boundary bytes) of one pallas_call from its
+    declared grid and BlockSpecs."""
+    steps = 1.0
+    for g in getattr(grid_mapping, "grid", ()) or ():
+        try:
+            steps *= max(int(g), 1)
+        except TypeError:
+            pass  # symbolic grid dim: count once
+    per_step = 0.0
+    for bm in getattr(grid_mapping, "block_mappings", ()) or ():
+        block = getattr(bm, "block_shape", None)
+        sd = getattr(bm, "array_shape_dtype", None)
+        if block is None or sd is None:
+            continue
+        elems = 1
+        for d in block:
+            try:
+                elems *= max(int(d), 1)
+            except TypeError:
+                pass  # squeezed/mapped dims contribute one row
+        try:
+            per_step += float(elems * sd.dtype.itemsize)
+        except AttributeError:
+            continue
+    if per_step == 0.0:
+        # no usable block mappings (e.g. an older pallas): fall back to
+        # the call's operand + output avals, moved once
+        per_step = sum(_aval_bytes(v.aval) for v in eqn.invars) + sum(
+            _aval_bytes(v.aval) for v in eqn.outvars
+        )
+        steps = 1.0
+    return steps, per_step
+
+
+def _jaxpr_cost(jaxpr, state: _JaxprState) -> Cost:
+    total = Cost(coll_by_op={})
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+
+        if prim == "pallas_call":
+            state.pallas_calls += 1
+            gm = eqn.params.get("grid_mapping")
+            body = eqn.params.get("jaxpr")
+            steps, per_step = (
+                _pallas_block_bytes(gm, eqn) if gm is not None
+                else (1.0, sum(_aval_bytes(v.aval) for v in eqn.invars))
+            )
+            if body is not None:
+                inner = _jaxpr_cost(_unwrap_jaxpr(body), state)
+                total.flops += inner.flops * steps
+            total.hbm_bytes += steps * per_step
+            continue
+
+        if prim == "scan":
+            body = eqn.params.get("jaxpr")
+            length = int(eqn.params.get("length", 1) or 1)
+            state.num_whiles += 1
+            if body is not None:
+                inner = _jaxpr_cost(_unwrap_jaxpr(body), state)
+                total = total + inner.scaled(length)
+            continue
+
+        if prim == "while":
+            state.num_whiles += 1
+            state.unknown_trips += 1  # trip is data-dependent in a jaxpr
+            for key in ("body_jaxpr", "cond_jaxpr"):
+                body = eqn.params.get(key)
+                if body is not None:
+                    total = total + _jaxpr_cost(_unwrap_jaxpr(body), state)
+            continue
+
+        if prim == "cond":
+            branches = eqn.params.get("branches") or ()
+            costs = [
+                _jaxpr_cost(_unwrap_jaxpr(b), state) for b in branches
+            ]
+            if costs:
+                total = total + max(costs, key=lambda c: c.flops)
+            continue
+
+        if prim in ("pjit", "closed_call", "core_call", "remat_call",
+                    "checkpoint", "remat", "custom_jvp_call",
+                    "custom_vjp_call", "custom_vjp_call_jaxpr"):
+            body = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if body is not None:
+                total = total + _jaxpr_cost(_unwrap_jaxpr(body), state)
+            continue
+
+        if prim == "dot_general":
+            (lc, _), _ = eqn.params["dimension_numbers"]
+            lhs = eqn.invars[0].aval
+            contracted = 1
+            for i in lc:
+                contracted *= int(lhs.shape[i])
+            out_elems = _aval_elems(eqn.outvars[0].aval)
+            total.flops += 2.0 * out_elems * contracted
+            total.hbm_bytes += sum(
+                _aval_bytes(v.aval) for v in eqn.invars
+            ) + _aval_bytes(eqn.outvars[0].aval)
+            continue
+
+        if prim in _REDUCE_PRIMS:
+            total.flops += _aval_elems(eqn.invars[0].aval)
+            total.hbm_bytes += sum(
+                _aval_bytes(v.aval) for v in eqn.invars
+            ) + sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            continue
+
+        if prim in ("gather", "dynamic_slice"):
+            total.hbm_bytes += 2.0 * _aval_bytes(eqn.outvars[0].aval)
+            continue
+        if prim in ("scatter", "scatter-add", "scatter_add",
+                    "dynamic_update_slice"):
+            upd = _aval_bytes(eqn.invars[-1].aval)
+            total.hbm_bytes += 2.0 * upd
+            continue
+        # elementwise & everything else: no per-op cost (see module note)
+    return total
+
+
+def analyze_jaxpr(jaxpr_or_fn, *example_args, **example_kwargs) -> HloCost:
+    """Cost-analyze a jaxpr — including ones containing ``pallas_call``.
+
+    Accepts a ``Jaxpr``/``ClosedJaxpr`` (e.g. from ``jax.make_jaxpr``), or
+    a callable plus example arguments, which is traced here.  Returns the
+    same :class:`HloCost` as :func:`analyze_hlo`, with ``pallas_calls``
+    counting the kernels attributed from their declared grid/block shapes.
+    Collective fields are always zero (jaxprs here are pre-partitioning).
+    """
+    if callable(jaxpr_or_fn) and not hasattr(jaxpr_or_fn, "eqns"):
+        import jax
+
+        jaxpr = jax.make_jaxpr(jaxpr_or_fn)(
+            *example_args, **example_kwargs
+        )
+    else:
+        jaxpr = jaxpr_or_fn
+    jaxpr = _unwrap_jaxpr(jaxpr)
+    state = _JaxprState()
+    cost = _jaxpr_cost(jaxpr, state)
+    # whole-jaxpr I/O: entry operands in, results out (counted once; the
+    # per-op extras above only cover ops with non-streaming access)
+    io_bytes = sum(_aval_bytes(v.aval) for v in jaxpr.invars) + sum(
+        _aval_bytes(v.aval) for v in jaxpr.outvars
+    )
+    return HloCost(
+        flops=cost.flops,
+        hbm_bytes=cost.hbm_bytes + io_bytes,
+        collective_bytes=0.0,
+        collective_by_op={},
+        num_whiles=state.num_whiles,
+        unknown_trip_whiles=state.unknown_trips,
+        collective_f32_bytes=0.0,
+        pallas_calls=state.pallas_calls,
     )

@@ -5,8 +5,10 @@ kernel extends that tile all the way into Huffman codeword emission so a
 whole encode bucket is ONE ``pallas_call``: windows -> DCT (MXU) ->
 3-zone quantize -> per-symbol (length, code) lookup via the one-hot
 matmul idiom -> chunk-parallel SymLen word materialization, all in one
-VMEM residency.  The grid runs one signal per step; each step packs the
-signal's chunks concurrently (the scan carries only the O(1)
+VMEM residency.  The grid runs ``block_rows`` signals per step (1 by
+default; the autotuner sweeps it — rows are independent, so the knob
+trades VMEM footprint against per-step overhead without touching bytes);
+each row packs its chunks concurrently (the scan carries only the O(1)
 bit-offset/word-index recurrence, vectorized across the chunk axis).
 
 Bit parity is by construction, not by luck:
@@ -49,8 +51,8 @@ __all__ = ["encode_fused"]
 
 
 def _kernel(
-    sig_ref,  # f32[1, Wp * N]
-    counts_ref,  # int32[1] — true symbol count for this signal
+    sig_ref,  # f32[R, Wp * N] — R = block_rows signals per grid step
+    counts_ref,  # int32[R] — true symbol count per signal
     codes_ref,  # uint32[256]
     lengths_ref,  # int32[256]
     zone_ref,  # int32[E]
@@ -58,11 +60,11 @@ def _kernel(
     mu_ref,  # f32[1]
     alpha1_ref,  # f32[1]
     basis_ref,  # f32[N, E] (dct_basis)
-    hi_ref,  # uint32[1, B, C]
-    lo_ref,  # uint32[1, B, C]
-    sl_ref,  # int32[1, B, C]
-    wpc_ref,  # int32[1, B]
-    bad_ref,  # int32[1] — histogram-gap flag for this signal
+    hi_ref,  # uint32[R, B, C]
+    lo_ref,  # uint32[R, B, C]
+    sl_ref,  # int32[R, B, C]
+    wpc_ref,  # int32[R, B]
+    bad_ref,  # int32[R] — histogram-gap flag per signal
     *,
     n: int,
     e: int,
@@ -70,64 +72,73 @@ def _kernel(
     chunk_size: int,
     check_gaps: bool,
 ):
-    windows = sig_ref[...].reshape(-1, n)  # [Wp, N]
-    coeffs = jnp.dot(
-        windows, basis_ref[...], preferred_element_type=jnp.float32
-    )  # [Wp, E]
     quant = QuantTable(
         zone=zone_ref[...],
         scale=scale_ref[...],
         mu=mu_ref[0],
         alpha1=alpha1_ref[0],
     )
-    # the exact reference quantizer — same ops the XLA path traces, so the
-    # levels (hence every packed bit) are identical under jit
-    syms = quantize(coeffs, quant).reshape(-1).astype(jnp.int32)  # [Sp]
-    cap = num_chunks * chunk_size
-    if cap != syms.shape[0]:
-        syms = jnp.pad(syms, (0, cap - syms.shape[0]))
-    valid = jnp.arange(cap, dtype=jnp.int32) < counts_ref[0]
-
+    basis = basis_ref[...]
     codes_f = codes_ref[...].astype(jnp.float32)  # exact: < 2^l_max <= 2^24
     lengths_f = lengths_ref[...].astype(jnp.float32)
     sym_iota = jnp.arange(256, dtype=jnp.int32)
+    cap = num_chunks * chunk_size
 
-    # one batched one-hot lookup for the whole signal (a single MXU matmul
-    # equation — an unrolled per-chunk loop traces O(B) ops for the same
-    # exact integer selections); the [cap, 256] block is the kernel's
-    # largest transient, see the module docstring's VMEM note
-    onehot = (syms[:, None] == sym_iota[None, :]).astype(jnp.float32)
-    raw_code = (
-        jnp.dot(onehot, codes_f, preferred_element_type=jnp.float32)
-        .astype(jnp.uint32).reshape(num_chunks, chunk_size)
+    def one_row(sig, count):
+        windows = sig.reshape(-1, n)  # [Wp, N]
+        coeffs = jnp.dot(
+            windows, basis, preferred_element_type=jnp.float32
+        )  # [Wp, E]
+        # the exact reference quantizer — same ops the XLA path traces, so
+        # the levels (hence every packed bit) are identical under jit
+        syms = quantize(coeffs, quant).reshape(-1).astype(jnp.int32)  # [Sp]
+        if cap != syms.shape[0]:
+            syms = jnp.pad(syms, (0, cap - syms.shape[0]))
+        valid = jnp.arange(cap, dtype=jnp.int32) < count
+
+        # one batched one-hot lookup for the whole signal (a single MXU
+        # matmul equation — an unrolled per-chunk loop traces O(B) ops for
+        # the same exact integer selections); the [cap, 256] block is the
+        # kernel's largest transient, see the module docstring's VMEM note
+        onehot = (syms[:, None] == sym_iota[None, :]).astype(jnp.float32)
+        raw_code = (
+            jnp.dot(onehot, codes_f, preferred_element_type=jnp.float32)
+            .astype(jnp.uint32).reshape(num_chunks, chunk_size)
+        )
+        raw_len = (
+            jnp.dot(onehot, lengths_f, preferred_element_type=jnp.float32)
+            .astype(jnp.int32).reshape(num_chunks, chunk_size)
+        )
+        validr = valid.reshape(num_chunks, chunk_size)
+        if check_gaps:
+            bad = jnp.any((raw_len == 0) & validr).astype(jnp.int32)
+        else:
+            bad = jnp.zeros((), jnp.int32)
+        # masked slots emit a zero-length, zero-valued code: a no-op (the
+        # same masking _pack_chunk applies before its emit)
+        code = jnp.where(validr, raw_code, jnp.uint32(0))
+        clen = jnp.where(validr, raw_len, 0)
+        hi, lo, sl, wpc = jax.vmap(_pack_chunk_emit)(code, clen, validr)
+        return hi, lo, sl, wpc, bad
+
+    # rows are independent signals: vmap keeps every per-row selection /
+    # pack identical to the one-row kernel while a tuned block_rows > 1
+    # amortizes the per-step dispatch overhead across R rows
+    hi, lo, sl, wpc, bad = jax.vmap(one_row)(
+        sig_ref[...], counts_ref[...]
     )
-    raw_len = (
-        jnp.dot(onehot, lengths_f, preferred_element_type=jnp.float32)
-        .astype(jnp.int32).reshape(num_chunks, chunk_size)
-    )
-    valid = valid.reshape(num_chunks, chunk_size)
-
-    if check_gaps:
-        bad_ref[...] = jnp.any((raw_len == 0) & valid).astype(
-            jnp.int32
-        )[None]
-    else:
-        bad_ref[...] = jnp.zeros((1,), jnp.int32)
-
-    # masked slots emit a zero-length, zero-valued code: a no-op (the same
-    # masking _pack_chunk applies before its emit)
-    code = jnp.where(valid, raw_code, jnp.uint32(0))
-    clen = jnp.where(valid, raw_len, 0)
-    hi, lo, sl, wpc = jax.vmap(_pack_chunk_emit)(code, clen, valid)
-    hi_ref[...] = hi[None]
-    lo_ref[...] = lo[None]
-    sl_ref[...] = sl[None]
-    wpc_ref[...] = wpc[None]
+    hi_ref[...] = hi
+    lo_ref[...] = lo
+    sl_ref[...] = sl
+    wpc_ref[...] = wpc
+    bad_ref[...] = bad
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "e", "chunk_size", "check_gaps", "interpret"),
+    static_argnames=(
+        "n", "e", "chunk_size", "check_gaps", "block_rows", "interpret"
+    ),
 )
 def encode_fused(
     signals: jnp.ndarray,  # f32[K, Wp * N] (zero-padded signal rows)
@@ -144,6 +155,7 @@ def encode_fused(
     e: int,
     chunk_size: int,
     check_gaps: bool,
+    block_rows: int = 1,
     interpret: bool = True,
 ):
     """Fused bucket encode, one ``pallas_call``: signal rows -> chunk parts.
@@ -153,10 +165,21 @@ def encode_fused(
     of the XLA path (``vmap`` of :func:`repro.core.symlen.
     pack_symlen_chunked_parts` plus the batch-wide histogram-gap flag),
     byte for byte.
+
+    ``block_rows`` is the autotuner's knob: signals packed per grid step
+    (rows are independent, so it trades per-step VMEM footprint against
+    per-step dispatch overhead and NEVER changes bytes — the batch pads up
+    to a row multiple with zero-count rows, which pack zero words, and the
+    outputs slice back to ``K``).
     """
     k, width = signals.shape
     sp = (width // n) * e
     num_chunks = max(-(-sp // chunk_size), 1)
+    br = max(min(int(block_rows), max(k, 1)), 1)
+    kp = -(-k // br) * br
+    if kp != k:
+        signals = jnp.pad(signals, ((0, kp - k), (0, 0)))
+        counts = jnp.pad(counts, (0, kp - k))
     kernel = functools.partial(
         _kernel,
         n=n,
@@ -177,10 +200,10 @@ def encode_fused(
 
     hi, lo, sl, wpc, bad = pl.pallas_call(
         kernel,
-        grid=(k,),
+        grid=(kp // br,),
         in_specs=[
-            pl.BlockSpec((1, width), row),
-            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((br, width), row),
+            pl.BlockSpec((br,), lambda i: (i,)),
             pl.BlockSpec((256,), rep),
             pl.BlockSpec((256,), rep),
             pl.BlockSpec((e,), rep),
@@ -190,18 +213,18 @@ def encode_fused(
             pl.BlockSpec((n, e), lambda i: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, num_chunks, chunk_size), row3),
-            pl.BlockSpec((1, num_chunks, chunk_size), row3),
-            pl.BlockSpec((1, num_chunks, chunk_size), row3),
-            pl.BlockSpec((1, num_chunks), row),
-            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((br, num_chunks, chunk_size), row3),
+            pl.BlockSpec((br, num_chunks, chunk_size), row3),
+            pl.BlockSpec((br, num_chunks, chunk_size), row3),
+            pl.BlockSpec((br, num_chunks), row),
+            pl.BlockSpec((br,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((k, num_chunks, chunk_size), jnp.uint32),
-            jax.ShapeDtypeStruct((k, num_chunks, chunk_size), jnp.uint32),
-            jax.ShapeDtypeStruct((k, num_chunks, chunk_size), jnp.int32),
-            jax.ShapeDtypeStruct((k, num_chunks), jnp.int32),
-            jax.ShapeDtypeStruct((k,), jnp.int32),
+            jax.ShapeDtypeStruct((kp, num_chunks, chunk_size), jnp.uint32),
+            jax.ShapeDtypeStruct((kp, num_chunks, chunk_size), jnp.uint32),
+            jax.ShapeDtypeStruct((kp, num_chunks, chunk_size), jnp.int32),
+            jax.ShapeDtypeStruct((kp, num_chunks), jnp.int32),
+            jax.ShapeDtypeStruct((kp,), jnp.int32),
         ],
         interpret=interpret,
     )(
@@ -215,4 +238,7 @@ def encode_fused(
         jnp.reshape(alpha1.astype(jnp.float32), (1,)),
         basis,
     )
+    if kp != k:
+        hi, lo, sl = hi[:k], lo[:k], sl[:k]
+        wpc, bad = wpc[:k], bad[:k]
     return hi, lo, sl, wpc, jnp.any(bad > 0)

@@ -23,6 +23,13 @@ offsets inside the kernels are int32 (jax default x32), so a bucket whose
 dense symbol stream would cross the 2^31-byte mark must raise loudly
 instead of wrapping offsets negative and compacting the wrong positions
 silently (the same guard discipline as the transcoder's flat-gather path).
+
+The megakernel wrappers resolve their Pallas block sizes at TRACE time:
+``block_*=None`` (the engines' calling convention) consults the
+:mod:`repro.tuning.autotune` cache for this (backend, plan key, bucket
+shape) and falls back to the built-in defaults when nothing is tuned.
+Blocks change tiling only — never bytes — and the engines key their jits
+on the tuning-cache epoch so a new entry forces a retrace.
 """
 from __future__ import annotations
 
@@ -40,6 +47,7 @@ from repro.kernels import decode_fused as _df
 from repro.kernels import encode_fused as _ef
 from repro.kernels import huffman_decode as _hd
 from repro.kernels import idct_dequant as _idq
+from repro.tuning.autotune import tuned_blocks as _tuned_blocks
 
 __all__ = [
     "huffman_decode",
@@ -139,11 +147,28 @@ def decode_bucket_fused(
     num_windows: int,
     n: int,
     e: int,
+    block_words: int = None,
+    block_windows: int = None,
 ) -> jnp.ndarray:
     """The decode megakernel: packed bucket -> windows f32[num_windows, N]
     in exactly one ``pallas_call`` (Huffman + compaction + LUT dequant +
-    iDCT; see :mod:`repro.kernels.decode_fused`)."""
+    iDCT; see :mod:`repro.kernels.decode_fused`).
+
+    ``block_words``/``block_windows`` default to the tuning cache's winner
+    for this (backend, plan key, bucket shape) — or the kernel's built-in
+    defaults when nothing is tuned.  Explicit values (the autotuner's own
+    sweep path) bypass the consult."""
     check_i32_offsets(num_windows * e, max_symlen)
+    if block_words is None or block_windows is None:
+        tuned = _tuned_blocks(
+            "decode",
+            plan_key=(n, e, l_max, max_symlen),
+            shape=(int(hi.shape[0]), int(num_windows)),
+        )
+        if block_words is None:
+            block_words = tuned.get("block_words", _hd.BLOCK_WORDS)
+        if block_windows is None:
+            block_windows = tuned.get("block_windows", _df.BLOCK_WINDOWS)
     return _df.decode_fused(
         hi,
         lo,
@@ -159,6 +184,8 @@ def decode_bucket_fused(
         num_windows=num_windows,
         n=n,
         e=e,
+        block_words=int(block_words),
+        block_windows=int(block_windows),
         interpret=_interp(),
     )
 
@@ -173,11 +200,23 @@ def encode_bucket_fused(
     e: int,
     chunk_size: int,
     check_gaps: bool,
+    block_rows: int = None,
 ):
     """The encode megakernel: signal rows -> SymLen chunk parts in one
     ``pallas_call``, bit-identical to the XLA engine path (see
-    :mod:`repro.kernels.encode_fused`)."""
+    :mod:`repro.kernels.encode_fused`).
+
+    ``block_rows`` (signals per grid step) defaults to the tuning cache's
+    winner for this (backend, plan key, bucket shape), falling back to 1;
+    explicit values bypass the consult (the autotuner's sweep path)."""
     _check_encode_i32(signals.shape[1], e, n)
+    if block_rows is None:
+        tuned = _tuned_blocks(
+            "encode",
+            plan_key=(n, e, int(chunk_size)),
+            shape=(int(signals.shape[0]), int(signals.shape[1])),
+        )
+        block_rows = tuned.get("block_rows", 1)
     return _ef.encode_fused(
         signals,
         counts,
@@ -192,6 +231,7 @@ def encode_bucket_fused(
         e=e,
         chunk_size=chunk_size,
         check_gaps=check_gaps,
+        block_rows=int(block_rows),
         interpret=_interp(),
     )
 

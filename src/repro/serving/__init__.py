@@ -29,6 +29,12 @@ from repro.serving.transcode import (
     TranscodePlan,
     default_transcoder,
 )
+from repro.tuning.policy import (
+    BucketPolicy,
+    COST_BALANCED,
+    HALF_OCTAVE,
+    P2,
+)
 
 __all__ = [
     "BatchDecoder",
@@ -46,6 +52,10 @@ __all__ = [
     "TranscodePlan",
     "default_transcoder",
     "BucketScheduler",
+    "BucketPolicy",
+    "P2",
+    "HALF_OCTAVE",
+    "COST_BALANCED",
     "GatherStage",
     "PipelineExecutor",
     "serving_devices",

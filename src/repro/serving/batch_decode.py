@@ -77,6 +77,9 @@ from repro.serving.engine import (
     putter,
     symlen_bucket,
 )
+from repro.tuning import autotune as _autotune
+from repro.tuning.cost_model import CostModel, default_cost_model
+from repro.tuning.policy import PolicyArg
 
 __all__ = [
     "BatchDecoder",
@@ -160,6 +163,7 @@ def _decode_bucket_math(
     n: int,
     e: int,
     use_kernels: bool,
+    tuning_epoch: int = 0,
 ) -> jnp.ndarray:
     """Decode one concatenated bucket to windows f32[num_windows, N].
 
@@ -177,7 +181,16 @@ def _decode_bucket_math(
     ``pallas_call`` (the decode megakernel, ``kernels/decode_fused.py``) —
     no intermediate ``[max_symlen, W]`` tile, no separate compaction or
     iDCT program.
+
+    ``tuning_epoch`` is a pure retrace key: the kernel path resolves its
+    Pallas block sizes from the tuning cache *at trace time*
+    (``ops.decode_bucket_fused`` -> ``tuned_blocks``), so without it a
+    bucket shape traced before ``tune()`` stored a better entry would keep
+    its stale specialization forever.  Engines pass the cache epoch
+    (bumped on every store) when ``use_kernels`` — the XLA arm always
+    passes 0, since it has no tunables to invalidate.
     """
+    del tuning_epoch  # participates in the jit cache key only
     num_symbols = num_windows * e
     if use_kernels:
         from repro.kernels import ops as kops
@@ -200,7 +213,8 @@ def _decode_bucket_math(
 _decode_bucket = functools.partial(
     jax.jit,
     static_argnames=(
-        "l_max", "max_symlen", "num_windows", "n", "e", "use_kernels"
+        "l_max", "max_symlen", "num_windows", "n", "e", "use_kernels",
+        "tuning_epoch",
     ),
 )(_decode_bucket_math)
 
@@ -317,11 +331,14 @@ def _stage_container_group(
     key: Tuple[int, int, int, int],
     device,
     shard: int,
+    rounder: Callable[[int], int] = p2,
 ) -> StreamGroup:
-    """Host-stage one bucket: concatenate member streams into power-of-two
-    padded word arrays and upload them (to ``device`` when sharded)."""
+    """Host-stage one bucket: concatenate member streams into bucket-edge
+    padded word arrays (``rounder`` — the scheduler policy's ``round``;
+    power-of-two by default) and upload them (to ``device`` when
+    sharded)."""
     total_words = sum(c.num_words for c in members)
-    wp = p2(max(total_words, 1))
+    wp = rounder(max(total_words, 1))
     hi = np.zeros(wp, dtype=np.uint32)
     lo = np.zeros(wp, dtype=np.uint32)
     sl = np.zeros(wp, dtype=np.int32)
@@ -348,10 +365,12 @@ def _stage_container_group(
 
 def streams_from_containers(
     containers: Sequence[Container],
+    policy: PolicyArg = None,
 ) -> Tuple[List[StreamGroup], List[int]]:
     """Group host containers by plan_key and concatenate their streams
     (single-shard, default placement — the eager public form of the
-    staging :meth:`BatchDecoder.decode` pipelines lazily).
+    staging :meth:`BatchDecoder.decode` pipelines lazily).  ``policy``
+    picks the word-padding ladder (None = ``FPTC_BUCKET_POLICY``).
 
     Returns the :class:`StreamGroup` list (group order = first appearance;
     members in input order within a group) plus, per input container, its
@@ -360,12 +379,12 @@ def streams_from_containers(
     :meth:`BatchDecoder.decode_streams`.
     """
     containers = list(containers)
-    buckets = BucketScheduler(devices=None).buckets(
-        [c.plan_key for c in containers]
-    )
+    scheduler = BucketScheduler(devices=None, policy=policy)
+    buckets = scheduler.buckets([c.plan_key for c in containers])
     groups = [
         _stage_container_group(
-            [containers[i] for i in b.items], b.key, b.device, b.shard
+            [containers[i] for i in b.items], b.key, b.device, b.shard,
+            scheduler.round,
         )
         for b in buckets
     ]
@@ -401,14 +420,17 @@ class BatchDecoder:
         signals = batch.to_host()                # one sync, input order
 
     Containers are grouped by :attr:`Container.plan_key` (domain, config);
-    each group's streams are concatenated word-wise and padded to
-    power-of-two buckets, then decoded by one :func:`_decode_bucket` launch.
-    A mixed archive of hundreds of containers therefore costs
-    #distinct-plan-keys x #shards dispatches and O(log sizes) compilations,
-    total.  ``pipeline`` double-buffers host staging/upload against device
-    compute; ``devices`` controls sharding (``"auto"`` = all visible local
-    devices, ``None`` = single default device) — both change scheduling
-    only, never bytes.
+    each group's streams are concatenated word-wise and padded to the
+    ``policy`` ladder's bucket edges (``p2`` by default /
+    ``FPTC_BUCKET_POLICY``), then decoded by one :func:`_decode_bucket`
+    launch.  A mixed archive of hundreds of containers therefore costs
+    #distinct-plan-keys x #shards dispatches and O(density * log sizes)
+    compilations, total.  ``pipeline`` double-buffers host
+    staging/upload against device compute; ``devices`` controls sharding
+    (``"auto"`` = all visible local devices, ``None`` = single default
+    device), with the per-device split cost-balanced over
+    ``cost_model``'s per-container decode-cost prediction — policy,
+    pipelining and sharding all change scheduling only, never bytes.
     """
 
     def __init__(
@@ -419,6 +441,8 @@ class BatchDecoder:
         pipeline: bool = True,
         devices: DevicesArg = "auto",
         prefetch: int = 2,
+        policy: PolicyArg = None,
+        cost_model: Optional[CostModel] = None,
     ):
         # None defers to the process-wide FPTC_USE_KERNELS default — the
         # kernels-interpret CI leg flips every engine onto the fused path
@@ -426,8 +450,11 @@ class BatchDecoder:
             use_kernels = default_use_kernels()
         self.use_kernels = use_kernels
         self._plans = PlanCache(_build_decode_plan, plan_cache_size)
-        self.scheduler = BucketScheduler(devices=devices)
+        self.scheduler = BucketScheduler(devices=devices, policy=policy)
         self.executor = PipelineExecutor(pipeline=pipeline, prefetch=prefetch)
+        self.cost_model = (
+            cost_model if cost_model is not None else default_cost_model()
+        )
         self.stats = BatchDecoderStats()
 
     # -- plan management ---------------------------------------------------
@@ -483,7 +510,21 @@ class BatchDecoder:
                     "single DomainTables"
                 )
 
-        buckets = self.scheduler.buckets([c.plan_key for c in containers])
+        # with several shards, split each group at cost-balanced (not
+        # equal-count) boundaries over the model's per-container decode
+        # cost — container metadata carries everything the model needs
+        item_costs = None
+        if self.scheduler.num_shards > 1:
+            item_costs = [
+                self.cost_model.signal_decode_cost(
+                    c.num_words, c.num_windows,
+                    e=c.e, n=c.n, max_symlen=symlen_bucket(c.max_symlen),
+                )
+                for c in containers
+            ]
+        buckets = self.scheduler.buckets(
+            [c.plan_key for c in containers], item_costs=item_costs
+        )
         member_pos = member_positions(buckets, len(containers))
         # staging stays lazy: the executor's worker runs the host concat +
         # h2d upload of bucket k+1 while bucket k's decode dispatches
@@ -491,6 +532,7 @@ class BatchDecoder:
             functools.partial(
                 _stage_container_group,
                 [containers[i] for i in b.items], b.key, b.device, b.shard,
+                self.scheduler.round,
             )
             for b in buckets
         ]
@@ -538,7 +580,7 @@ class BatchDecoder:
                 tuple(grp.plan_key), tables, grp.device
             )
             wp = int(grp.hi.shape[0])
-            num_windows = p2(max(grp.total_windows, 1))
+            num_windows = self.scheduler.round(max(grp.total_windows, 1))
             windows = _decode_bucket(
                 grp.hi,
                 grp.lo,
@@ -552,11 +594,17 @@ class BatchDecoder:
                 n=plan.n,
                 e=plan.e,
                 use_kernels=self.use_kernels,
+                # retrace when the tuning cache learns better block sizes
+                # (kernel path only — the XLA arm has no tunables)
+                tuning_epoch=(
+                    _autotune.epoch() if self.use_kernels else 0
+                ),
             )
             self.stats.dispatches += 1
             self.stats.bucket_pad.append({
                 "plan_key": tuple(grp.plan_key),
                 "shard": grp.shard,
+                "policy": self.scheduler.policy.name,
                 "words": grp.live_words,
                 "words_padded": wp,
                 "windows": grp.total_windows,

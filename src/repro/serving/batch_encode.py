@@ -71,9 +71,11 @@ from repro.serving.engine import (
     PipelineExecutor,
     default_use_kernels,
     fetch_to_host_stitched,
-    p2,
     putter,
 )
+from repro.tuning import autotune as _autotune
+from repro.tuning.cost_model import CostModel, default_cost_model
+from repro.tuning.policy import PolicyArg
 
 __all__ = [
     "BatchEncoder",
@@ -271,8 +273,13 @@ def _donation_supported(device) -> bool:
 # suites), one pallas_call per bucket.
 # ---------------------------------------------------------------------------
 def _encode_bucket_kernels_math(
-    signals, counts, tables, basis, *, n, e, chunk_size, check_gaps
+    signals, counts, tables, basis, *, n, e, chunk_size, check_gaps,
+    tuning_epoch=0,
 ):
+    # tuning_epoch is a pure retrace key (see batch_decode._decode_bucket):
+    # the kernel resolves its rows-per-step block from the tuning cache at
+    # trace time, so a cache store must invalidate old specializations
+    del tuning_epoch
     from repro.kernels import ops as kops
 
     return kops.encode_bucket_fused(
@@ -282,13 +289,14 @@ def _encode_bucket_kernels_math(
 
 
 _encode_bucket_kernels = functools.partial(
-    jax.jit, static_argnames=("n", "e", "chunk_size", "check_gaps")
+    jax.jit,
+    static_argnames=("n", "e", "chunk_size", "check_gaps", "tuning_epoch"),
 )(_encode_bucket_kernels_math)
 
 
 def _encode_bucket_gather_kernels_math(
     flat, starts, lens, counts, tables, basis,
-    *, width, n, e, chunk_size, check_gaps,
+    *, width, n, e, chunk_size, check_gaps, tuning_epoch=0,
 ):
     """GatherStage staging for the kernel path: the row gather stays an XLA
     ``dynamic_slice`` batch fused into the same jit as the pallas_call (the
@@ -298,14 +306,16 @@ def _encode_bucket_gather_kernels_math(
     return _encode_bucket_kernels_math(
         x, counts, tables, basis,
         n=n, e=e, chunk_size=chunk_size, check_gaps=check_gaps,
+        tuning_epoch=tuning_epoch,
     )
 
 
+_GATHER_KERNEL_STATICS = _GATHER_STATICS + ("tuning_epoch",)
 _encode_bucket_gather_kernels = functools.partial(
-    jax.jit, static_argnames=_GATHER_STATICS
+    jax.jit, static_argnames=_GATHER_KERNEL_STATICS
 )(_encode_bucket_gather_kernels_math)
 _encode_bucket_gather_kernels_donate = functools.partial(
-    jax.jit, static_argnames=_GATHER_STATICS, donate_argnums=(0,)
+    jax.jit, static_argnames=_GATHER_KERNEL_STATICS, donate_argnums=(0,)
 )(_encode_bucket_gather_kernels_math)
 
 
@@ -550,6 +560,8 @@ class BatchEncoder:
         pipeline: bool = True,
         devices: DevicesArg = "auto",
         prefetch: int = 2,
+        policy: PolicyArg = None,
+        cost_model: Optional[CostModel] = None,
     ):
         if chunk_size is not None and chunk_size <= 0:
             raise ValueError(f"chunk_size must be positive, got {chunk_size}")
@@ -561,8 +573,11 @@ class BatchEncoder:
             use_kernels = default_use_kernels()
         self.use_kernels = use_kernels
         self._plans = PlanCache(_build_encode_plan, plan_cache_size)
-        self.scheduler = BucketScheduler(devices=devices)
+        self.scheduler = BucketScheduler(devices=devices, policy=policy)
         self.executor = PipelineExecutor(pipeline=pipeline, prefetch=prefetch)
+        self.cost_model = (
+            cost_model if cost_model is not None else default_cost_model()
+        )
         self.stats = BatchEncoderStats()
 
     # -- plan management ---------------------------------------------------
@@ -657,22 +672,38 @@ class BatchEncoder:
             )
 
         # group by ((domain, config), windows bucket), shard-split — one
-        # fused dispatch per (group, shard); batch dim padded to a power of
-        # two in the upload stage
+        # fused dispatch per (group, shard); batch dim padded to a bucket
+        # edge in the upload stage.  The window bucket follows the
+        # scheduler's policy ladder, so a denser policy both shrinks row
+        # padding AND splits fewer-window signals away from wide ones.
         keys = []
         per_tab: Dict[tuple, DomainTables] = {}
+        all_windows: List[int] = []
         for length, dom in zip(lengths, domain_ids):
             tab = self._tables_for(dom, tables)
             cfg = tab.config
             num_windows = -(-length // cfg.n)
+            all_windows.append(num_windows)
             key = (
                 (dom, cfg.n, cfg.e, cfg.l_max),
-                p2(max(num_windows, 1)),
+                self.scheduler.round(max(num_windows, 1)),
             )
             keys.append(key)
             per_tab.setdefault(key, tab)
+        # cost-balanced shard split over predicted per-signal encode cost
+        # (only worth computing when there is more than one shard and the
+        # scheduler actually splits — pinned shard_ids bypass the split)
+        item_costs = None
+        if self.scheduler.num_shards > 1 and shard_ids is None:
+            item_costs = [
+                self.cost_model.signal_encode_cost(
+                    w, e=key[0][2], n=key[0][1]
+                )
+                for w, key in zip(all_windows, keys)
+            ]
         buckets = self.scheduler.buckets(
-            keys, shard_ids=shard_ids, shard_devices=shard_devices
+            keys, shard_ids=shard_ids, shard_devices=shard_devices,
+            item_costs=item_costs,
         )
 
         slices: List[Optional[_Slice]] = [None] * len(lengths)
@@ -695,7 +726,8 @@ class BatchEncoder:
             plan_key, wp = bucket.key
             _, n, e, _ = plan_key
             idxs = list(bucket.items)
-            kp = p2(len(idxs))  # pad batch dim; pad rows pack 0 symbols
+            # pad batch dim to a bucket edge; pad rows pack 0 symbols
+            kp = self.scheduler.round(len(idxs))
             counts = np.zeros((kp,), dtype=np.int32)
             for row, i in enumerate(idxs):
                 counts[row] = -(-lengths[i] // n) * e
@@ -731,6 +763,7 @@ class BatchEncoder:
                         x.flat, x.starts, x.lens, counts, plan.tables,
                         plan.basis, width=wp * n, n=n, e=e,
                         chunk_size=chunk, check_gaps=plan.has_gaps,
+                        tuning_epoch=_autotune.epoch(),
                     )
                 else:
                     fused = (
@@ -747,6 +780,7 @@ class BatchEncoder:
                 hi, lo, sl, wpc, bad = _encode_bucket_kernels(
                     x, counts, plan.tables, plan.basis,
                     n=n, e=e, chunk_size=chunk, check_gaps=plan.has_gaps,
+                    tuning_epoch=_autotune.epoch(),
                 )
                 kp = int(x.shape[0])
             else:
@@ -759,6 +793,7 @@ class BatchEncoder:
             self.stats.bucket_pad.append({
                 "plan_key": plan_key,
                 "shard": bucket.shard,
+                "policy": self.scheduler.policy.name,
                 "rows": len(bucket.items),
                 "rows_padded": kp,
                 "windows": sum(

@@ -53,6 +53,8 @@ from typing import (
 import jax
 import numpy as np
 
+from repro.tuning.policy import BucketPolicy, PolicyArg
+
 __all__ = [
     "MAX_SYMLEN_CAP",
     "p2",
@@ -177,10 +179,24 @@ class BucketScheduler:
     contiguous per-device shards, so one fused dispatch per (key, shard)
     runs on its own device and the per-shard results stay device-resident
     until the single drain.
+
+    ``policy`` picks the bucket-edge ladder every traced axis rounds with
+    (:meth:`round`): a :class:`~repro.tuning.policy.BucketPolicy`, a name
+    (``"p2"`` / ``"half-octave"`` / ``"cost-balanced"``), or None for the
+    ``FPTC_BUCKET_POLICY`` env default (``p2`` — the historical rounding).
+    Policies trade padding waste against jit-specialization count and
+    never change produced bytes.
     """
 
-    def __init__(self, devices: DevicesArg = "auto"):
+    def __init__(self, devices: DevicesArg = "auto",
+                 policy: PolicyArg = None):
         self.devices = serving_devices(devices)
+        self.policy = BucketPolicy.of(policy)
+
+    def round(self, x: int) -> int:
+        """Bucket-edge rounding for a traced axis under this scheduler's
+        policy (the old hard-coded ``p2(x)`` when policy is ``p2``)."""
+        return self.policy.round(max(int(x), 1))
 
     @property
     def num_shards(self) -> int:
@@ -209,14 +225,23 @@ class BucketScheduler:
         keys: Sequence[Hashable],
         shard_ids: Optional[Sequence[int]] = None,
         shard_devices: Optional[Dict[int, Any]] = None,
+        item_costs: Optional[Sequence[float]] = None,
     ) -> List[Bucket]:
         """Schedule items into (key, shard) buckets.
 
         Without ``shard_ids``, each key group's members split into
-        ``min(len(group), num_shards)`` contiguous balanced shards placed
-        on this scheduler's devices, with the starting shard rotating
-        across groups — an archive of many small (domain, config) groups
-        still spreads over every device instead of piling onto shard 0.
+        ``min(len(group), num_shards)`` contiguous per-device shards
+        placed on this scheduler's devices, with the starting shard
+        rotating across groups — an archive of many small (domain,
+        config) groups still spreads over every device instead of piling
+        onto shard 0.  The split is equal-count unless ``item_costs``
+        gives a predicted cost per item (one float per key, any units —
+        e.g. :meth:`repro.tuning.cost_model.CostModel.signal_decode_cost`),
+        in which case each group partitions contiguously at
+        cost-balanced boundaries instead: mixed archives where one
+        signal decodes 100x slower than another stop making every other
+        device wait on the heavy shard.  Splits stay contiguous either
+        way, so member order (and hence bytes) never changes.
         With ``shard_ids`` (one per item — a
         *pinning*, e.g. the transcode pipeline keeping a signal's
         re-encode on the device that decoded it), members partition by
@@ -232,7 +257,13 @@ class BucketScheduler:
         for key in order:
             idxs = groups[key]
             if shard_ids is None:
-                parts = _split_contiguous(idxs, self.num_shards)
+                if item_costs is not None and self.num_shards > 1:
+                    parts = _split_balanced(
+                        idxs, [float(item_costs[i]) for i in idxs],
+                        self.num_shards,
+                    )
+                else:
+                    parts = _split_contiguous(idxs, self.num_shards)
                 shards = [
                     (next_shard + j) % self.num_shards
                     for j in range(len(parts))
@@ -275,6 +306,41 @@ def _split_contiguous(items: List[int], num_shards: int) -> List[List[int]]:
         size = q + (1 if s < r else 0)
         out.append(items[off:off + size])
         off += size
+    return out
+
+
+def _split_balanced(
+    items: List[int], costs: List[float], num_shards: int
+) -> List[List[int]]:
+    """Contiguous partition of ``items`` into <= ``num_shards`` parts with
+    near-equal predicted cost: greedily close part ``s`` once its running
+    cost reaches the ideal boundary ``total * (s+1) / k``.  Equal costs
+    give the same +-1 size balance as the equal-count split (remainder
+    items may land on different parts); contiguity keeps member (and
+    byte) order identical to the unweighted path."""
+    k = min(len(items), max(num_shards, 1))
+    total = sum(costs)
+    if k <= 1 or not (total > 0.0):
+        return _split_contiguous(items, num_shards)
+    out: List[List[int]] = []
+    part: List[int] = []
+    acc = 0.0
+    s = 0
+    for j, (item, cost) in enumerate(zip(items, costs)):
+        part.append(item)
+        acc += cost
+        remaining_items = len(items) - (j + 1)
+        remaining_parts = k - (s + 1)
+        if remaining_parts <= 0:
+            continue
+        # close this part at its ideal cost boundary, or when the leftover
+        # items are only just enough to make every remaining part non-empty
+        if acc >= total * (s + 1) / k or remaining_items <= remaining_parts:
+            out.append(part)
+            part = []
+            s += 1
+    if part:
+        out.append(part)
     return out
 
 

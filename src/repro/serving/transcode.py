@@ -72,9 +72,9 @@ from repro.serving.engine import (
     DevicesArg,
     GatherStage,
     member_positions,
-    p2,
     putter,
 )
+from repro.tuning.policy import PolicyArg
 
 __all__ = ["Transcoder", "TranscodePlan", "default_transcoder"]
 
@@ -139,17 +139,19 @@ class Transcoder:
         devices: DevicesArg = "auto",
         prefetch: int = 2,
         exact_capacity: bool = False,
+        policy: PolicyArg = None,
     ):
         # use_kernels threads through BOTH stage definitions: the decode
         # megakernel and the fused encode tile (None = FPTC_USE_KERNELS
         # env default; bytes are identical either way)
         self.decoder = decoder or BatchDecoder(
             use_kernels=use_kernels, pipeline=pipeline, devices=devices,
-            prefetch=prefetch,
+            prefetch=prefetch, policy=policy,
         )
         self.encoder = encoder or BatchEncoder(
             chunk_size=chunk_size, use_kernels=use_kernels,
             pipeline=pipeline, devices=devices, prefetch=prefetch,
+            policy=policy,
         )
         if self.decoder.scheduler.devices != self.encoder.scheduler.devices:
             raise ValueError(
@@ -157,6 +159,15 @@ class Transcoder:
                 "signal re-encodes on the shard that decoded it (got "
                 f"{self.decoder.scheduler.devices} vs "
                 f"{self.encoder.scheduler.devices})"
+            )
+        if self.decoder.scheduler.policy != self.encoder.scheduler.policy:
+            # max_width (and the flat gather pad) are sized by the ENCODE
+            # bucket ladder; mixing ladders across the two halves is legal
+            # arithmetic but a silent perf/compile-count trap — refuse
+            raise ValueError(
+                "decoder and encoder must use the same bucket policy (got "
+                f"{self.decoder.scheduler.policy.name!r} vs "
+                f"{self.encoder.scheduler.policy.name!r})"
             )
         self.exact_capacity = exact_capacity
         self._plans = PlanCache(self._build_plan, plan_cache_size)
@@ -336,6 +347,7 @@ class Transcoder:
                     _stage_container_group,
                     [containers[i] for i in b.items],
                     b.key, b.device, b.shard,
+                    self.decoder.scheduler.round,
                 )
                 for b in buckets
             ]
@@ -372,8 +384,15 @@ class Transcoder:
             dst_tab = self.encoder._tables_for(dst_dom, dst_tables)
             self.plan_for(src_tab, dst_tab, shard_devices[shard])
             n_dst = dst_tab.config.n
+            # the ENCODER's bucket rounding, exactly: the fused gathers
+            # dynamic_slice `wp * n` samples per row, and dynamic_slice
+            # CLAMPS out-of-range starts — an undersized pad would silently
+            # shift tail rows' windows instead of erroring
             max_width = max(
-                max_width, p2(max(-(-length // n_dst), 1)) * n_dst
+                max_width,
+                self.encoder.scheduler.round(
+                    max(-(-length // n_dst), 1)
+                ) * n_dst,
             )
         self.stats.plan_hits = self._plans.hits
         self.stats.plan_misses = self._plans.misses
@@ -388,13 +407,13 @@ class Transcoder:
 
         # flatten each shard's decoded window tensors once (zero-padded by
         # the widest bucket so every gather slice stays in bounds, then up
-        # to a power-of-two length: the flat tensor is an operand of the
+        # to a bucket-edge length: the flat tensor is an operand of the
         # fused gather+encode jit, so an unbucketed data-dependent length
         # would recompile the whole DCT+quant+pack per distinct archive
-        # size — p2 rounding keeps those specializations O(log sizes) like
-        # every other traced shape in the engines); per-signal sample runs
-        # are contiguous, so encode staging is one batched dynamic_slice
-        # fused into each bucket's encode dispatch
+        # size — policy rounding keeps those specializations O(density *
+        # log sizes) like every other traced shape in the engines);
+        # per-signal sample runs are contiguous, so encode staging is one
+        # batched dynamic_slice fused into each bucket's encode dispatch
         tensors = decoded.device_windows
         starts = np.zeros((len(meta),), dtype=np.int64)
         flats: Dict[int, jnp.ndarray] = {}
@@ -417,7 +436,8 @@ class Transcoder:
                         "range — transcode the archive in smaller batches"
                     )
                 pad = putter(shard_devices[shard])(np.zeros(
-                    (p2(off + max_width) - off,), np.float32
+                    (self.scheduler.round(off + max_width) - off,),
+                    np.float32,
                 ))
                 flats[shard] = jnp.concatenate(
                     [tensors[g].reshape(-1) for g in gidx] + [pad]

@@ -1,0 +1,59 @@
+"""Cost-model-driven autotuning for the serving engines and megakernels.
+
+Three hand-tuned shape decisions used to live as folklore constants:
+
+  * **bucket edges** — every engine padded to powers of two, wasting a
+    measured ~25% of words at batch 16; :mod:`repro.tuning.policy` makes
+    the ladder a declarative :class:`BucketPolicy` (``p2`` / ``half-octave``
+    / ``cost-balanced``) with the compile count still bounded;
+  * **megakernel block sizes** — ``BLOCK_WORDS``/``BLOCK_WINDOWS`` (and the
+    encode kernel's rows-per-step) are now swept by
+    :func:`repro.tuning.autotune.tune` and persisted in an on-disk
+    :class:`TuningCache` (``FPTC_TUNING_CACHE``) keyed like the serving
+    ``PlanCache`` by (backend, plan key, bucket shape);
+  * **shard splits** — the scheduler's contiguous equal-count partition is
+    replaced by a greedy cost-balanced partition over per-signal cost
+    predicted by :class:`repro.tuning.cost_model.CostModel`.
+
+None of these change produced bytes: policies and blocks move *when and
+where* work runs (padding is invisible to decoded samples and per-row
+packing), which is why the byte-identity suites run under every policy and
+with the tuning cache both cold and warm.
+"""
+from repro.tuning.cost_model import (
+    BackendProfile,
+    CostModel,
+    default_cost_model,
+)
+from repro.tuning.policy import (
+    BucketPolicy,
+    COST_BALANCED,
+    HALF_OCTAVE,
+    P2,
+    cost_balanced_policy,
+)
+from repro.tuning.autotune import (
+    TuningCache,
+    default_cache,
+    epoch,
+    set_default_cache,
+    tune,
+    tuned_blocks,
+)
+
+__all__ = [
+    "BackendProfile",
+    "CostModel",
+    "default_cost_model",
+    "BucketPolicy",
+    "P2",
+    "HALF_OCTAVE",
+    "COST_BALANCED",
+    "cost_balanced_policy",
+    "TuningCache",
+    "default_cache",
+    "set_default_cache",
+    "epoch",
+    "tune",
+    "tuned_blocks",
+]

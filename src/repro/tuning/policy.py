@@ -1,0 +1,158 @@
+"""Declarative bucket-edge policies for the serving engines.
+
+The engines used to hard-code power-of-two padding (``engine.p2``) for
+every traced axis: concatenated decode words, window counts, encode batch
+rows.  Power-of-two edges bound compile counts at O(log sizes) but waste
+up to half a bucket — ~25% of words measured at batch 16.  A
+:class:`BucketPolicy` makes the ladder a declarative config (the
+flag-driven build-config idiom): per octave ``[2**k, 2**(k+1))`` the
+ladder carries ``multipliers`` edges, so
+
+  * ``p2``           — multipliers ``(1,)``: exactly the old rounding;
+  * ``half-octave``  — ``(1, 1.5)``: expected padding waste ~18%;
+  * ``cost-balanced`` — a geometric ladder whose density the
+    :class:`repro.tuning.cost_model.CostModel` picks (where denser edges
+    stop paying for their extra jit specializations; 4/octave on the CPU
+    profile, expected waste ~8%).
+
+Every policy keeps the compile count bounded: at most ``len(multipliers)``
+edges per octave, so specializations stay O(density * log sizes).  Policies
+change *padding only* — decoded samples and per-row packed words never
+depend on the bucket edge (the byte-identity suites run under all three).
+
+Engines resolve ``policy=None`` through :meth:`BucketPolicy.of`, which
+reads ``FPTC_BUCKET_POLICY`` (default ``p2``) — one env var flips every
+default-constructed engine, mirroring ``FPTC_USE_KERNELS``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import List, Optional, Tuple, Union
+
+__all__ = [
+    "BucketPolicy",
+    "P2",
+    "HALF_OCTAVE",
+    "COST_BALANCED",
+    "cost_balanced_policy",
+    "POLICY_NAMES",
+]
+
+PolicyArg = Union[None, str, "BucketPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """One bucket-edge ladder: ``multipliers`` edges per octave.
+
+    ``round(x)`` returns the smallest ladder edge >= x; edges are
+    ``ceil(m * 2**k)`` for each multiplier ``m in [1, 2)`` and octave
+    ``k`` (plus the next octave's base), so rounding is monotonic,
+    idempotent on edges, and never below the input.
+    """
+
+    name: str
+    multipliers: Tuple[float, ...] = (1.0,)
+
+    def __post_init__(self):
+        if not self.multipliers:
+            raise ValueError("a BucketPolicy needs at least one multiplier")
+        for m in self.multipliers:
+            if not 1.0 <= m < 2.0:
+                raise ValueError(
+                    f"multipliers must lie in [1, 2), got {m} "
+                    f"(policy {self.name!r})"
+                )
+
+    def round(self, x: int) -> int:
+        """Smallest ladder edge >= max(x, 1)."""
+        x = max(int(x), 1)
+        if x <= 1:
+            return 1
+        k = (x - 1).bit_length() - 1  # 2**k < x <= 2**(k+1)
+        best = 1 << (k + 1)
+        base = 1 << k
+        for m in self.multipliers:
+            edge = int(math.ceil(m * base))
+            if x <= edge < best:
+                best = edge
+        return best
+
+    def edges(self, lo: int, hi: int) -> List[int]:
+        """Every distinct ladder edge covering sizes in ``[lo, hi]`` — the
+        bound on bucket-shape (hence jit-specialization) variants."""
+        lo, hi = max(int(lo), 1), max(int(hi), 1)
+        out, seen = [], set()
+        x = lo
+        while True:
+            e = self.round(x)
+            if e not in seen:
+                seen.add(e)
+                out.append(e)
+            if e >= hi:
+                break
+            x = e + 1
+        return out
+
+    def max_variants(self, lo: int, hi: int) -> int:
+        """Upper bound on distinct bucket edges for sizes in ``[lo, hi]``
+        (== compile-count bound per traced axis under this policy)."""
+        return len(self.edges(lo, hi))
+
+    # -- resolution ---------------------------------------------------------
+    @staticmethod
+    def of(policy: PolicyArg) -> "BucketPolicy":
+        """Resolve an engine's ``policy`` argument: a :class:`BucketPolicy`
+        passes through, a name looks up the registry, ``None`` reads
+        ``FPTC_BUCKET_POLICY`` (default ``p2``)."""
+        if isinstance(policy, BucketPolicy):
+            return policy
+        if policy is None:
+            policy = os.environ.get("FPTC_BUCKET_POLICY", "").strip() or "p2"
+        return _named(policy)
+
+
+P2 = BucketPolicy("p2", (1.0,))
+HALF_OCTAVE = BucketPolicy("half-octave", (1.0, 1.5))
+
+
+def cost_balanced_policy(cost_model=None) -> BucketPolicy:
+    """Build the ``cost-balanced`` ladder from a cost model: a geometric
+    ladder of ``d = cost_model.edges_per_octave()`` edges per octave
+    (``2**(j/d)`` multipliers), the density where the padded-work saving
+    of one more edge stops covering its extra jit specialization."""
+    if cost_model is None:
+        from repro.tuning.cost_model import default_cost_model
+
+        cost_model = default_cost_model()
+    d = max(int(cost_model.edges_per_octave()), 1)
+    return BucketPolicy(
+        "cost-balanced",
+        tuple(2.0 ** (j / d) for j in range(d)),
+    )
+
+
+# the default cost-balanced ladder for this process's backend; engines
+# wanting a freshly-seeded/calibrated model call cost_balanced_policy(model)
+COST_BALANCED = cost_balanced_policy()
+
+POLICY_NAMES = ("p2", "half-octave", "cost-balanced")
+
+
+def _named(name: str) -> BucketPolicy:
+    key = name.strip().lower().replace("_", "-")
+    if key == "p2":
+        return P2
+    if key in ("half-octave", "halfoctave"):
+        return HALF_OCTAVE
+    if key in ("cost-balanced", "costbalanced"):
+        # the import-time constant, NOT a fresh build: re-deriving the
+        # ladder from a since-calibrated model mid-process would shift
+        # bucket edges under live engines and unbound their compile count
+        return COST_BALANCED
+    raise ValueError(
+        f"unknown bucket policy {name!r} — expected one of {POLICY_NAMES} "
+        "or a BucketPolicy instance"
+    )
