@@ -9,6 +9,7 @@ Mapping to the paper:
   bench_params              -> Table 1 + Table 2
   bench_compression_integration -> beyond-paper: grad/ckpt compression
   bench_roofline            -> EXPERIMENTS.md §Roofline (from dry-run)
+  bench_serving             -> beyond-paper: front-end p50/p99 vs load + knee
 """
 from __future__ import annotations
 
@@ -31,6 +32,7 @@ def main() -> None:
         bench_rd,
         bench_reconstruction,
         bench_roofline,
+        bench_serving,
         bench_stage_breakdown,
         bench_throughput,
     )
@@ -39,6 +41,7 @@ def main() -> None:
         "params": bench_params.run,
         "rd": bench_rd.run,
         "throughput": bench_throughput.run,
+        "serving": bench_serving.run,
         "stage_breakdown": bench_stage_breakdown.run,
         "ne_sweep": bench_ne_sweep.run,
         "reconstruction": bench_reconstruction.run,

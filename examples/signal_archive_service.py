@@ -3,15 +3,21 @@ signal strips to a central server, which batch-compresses them into an
 archive, later batch-decompresses it, and eventually MIGRATES it to a new
 codec config — all through the batched serving engines.
 
-Server-side ingest rides the batched bucketed *encode* engine
-(``repro.serving.BatchEncoder``): the fleet's strips are grouped into
-power-of-two shape buckets and each bucket is ONE fused DCT+quant+pack
-dispatch, with chunk-parallel SymLen packing (decoder-compatible by
-construction — see core.symlen.pack_symlen_chunked) and encode tables
-resident in the plan cache.  The archive drain mirrors it through the
-batched decode engine (``repro.serving.BatchDecoder``): one fused dispatch
-per (domain, config) group, outputs staying on device until the final
-``to_host()`` drain.
+Server-side ingest arrives through the always-on serving front-end
+(``repro.serving.ServingFrontend``): each sensor submits its strip from
+its own thread (admission is thread-safe and bounded — a flooded queue
+sheds with a typed error instead of silently dropping), and the
+front-end's deadline micro-batcher forms the buckets that ride the
+batched bucketed *encode* engine (``repro.serving.BatchEncoder``): each
+bucket is ONE fused DCT+quant+pack dispatch, with chunk-parallel SymLen
+packing (decoder-compatible by construction — see
+core.symlen.pack_symlen_chunked) and encode tables resident in the plan
+cache.  Micro-batching changes only when buckets run: the archived
+containers are byte-identical to an offline ``BatchEncoder.encode`` of
+the same strips (asserted below).  The archive drain mirrors it through
+the batched decode engine (``repro.serving.BatchDecoder``): one fused
+dispatch per (domain, config) group, outputs staying on device until the
+final ``to_host()`` drain.
 
 The migration stage is the transcode pipeline
 (``repro.serving.Transcoder``): the archive is re-encoded under a coarser
@@ -30,6 +36,7 @@ to fake a 4-device host on CPU) — neither changes a single output byte.
   PYTHONPATH=src python examples/signal_archive_service.py [--fleet 8]
 """
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -41,6 +48,8 @@ from repro.data.signals import domain_of
 from repro.serving import (
     BatchDecoder,
     BatchEncoder,
+    FrontendConfig,
+    ServingFrontend,
     Transcoder,
     serving_devices,
 )
@@ -80,17 +89,52 @@ def main():
         )
         originals.append(pipe.strip(0))
 
-    # --- server-side batched ingest ---------------------------------------
+    # --- server-side ingest through the serving front-end ------------------
+    # every sensor submits from its own thread; the deadline micro-batcher
+    # forms the encode buckets (fill at the policy edge, or the oldest
+    # deadline's slack — whichever first)
     encoder = BatchEncoder(pipeline=pipeline)
+    frontend = ServingFrontend(
+        tables, encoder=encoder, pipeline=pipeline,
+        config=FrontendConfig(
+            max_batch=max(args.fleet, 1), default_slo_ms=60_000.0,
+        ),
+    )
     t0 = time.time()
-    containers = encoder.encode(originals, tables).to_host()
+    futures = [None] * args.fleet
+    threads = [
+        threading.Thread(
+            target=lambda i=i: futures.__setitem__(
+                i, frontend.submit_encode(originals[i], tables.domain_id)
+            )
+        )
+        for i in range(args.fleet)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    frontend.flush()
+    containers = [f.result() for f in futures]
     archive = [c.to_bytes() for c in containers]
     enc_s = time.time() - t0
+    fstats = frontend.stats_snapshot()
+    frontend.close()
     raw_mb = args.fleet * args.strip * 4 / 1e6
     comp_mb = sum(len(b) for b in archive) / 1e6
-    print(f"batched ingest of {args.fleet} strips: {raw_mb:.1f} MB raw -> "
+    print(f"front-end ingest of {args.fleet} strips: {raw_mb:.1f} MB raw -> "
           f"{comp_mb:.2f} MB archived (CR {raw_mb/comp_mb:.1f}x) "
-          f"in {enc_s:.2f}s ({encoder.stats.dispatches} fused dispatch(es))")
+          f"in {enc_s:.2f}s ({fstats.batches} micro-batch(es), "
+          f"{encoder.stats.dispatches} fused dispatch(es))")
+
+    # micro-batching changes scheduling, never bytes: the served archive
+    # matches an offline batch encode of the same strips
+    offline = BatchEncoder(pipeline=pipeline).encode(
+        originals, tables
+    ).to_host()
+    assert [c.to_bytes() for c in offline] == archive, (
+        "front-end ingest must be byte-identical to offline batch encode"
+    )
 
     # --- server-side batch decompression ----------------------------------
     from repro.core.container import Container

@@ -17,7 +17,18 @@ from repro.serving.engine import (
     BucketScheduler,
     GatherStage,
     PipelineExecutor,
+    SubmitBuffer,
     serving_devices,
+)
+from repro.serving.frontend import (
+    DeadlineExpiredError,
+    FrontendClosedError,
+    FrontendConfig,
+    FrontendError,
+    FrontendStats,
+    QueueFullError,
+    ServingFrontend,
+    policy_fill_target,
 )
 from repro.serving.kv_compression import (
     KVCompressionConfig,
@@ -58,7 +69,16 @@ __all__ = [
     "COST_BALANCED",
     "GatherStage",
     "PipelineExecutor",
+    "SubmitBuffer",
     "serving_devices",
+    "ServingFrontend",
+    "FrontendConfig",
+    "FrontendStats",
+    "FrontendError",
+    "QueueFullError",
+    "DeadlineExpiredError",
+    "FrontendClosedError",
+    "policy_fill_target",
     "KVCompressionConfig",
     "compress_kv_block",
     "decompress_kv_block",

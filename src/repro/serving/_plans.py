@@ -51,24 +51,31 @@ class PlanCache:
     ``tables`` may be a single object or a tuple of objects (the transcode
     pairing); identity keying covers every element.
 
-    ``get`` is thread-safe (a lock around lookup/insert, with the factory
-    running OUTSIDE it so hits never stall behind a concurrent build):
-    the engines *prefetch* plans from the :class:`~repro.serving.engine.
-    PipelineExecutor`'s staging worker — the per-device table/basis
-    ``device_put`` of bucket k+1's plan overlaps bucket k's dispatch
-    instead of the first dispatch on each shard paying it — so the cache
-    is hit from both the worker and the dispatching caller thread.  Plan
-    factories only build device arrays (transfers, no jit tracing), which
-    keeps the worker inside its transfers-only contract.
+    ``get`` is thread-safe and **single-flight per key**: the factory runs
+    OUTSIDE the cache lock (so a hit never stalls behind a concurrent
+    build of a *different* key), but concurrent misses on the SAME key
+    coalesce — the first caller builds, later callers wait on that build
+    and share its plan.  The engines *prefetch* plans from the
+    :class:`~repro.serving.engine.PipelineExecutor`'s staging worker, and
+    a serving front-end may warm plans from several admission threads at
+    once; without coalescing, every racer would ``device_put`` its own
+    copy of the tables/bases and all but one set of device buffers would
+    be built just to be dropped.  Plan factories only build device arrays
+    (transfers, no jit tracing), which keeps the worker inside its
+    transfers-only contract.  A failed build clears its in-flight marker
+    and re-raises; coalesced waiters then retry the build themselves (the
+    failure may have been the leader's alone).
     """
 
     def __init__(self, factory: Callable[..., Plan], maxsize: int = 32):
         self._factory = factory
         self.maxsize = maxsize
         self._plans: "OrderedDict[tuple, Plan]" = OrderedDict()
+        self._building: dict = {}  # cache_key -> threading.Event
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
+        self.coalesced = 0  # gets served by waiting on another thread's build
 
     def get(self, tables, key, device: Any = None) -> Plan:
         ident = (
@@ -76,28 +83,41 @@ class PlanCache:
             if isinstance(tables, tuple) else id(tables)
         )
         cache_key = (ident, key, device)
+        waited = False
+        while True:
+            with self._lock:
+                plan = self._plans.get(cache_key)
+                if plan is not None:
+                    self._plans.move_to_end(cache_key)
+                    if not waited:  # a coalesced get counts once, as coalesced
+                        self.hits += 1
+                    return plan
+                done = self._building.get(cache_key)
+                if done is None:
+                    # we are the build leader for this key
+                    done = self._building[cache_key] = threading.Event()
+                    self.misses += 1
+                    break
+                # same-key build in flight: wait for it, then re-check
+                if not waited:
+                    self.coalesced += 1
+            waited = True
+            done.wait()
+        try:
+            plan = self._factory(tables, key, device)
+        except BaseException:
+            with self._lock:
+                self._building.pop(cache_key, None)
+            done.set()  # wake waiters; they retry and surface their own error
+            raise
         with self._lock:
-            plan = self._plans.get(cache_key)
-            if plan is not None:
-                self._plans.move_to_end(cache_key)
-                self.hits += 1
-                return plan
-            self.misses += 1
-        # build OUTSIDE the lock: the factory runs device transfers, and a
-        # dispatch-thread cache HIT must not stall behind the staging
-        # worker's build (that stall is what plan prefetch removes).  Two
-        # threads racing the same miss build twice; first insert wins and
-        # the duplicate's buffers are dropped — harmless, bytes unaffected.
-        plan = self._factory(tables, key, device)
-        with self._lock:
-            existing = self._plans.get(cache_key)
-            if existing is not None:
-                self._plans.move_to_end(cache_key)
-                return existing
             self._plans[cache_key] = plan
+            self._building.pop(cache_key, None)
             while len(self._plans) > self.maxsize:
                 self._plans.popitem(last=False)
-            return plan
+        done.set()
+        return plan
 
     def __len__(self) -> int:
-        return len(self._plans)
+        with self._lock:
+            return len(self._plans)

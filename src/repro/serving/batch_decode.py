@@ -70,6 +70,7 @@ from repro.serving.engine import (
     BucketScheduler,
     DevicesArg,
     PipelineExecutor,
+    SubmitBuffer,
     default_use_kernels,
     fetch_to_host,
     member_positions,
@@ -456,6 +457,30 @@ class BatchDecoder:
             cost_model if cost_model is not None else default_cost_model()
         )
         self.stats = BatchDecoderStats()
+        self._pending = SubmitBuffer()
+
+    # -- incremental submission (the front-end's surface) -------------------
+    def submit(self, container: Container) -> int:
+        """Queue one container for the next :meth:`flush` (thread-safe).
+
+        The incremental half of the batch-at-once :meth:`decode`: a serving
+        front-end admits containers one at a time as requests arrive, then
+        flushes them as ONE fused-bucket batch when its micro-batcher
+        decides.  Returns the container's index in flush order — batch
+        formation changes *when* the bucket dispatches, never the bytes any
+        member decodes to.
+        """
+        return self._pending.submit(container)
+
+    @property
+    def pending(self) -> int:
+        """Containers submitted since the last flush."""
+        return len(self._pending)
+
+    def flush(self, tables: TablesArg) -> DecodedBatch:
+        """Decode everything submitted since the last flush as one batch
+        (submission order).  An empty flush is a no-op empty batch."""
+        return self.decode(self._pending.take(), tables)
 
     # -- plan management ---------------------------------------------------
     def _tables_for(

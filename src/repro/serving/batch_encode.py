@@ -69,6 +69,7 @@ from repro.serving.engine import (
     DevicesArg,
     GatherStage,
     PipelineExecutor,
+    SubmitBuffer,
     default_use_kernels,
     fetch_to_host_stitched,
     putter,
@@ -579,6 +580,46 @@ class BatchEncoder:
             cost_model if cost_model is not None else default_cost_model()
         )
         self.stats = BatchEncoderStats()
+        self._pending = SubmitBuffer()
+
+    # -- incremental submission (the front-end's surface) -------------------
+    def submit(
+        self, signal: np.ndarray, domain_id: Optional[int] = None
+    ) -> int:
+        """Queue one signal for the next :meth:`flush` (thread-safe).
+
+        The incremental half of the batch-at-once :meth:`encode` — see
+        :meth:`BatchDecoder.submit`.  ``domain_id`` routes the signal's
+        tables when the flush passes a mapping; row bytes never depend on
+        which other signals share the flush.
+        """
+        return self._pending.submit((signal, domain_id))
+
+    @property
+    def pending(self) -> int:
+        """Signals submitted since the last flush."""
+        return len(self._pending)
+
+    def flush(self, tables: TablesArg) -> EncodedBatch:
+        """Encode everything submitted since the last flush as one batch
+        (submission order).  An empty flush is a no-op empty batch."""
+        items = self._pending.take()
+        signals = [s for s, _ in items]
+        doms = [d for _, d in items]
+        if all(d is None for d in doms):
+            domain_ids = None
+        elif any(d is None for d in doms):
+            if not isinstance(tables, DomainTables):
+                raise ValueError(
+                    "flush with a {domain_id: DomainTables} mapping needs "
+                    "every submit() to carry a domain_id"
+                )
+            domain_ids = [
+                tables.domain_id if d is None else d for d in doms
+            ]
+        else:
+            domain_ids = doms
+        return self.encode(signals, tables, domain_ids=domain_ids)
 
     # -- plan management ---------------------------------------------------
     def _tables_for(self, domain_id: int, tables: TablesArg) -> DomainTables:

@@ -67,6 +67,7 @@ __all__ = [
     "PipelineExecutor",
     "ExecutorStats",
     "GatherStage",
+    "SubmitBuffer",
     "fetch_to_host",
     "fetch_to_host_stitched",
 ]
@@ -367,6 +368,46 @@ class GatherStage:
 
 
 # ---------------------------------------------------------------------------
+# The incremental submission surface shared by the engines.
+# ---------------------------------------------------------------------------
+class SubmitBuffer:
+    """Thread-safe pending-work buffer behind the engines' ``submit`` /
+    ``flush`` surface.
+
+    The batch engines historically assumed batch-at-once staging: callers
+    hand ``decode``/``encode``/``transcode`` a fully formed sequence.  A
+    serving front-end forms batches *incrementally* — requests trickle in
+    from admission threads, and the batch only exists when the
+    micro-batcher decides to flush.  ``submit`` appends one work item (any
+    thread) and returns its index in flush order; ``take`` atomically
+    claims everything pending (the flushing thread's move).  The buffer
+    carries items only — deadlines, shedding and queue bounds are the
+    front-end's admission policy (:mod:`repro.serving.frontend`), not the
+    engines'.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items: List[Any] = []
+
+    def submit(self, item: Any) -> int:
+        """Append one pending item; returns its index in the next flush."""
+        with self._lock:
+            self._items.append(item)
+            return len(self._items) - 1
+
+    def take(self) -> List[Any]:
+        """Atomically claim (and clear) everything pending, in order."""
+        with self._lock:
+            items, self._items = self._items, []
+            return items
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+
+# ---------------------------------------------------------------------------
 # The pipelined executor.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -377,6 +418,7 @@ class ExecutorStats:
     upload_s: float = 0.0  # host staging + h2d time (worker or inline)
     dispatch_s: float = 0.0  # main-thread dispatch time (async: excludes
     # device compute that overlaps later stages)
+    max_inflight: int = 0  # peak buckets simultaneously staged/dispatching
 
 
 class PipelineExecutor:
@@ -407,6 +449,20 @@ class PipelineExecutor:
         self.stats = ExecutorStats()
         self._pool: Optional[ThreadPoolExecutor] = None
         self._lock = threading.Lock()
+        self._inflight = 0
+
+    @property
+    def inflight(self) -> int:
+        """Buckets currently staged or dispatching (in-flight accounting
+        for the serving front-end's load reporting; 0 between runs)."""
+        with self._lock:
+            return self._inflight
+
+    def _inflight_add(self, delta: int) -> None:
+        with self._lock:
+            self._inflight += delta
+            if self._inflight > self.stats.max_inflight:
+                self.stats.max_inflight = self._inflight
 
     def _worker(self) -> ThreadPoolExecutor:
         with self._lock:
@@ -441,28 +497,48 @@ class PipelineExecutor:
                 return dispatch(b, staged)
             finally:
                 self.stats.dispatch_s += time.perf_counter() - t0
+                self._inflight_add(-1)
 
         if not self.pipeline or n == 1:
-            return [timed_dispatch(b, timed_upload(b)) for b in work]
+            out = []
+            for b in work:
+                self._inflight_add(1)
+                try:
+                    staged = timed_upload(b)
+                except BaseException:
+                    self._inflight_add(-1)
+                    raise
+                out.append(timed_dispatch(b, staged))
+            return out
 
         pool = self._worker()
         results: List[Any] = [None] * n
         pending: "deque[Tuple[int, Any, Any]]" = deque()
+
+        def pop_dispatch() -> None:
+            j, bj, fut = pending.popleft()
+            try:
+                staged = fut.result()
+            except BaseException:
+                self._inflight_add(-1)
+                raise
+            results[j] = timed_dispatch(bj, staged)
+
         try:
             for i, b in enumerate(work):
+                self._inflight_add(1)
                 pending.append((i, b, pool.submit(timed_upload, b)))
                 self.stats.pipelined_buckets += 1
                 if len(pending) > self.prefetch:
-                    j, bj, fut = pending.popleft()
-                    results[j] = timed_dispatch(bj, fut.result())
+                    pop_dispatch()
             while pending:
-                j, bj, fut = pending.popleft()
-                results[j] = timed_dispatch(bj, fut.result())
+                pop_dispatch()
         finally:
             # on error, drain leftover staging futures so their (harmless)
             # transfers don't outlive the arrays they close over
             for _, _, fut in pending:
                 fut.cancel()
+                self._inflight_add(-1)
         return results
 
 

@@ -1,0 +1,600 @@
+"""Always-on serving front-end: adaptive deadline micro-batching over the
+pipelined engines.
+
+Everything below this module is *offline*: callers hand
+:class:`~repro.serving.batch_decode.BatchDecoder` /
+:class:`~repro.serving.batch_encode.BatchEncoder` /
+:class:`~repro.serving.transcode.Transcoder` a fully formed batch.  A
+production archive service absorbs an **open-loop request stream** — it
+must form its own batches under latency SLOs, because the engines' fused
+bucket dispatches only amortize their overhead when buckets stay full
+(the throughput argument of the paper's GPU decode path), while a request
+that waits for a full bucket under light load would blow its deadline.
+
+:class:`ServingFrontend` is that batch-forming layer:
+
+  * **Per-(kind, plan) request queues.**  Requests partition by traffic
+    kind (decode / encode / transcode) and by the (domain, config) plan
+    key — exactly the grouping the engines bucket by, so every flushed
+    micro-batch maps onto whole engine buckets with no cross-key padding.
+  * **Deadline micro-batching.**  A queue dispatches when it *fills* to
+    the active :class:`~repro.tuning.policy.BucketPolicy`'s largest
+    bucket edge at or below ``max_batch`` (a full batch carries zero
+    batch-dim padding under the engines' ladder), OR when its oldest
+    request's deadline minus ``flush_slack_ms`` arrives — whichever is
+    first.  Heavy load therefore serves full buckets (throughput);
+    light load serves singleton buckets just-in-time (latency).
+  * **Bounded queues with explicit load-shedding.**  Admission past
+    ``max_queue_depth`` raises :class:`QueueFullError` (carrying the
+    queue key, its depth and the bound) — the caller learns it was shed
+    and can back off; nothing is ever silently dropped.  A request whose
+    deadline already expired at admission raises
+    :class:`DeadlineExpiredError` instead of being enqueued dead.
+  * **Unified admission.**  All three traffic kinds feed one dispatcher
+    and the engines' shared scheduling machinery; a mixed stream
+    interleaves freely, and per-request responses are **byte-identical**
+    to the offline engine path on the same inputs — micro-batching
+    changes *when* buckets run, never bytes (every per-signal output is
+    independent of which other requests share its bucket).
+
+Threading model: admission (``submit_*``) is safe from any number of
+threads and returns a :class:`concurrent.futures.Future`.  ONE dispatcher
+thread owns batch formation and all engine calls — jit tracing and plan
+lookups stay on a single thread, honoring the engines'
+tracing-on-the-calling-thread contract — and hands device-resident
+batches to a small drain pool, so the host-side ``to_host()`` stitch of
+micro-batch k overlaps the dispatch of micro-batch k+1 (the request-level
+twin of the engines' double-buffered staging).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Hashable,
+    List,
+    Mapping,
+    Optional,
+    Tuple,
+    Union,
+)
+
+import numpy as np
+
+from repro.core.calibration import DomainTables
+from repro.core.container import Container
+from repro.serving.batch_decode import BatchDecoder
+from repro.serving.batch_encode import BatchEncoder
+from repro.serving.engine import DevicesArg
+from repro.serving.transcode import Transcoder
+from repro.tuning.policy import BucketPolicy, PolicyArg
+
+__all__ = [
+    "DEADLINE",
+    "FILL",
+    "FrontendClosedError",
+    "FrontendConfig",
+    "FrontendError",
+    "FrontendStats",
+    "DeadlineExpiredError",
+    "QueueFullError",
+    "ServingFrontend",
+    "policy_fill_target",
+]
+
+TablesArg = Union[DomainTables, Mapping[int, DomainTables]]
+
+# dispatch reasons (stats + tests key on these)
+FILL = "fill"  # the queue reached the policy-edge fill target
+DEADLINE = "deadline"  # the oldest request's deadline slack arrived
+FORCED = "forced"  # an explicit flush() or the closing drain
+
+
+# ---------------------------------------------------------------------------
+# Typed front-end errors: load shedding is a *response*, never a silent drop.
+# ---------------------------------------------------------------------------
+class FrontendError(RuntimeError):
+    """Base class for serving front-end rejections/failures."""
+
+
+class QueueFullError(FrontendError):
+    """Admission rejected: the request's queue is at its depth bound.
+
+    Carries the shed decision's evidence — ``queue`` (the (kind, plan)
+    key), ``depth`` (pending requests at rejection) and ``bound`` — so
+    callers and load balancers can report and back off instead of
+    guessing.  Raised at admission; the request was never enqueued.
+    """
+
+    def __init__(self, queue: Hashable, depth: int, bound: int):
+        self.queue = queue
+        self.depth = depth
+        self.bound = bound
+        super().__init__(
+            f"queue {queue!r} is full ({depth} pending >= bound {bound}); "
+            "request shed — back off and retry"
+        )
+
+
+class DeadlineExpiredError(FrontendError):
+    """Admission rejected: the request's deadline had already expired.
+
+    Enqueueing it could only produce a guaranteed-late response that
+    still costs a bucket slot; rejecting at admission is the honest
+    failure.  Raised before enqueue; the request was never admitted.
+    """
+
+    def __init__(self, queue: Hashable, late_s: float):
+        self.queue = queue
+        self.late_s = late_s
+        super().__init__(
+            f"deadline for queue {queue!r} expired {late_s * 1e3:.2f} ms "
+            "before admission"
+        )
+
+
+class FrontendClosedError(FrontendError):
+    """The front-end is closed: no new admissions (and, on a non-draining
+    close, the fate of requests that were still queued)."""
+
+
+# ---------------------------------------------------------------------------
+# Config + stats.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Micro-batching knobs.  See the README knob table.
+
+    ``max_batch`` bounds how many requests one flush takes; the effective
+    *fill target* snaps DOWN to the engines' active bucket-policy edge
+    (:func:`policy_fill_target`), so fill-triggered batches carry zero
+    batch-dimension padding.  ``max_queue_depth`` is the per-queue
+    admission bound (shedding past it); ``default_slo_ms`` the deadline
+    assigned to requests that don't bring one; ``flush_slack_ms`` how far
+    ahead of the oldest deadline a queue flushes (covers dispatch + drain
+    latency); ``drain_workers`` sizes the pool that overlaps host drains
+    with the next dispatch.
+    """
+
+    max_batch: int = 64
+    max_queue_depth: int = 256
+    default_slo_ms: float = 100.0
+    flush_slack_ms: float = 5.0
+    drain_workers: int = 1
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_queue_depth < 1:
+            raise ValueError(
+                f"max_queue_depth must be >= 1, got {self.max_queue_depth}"
+            )
+        if self.drain_workers < 1:
+            raise ValueError(
+                f"drain_workers must be >= 1, got {self.drain_workers}"
+            )
+        if self.flush_slack_ms < 0:
+            raise ValueError(
+                f"flush_slack_ms must be >= 0, got {self.flush_slack_ms}"
+            )
+
+
+def policy_fill_target(policy: BucketPolicy, max_batch: int) -> int:
+    """The largest ``policy`` bucket edge <= ``max_batch`` — the fill
+    count at which a queue dispatches.  Snapping to an edge means a
+    fill-triggered micro-batch pads by zero rows under the engines'
+    bucket ladder (``policy.round(target) == target``)."""
+    t = max(int(max_batch), 1)
+    while t > 1 and policy.round(t) != t:
+        t -= 1
+    return t
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    """Counters the dispatcher/drain threads maintain (read them via
+    :meth:`ServingFrontend.stats_snapshot` for a coherent copy)."""
+
+    admitted: int = 0
+    completed: int = 0
+    failed: int = 0  # admitted but engine/drain raised (futures carry it)
+    shed: int = 0  # rejected QueueFullError
+    rejected_expired: int = 0  # rejected DeadlineExpiredError
+    batches: int = 0
+    fill_dispatches: int = 0
+    deadline_dispatches: int = 0
+    forced_dispatches: int = 0  # explicit flush() + the closing drain
+    deadline_misses: int = 0  # completed after their own deadline
+    max_inflight: int = 0  # peak requests dispatched-but-not-completed
+    max_depth: int = 0  # peak single-queue depth observed at admission
+    batch_size_sum: int = 0
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.batch_size_sum / self.batches if self.batches else 0.0
+
+
+@dataclasses.dataclass
+class _Pending:
+    payload: Any
+    future: Future
+    deadline: float  # absolute, frontend clock
+    admitted_at: float
+
+
+# ---------------------------------------------------------------------------
+# The front-end.
+# ---------------------------------------------------------------------------
+class ServingFrontend:
+    """Long-lived request front-end over the batched serving engines.
+
+    Usage::
+
+        with ServingFrontend(tables) as fe:          # tables: DomainTables
+            fut = fe.submit_decode(container)        #   or {domain_id: ...}
+            signal = fut.result()                    # np.float32 samples
+
+    ``tables`` routes every traffic kind: decode requests resolve their
+    container's domain, encode requests the ``domain_id`` they carry, and
+    transcode requests both their source container's domain and their
+    ``dst_domain_id`` target.  Engine knobs (``pipeline`` / ``devices`` /
+    ``policy`` / ``use_kernels`` / ``chunk_size``) construct the three
+    engines unless explicit engines are passed; the transcoder shares the
+    front-end's decoder and encoder, so all traffic kinds warm ONE set of
+    plan caches.  ``clock`` is injectable for deterministic tests.
+
+    The front-end starts its dispatcher on construction (it is
+    *always-on*); ``close()`` — or leaving the context — drains every
+    queue, completes every admitted future, and joins the threads.
+    """
+
+    def __init__(
+        self,
+        tables: TablesArg,
+        *,
+        config: Optional[FrontendConfig] = None,
+        decoder: Optional[BatchDecoder] = None,
+        encoder: Optional[BatchEncoder] = None,
+        transcoder: Optional[Transcoder] = None,
+        use_kernels: Optional[bool] = None,
+        chunk_size: Optional[int] = None,
+        pipeline: bool = True,
+        devices: DevicesArg = "auto",
+        policy: PolicyArg = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.config = config or FrontendConfig()
+        self.tables: Mapping[int, DomainTables] = (
+            {tables.domain_id: tables}
+            if isinstance(tables, DomainTables) else dict(tables)
+        )
+        self.decoder = decoder or BatchDecoder(
+            use_kernels=use_kernels, pipeline=pipeline, devices=devices,
+            policy=policy,
+        )
+        self.encoder = encoder or BatchEncoder(
+            use_kernels=use_kernels, pipeline=pipeline, devices=devices,
+            policy=policy,
+            **({} if chunk_size is None else {"chunk_size": chunk_size}),
+        )
+        # the transcoder RIDES the front-end's decoder/encoder: one set of
+        # engines, one set of plan caches, one device placement for all
+        # three traffic kinds
+        self.transcoder = transcoder or Transcoder(
+            decoder=self.decoder, encoder=self.encoder,
+        )
+        self._clock = clock
+        self._fill = policy_fill_target(
+            self.decoder.scheduler.policy, self.config.max_batch
+        )
+        self.stats = FrontendStats()
+
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._queues: "Dict[Hashable, deque[_Pending]]" = {}
+        self._inflight = 0
+        self._flush_all = False
+        self._closed = False
+        self._drain_pool = ThreadPoolExecutor(
+            max_workers=self.config.drain_workers,
+            thread_name_prefix="fptc-frontend-drain",
+        )
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="fptc-frontend-dispatch",
+            daemon=True,
+        )
+        self._dispatcher.start()
+
+    # -- context management --------------------------------------------------
+    def __enter__(self) -> "ServingFrontend":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close(drain=exc_type is None)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def fill_target(self) -> int:
+        """Requests at which a queue dispatches on fill (the largest
+        active-policy bucket edge <= ``config.max_batch``)."""
+        return self._fill
+
+    def inflight(self) -> int:
+        """Requests dispatched to the engines but not yet completed."""
+        with self._lock:
+            return self._inflight
+
+    def queue_depths(self) -> Dict[Hashable, int]:
+        """Snapshot of per-queue pending counts (admitted, not yet taken
+        by the dispatcher)."""
+        with self._lock:
+            return {k: len(q) for k, q in self._queues.items() if q}
+
+    def stats_snapshot(self) -> FrontendStats:
+        """A coherent copy of the counters (the live object mutates under
+        the front-end's lock)."""
+        with self._lock:
+            return dataclasses.replace(self.stats)
+
+    # -- admission -----------------------------------------------------------
+    def _tables_for(self, domain_id: int) -> DomainTables:
+        try:
+            return self.tables[domain_id]
+        except KeyError:
+            raise KeyError(
+                f"no DomainTables registered for domain_id={domain_id}"
+            ) from None
+
+    def submit_decode(
+        self, container: Container, *, deadline_ms: Optional[float] = None
+    ) -> "Future[np.ndarray]":
+        """Admit one container for decoding; resolves to its float32
+        signal.  Raises :class:`QueueFullError` /
+        :class:`DeadlineExpiredError` / :class:`FrontendClosedError` at
+        admission (typed, never silent)."""
+        self._tables_for(container.domain_id)  # unroutable fails up front
+        key = ("decode", container.plan_key)
+        return self._admit(key, container, deadline_ms)
+
+    def submit_encode(
+        self,
+        signal: np.ndarray,
+        domain_id: Optional[int] = None,
+        *,
+        deadline_ms: Optional[float] = None,
+    ) -> "Future[Container]":
+        """Admit one signal for encoding; resolves to its
+        :class:`Container`.  ``domain_id`` defaults to the single
+        registered domain (ambiguous with several — pass it)."""
+        if domain_id is None:
+            if len(self.tables) != 1:
+                raise ValueError(
+                    "domain_id is required when the front-end serves "
+                    f"{len(self.tables)} domains"
+                )
+            domain_id = next(iter(self.tables))
+        tab = self._tables_for(domain_id)
+        cfg = tab.config
+        key = ("encode", (domain_id, cfg.n, cfg.e, cfg.l_max))
+        return self._admit(key, (signal, domain_id), deadline_ms)
+
+    def submit_transcode(
+        self,
+        container: Container,
+        dst_domain_id: int,
+        *,
+        deadline_ms: Optional[float] = None,
+    ) -> "Future[Container]":
+        """Admit one container for migration to ``dst_domain_id``'s
+        tables; resolves to the re-encoded :class:`Container`."""
+        self._tables_for(container.domain_id)
+        self._tables_for(dst_domain_id)
+        key = ("transcode", container.plan_key, dst_domain_id)
+        return self._admit(key, (container, dst_domain_id), deadline_ms)
+
+    def _admit(
+        self, key: Hashable, payload: Any, deadline_ms: Optional[float]
+    ) -> Future:
+        now = self._clock()
+        slo = (
+            self.config.default_slo_ms if deadline_ms is None
+            else float(deadline_ms)
+        )
+        deadline = now + slo / 1e3
+        with self._cond:
+            if self._closed:
+                raise FrontendClosedError(
+                    "front-end is closed; no new admissions"
+                )
+            if deadline <= now:
+                self.stats.rejected_expired += 1
+                raise DeadlineExpiredError(key, now - deadline)
+            q = self._queues.get(key)
+            if q is None:
+                q = self._queues[key] = deque()
+            depth = len(q)
+            if depth >= self.config.max_queue_depth:
+                self.stats.shed += 1
+                raise QueueFullError(key, depth, self.config.max_queue_depth)
+            fut: Future = Future()
+            q.append(_Pending(payload, fut, deadline, now))
+            self.stats.admitted += 1
+            if depth + 1 > self.stats.max_depth:
+                self.stats.max_depth = depth + 1
+            self._cond.notify_all()
+        return fut
+
+    def flush(self) -> None:
+        """Force-dispatch everything currently queued, regardless of fill
+        or deadlines (a no-op on empty queues).  Returns immediately; wait
+        on the submitted futures for completion."""
+        with self._cond:
+            self._flush_all = True
+            self._cond.notify_all()
+
+    # -- the dispatcher ------------------------------------------------------
+    def _take_ready(
+        self, now: float, force: bool
+    ) -> List[Tuple[Hashable, List[_Pending], str]]:
+        """Pop every dispatchable micro-batch (caller holds the lock).
+
+        A queue dispatches its oldest ``fill_target`` requests while it
+        holds at least that many (reason FILL); once the oldest remaining
+        request's ``deadline - flush_slack`` has arrived, whatever is left
+        dispatches as one partial batch (reason DEADLINE).  ``force``
+        (explicit flush / closing drain) takes everything in
+        ``max_batch``-bounded slices.
+        """
+        slack = self.config.flush_slack_ms / 1e3
+        out: List[Tuple[Hashable, List[_Pending], str]] = []
+        for key, q in self._queues.items():
+            while len(q) >= self._fill:
+                out.append((
+                    key, [q.popleft() for _ in range(self._fill)], FILL,
+                ))
+            if q and (force or q[0].deadline - slack <= now):
+                batch = []
+                while q and len(batch) < self.config.max_batch:
+                    batch.append(q.popleft())
+                out.append((key, batch, FORCED if force else DEADLINE))
+        return out
+
+    def _next_wake(self, now: float) -> Optional[float]:
+        """Seconds until the earliest queued deadline-minus-slack (None =
+        sleep until notified)."""
+        slack = self.config.flush_slack_ms / 1e3
+        earliest = None
+        for q in self._queues.values():
+            if q:
+                t = q[0].deadline - slack
+                if earliest is None or t < earliest:
+                    earliest = t
+        if earliest is None:
+            return None
+        return max(earliest - now, 0.0)
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    force = self._flush_all or self._closed
+                    self._flush_all = False
+                    batches = self._take_ready(self._clock(), force)
+                    if batches:
+                        self.stats.batches += len(batches)
+                        self._inflight += sum(len(b) for _, b, _ in batches)
+                        if self._inflight > self.stats.max_inflight:
+                            self.stats.max_inflight = self._inflight
+                        for _, members, reason in batches:
+                            self.stats.batch_size_sum += len(members)
+                            if reason == FILL:
+                                self.stats.fill_dispatches += 1
+                            elif reason == DEADLINE:
+                                self.stats.deadline_dispatches += 1
+                            else:
+                                self.stats.forced_dispatches += 1
+                        break
+                    if self._closed:
+                        return  # closed and every queue drained
+                    self._cond.wait(timeout=self._next_wake(self._clock()))
+            for key, members, _reason in batches:
+                self._dispatch_batch(key, members)
+
+    def _dispatch_batch(
+        self, key: Hashable, members: List[_Pending]
+    ) -> None:
+        """Run one micro-batch through its engine (dispatcher thread: all
+        jit tracing happens here) and hand the device-resident result to
+        the drain pool."""
+        kind = key[0]
+        try:
+            if kind == "decode":
+                for r in members:
+                    self.decoder.submit(r.payload)
+                batch = self.decoder.flush(self.tables)
+            elif kind == "encode":
+                for r in members:
+                    signal, domain_id = r.payload
+                    self.encoder.submit(signal, domain_id)
+                batch = self.encoder.flush(self.tables)
+            else:  # transcode
+                for r in members:
+                    container, dst = r.payload
+                    self.transcoder.submit(container, dst)
+                batch = self.transcoder.flush(self.tables, self.tables)
+        except BaseException as e:  # noqa: BLE001 — fate rides the futures
+            self._finish(members, error=e)
+            return
+        self._drain_pool.submit(self._drain, batch, members)
+
+    def _drain(self, batch: Any, members: List[_Pending]) -> None:
+        """Drain worker: host-materialize one micro-batch and complete its
+        futures (overlaps the dispatcher forming the next batch)."""
+        try:
+            results = batch.to_host()
+        except BaseException as e:  # noqa: BLE001
+            self._finish(members, error=e)
+            return
+        self._finish(members, results=results)
+
+    def _finish(
+        self,
+        members: List[_Pending],
+        *,
+        results: Optional[List[Any]] = None,
+        error: Optional[BaseException] = None,
+    ) -> None:
+        now = self._clock()
+        done = failed = misses = 0
+        for i, r in enumerate(members):
+            try:
+                if error is not None:
+                    r.future.set_exception(error)
+                    failed += 1
+                else:
+                    r.future.set_result(results[i])
+                    done += 1
+                    if now > r.deadline:
+                        misses += 1
+            except Exception:  # future already cancelled by the caller
+                pass
+        with self._cond:
+            self._inflight -= len(members)
+            self.stats.completed += done
+            self.stats.failed += failed
+            self.stats.deadline_misses += misses
+            self._cond.notify_all()
+
+    # -- shutdown ------------------------------------------------------------
+    def close(self, *, drain: bool = True) -> None:
+        """Stop the front-end.  ``drain=True`` (default) flushes and
+        completes everything already admitted before returning;
+        ``drain=False`` fails queued requests with
+        :class:`FrontendClosedError` (their futures carry it — still
+        never a silent drop)."""
+        with self._cond:
+            if self._closed:
+                self._cond.notify_all()
+            else:
+                self._closed = True
+                if not drain:
+                    for q in self._queues.values():
+                        while q:
+                            r = q.popleft()
+                            try:
+                                r.future.set_exception(FrontendClosedError(
+                                    "front-end closed before this request "
+                                    "dispatched"
+                                ))
+                            except Exception:
+                                pass
+                            self.stats.failed += 1
+                self._cond.notify_all()
+        self._dispatcher.join()
+        self._drain_pool.shutdown(wait=True)

@@ -71,6 +71,7 @@ from repro.serving.batch_encode import (
 from repro.serving.engine import (
     DevicesArg,
     GatherStage,
+    SubmitBuffer,
     member_positions,
     putter,
 )
@@ -172,6 +173,51 @@ class Transcoder:
         self.exact_capacity = exact_capacity
         self._plans = PlanCache(self._build_plan, plan_cache_size)
         self.stats = TranscoderStats()
+        self._pending = SubmitBuffer()
+
+    # -- incremental submission (the front-end's surface) -------------------
+    def submit(
+        self, container: Container, dst_domain_id: Optional[int] = None
+    ) -> int:
+        """Queue one container for the next :meth:`flush` (thread-safe).
+
+        The incremental half of the batch-at-once :meth:`transcode` — see
+        :meth:`~repro.serving.batch_decode.BatchDecoder.submit`.
+        ``dst_domain_id`` routes the re-encode tables when the flush passes
+        a mapping (None = keep the source domain id).
+        """
+        return self._pending.submit((container, dst_domain_id))
+
+    @property
+    def pending(self) -> int:
+        """Containers submitted since the last flush."""
+        return len(self._pending)
+
+    def flush(
+        self, src_tables: TablesArg, dst_tables: TablesArg
+    ) -> EncodedBatch:
+        """Transcode everything submitted since the last flush as one batch
+        (submission order).  An empty flush is a no-op empty batch."""
+        items = self._pending.take()
+        containers = [c for c, _ in items]
+        if all(d is None for _, d in items):
+            dst_ids = None  # transcode()'s own per-tables-type defaulting
+        else:
+            # fill unrouted members exactly like transcode()'s None default
+            # would: the single tables' own id, or the source domain id
+            # under a mapping
+            single = (
+                dst_tables if isinstance(dst_tables, DomainTables) else None
+            )
+            dst_ids = [
+                d if d is not None
+                else (single.domain_id if single is not None
+                      else c.domain_id)
+                for c, d in items
+            ]
+        return self.transcode(
+            containers, src_tables, dst_tables, dst_domain_ids=dst_ids
+        )
 
     @property
     def scheduler(self):

@@ -273,6 +273,13 @@ def tuned_blocks(
 # ---------------------------------------------------------------------------
 # The sweep.
 # ---------------------------------------------------------------------------
+# Single-flight registry for in-progress tunes: concurrent tune() calls on
+# the same (cache, key) coalesce onto one sweep instead of each running the
+# candidates AND each store()-ing (every store bumps the epoch, and every
+# epoch bump retraces the kernel-path bucket jits — N racing front-end
+# submitters would turn one tune into N sweeps and N retrace storms).
+_TUNE_LOCK = threading.Lock()
+_TUNE_INFLIGHT: Dict[tuple, threading.Event] = {}
 def decode_block_candidates(
     words: int, windows: int
 ) -> List[Blocks]:
@@ -336,10 +343,51 @@ def tune(
         import jax
 
         backend = jax.default_backend()
-    if not force:
+    flight_key = (id(cache), _entry_key(kind, backend, plan_key, shape))
+    while True:
+        if not force:
+            hit = cache.lookup(kind, backend, plan_key, shape)
+            if hit is not None:
+                return hit
+        with _TUNE_LOCK:
+            done = _TUNE_INFLIGHT.get(flight_key)
+            if done is None:
+                _TUNE_INFLIGHT[flight_key] = done = threading.Event()
+                break  # we lead this key's sweep
+        # same key already tuning: wait, then take its fresh entry — even
+        # under force (the entry postdates our call, so it IS a re-tune)
+        done.wait()
         hit = cache.lookup(kind, backend, plan_key, shape)
         if hit is not None:
             return hit
+        # the leader failed; loop and lead the sweep ourselves
+    try:
+        return _tune_locked(
+            kind, plan_key, shape, runner, candidates, cache=cache,
+            backend=backend, trials=trials, warmup=warmup, rank=rank,
+            top_k=top_k,
+        )
+    finally:
+        with _TUNE_LOCK:
+            _TUNE_INFLIGHT.pop(flight_key, None)
+        done.set()
+
+
+def _tune_locked(
+    kind: str,
+    plan_key: Sequence,
+    shape: Sequence[int],
+    runner: Callable[[Blocks], None],
+    candidates: Iterable[Blocks],
+    *,
+    cache: TuningCache,
+    backend: str,
+    trials: int,
+    warmup: int,
+    rank: Optional[Callable[[Blocks], float]],
+    top_k: Optional[int],
+) -> Blocks:
+    """The sweep body; the caller holds this key's single-flight lease."""
     cands = list(candidates)
     if not cands:
         raise ValueError("tune() needs at least one candidate")
