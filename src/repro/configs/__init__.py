@@ -4,7 +4,9 @@ Every architecture module defines ``ARCH`` (the exact assigned config) and
 ``SMOKE`` (a reduced same-family config for CPU tests).  Shapes follow the
 assignment: train_4k / prefill_32k / decode_32k / long_500k, where decode
 shapes lower ``serve_step`` (one token against a seq_len KV cache) and
-long_500k only runs for sub-quadratic families (skips recorded in DESIGN.md).
+long_500k only runs for sub-quadratic families (quadratic-attention
+families skip it by design — the 500k point exists to show the
+sub-quadratic scaling, not to OOM a dense-attention smoke host).
 """
 from __future__ import annotations
 

@@ -2,7 +2,7 @@
 (arXiv:2412.19437; hf).
 
 MTP (multi-token prediction) head is not modeled — it is a training
-objective add-on orthogonal to the FPTC integration; recorded in DESIGN.md.
+objective add-on orthogonal to the FPTC integration.
 The dense d_ff (first 3 layers) is 18432 per the HF config; the assigned
 "d_ff=2048" is the routed-expert width (moe_d_ff).
 """

@@ -1,6 +1,6 @@
 """hymba-1.5b [hybrid] — parallel attention + mamba heads per layer
 (arXiv:2411.13676; hf).  Attention uses a sliding window (the few global
-layers of the released model are approximated as windowed — DESIGN.md);
+layers of the released model are approximated as windowed);
 the SSM half is a Mamba-style selective SSM with state 16."""
 from repro.models.config import ArchConfig
 

@@ -9,9 +9,19 @@ from repro.core.codec import (
     encode_device,
     transcode,
 )
+from repro.core.domains import (
+    KV_DOMAIN_ID,
+    TRAIN_STATE_DOMAIN_ID,
+    calibrate_kv,
+    calibrate_train_state,
+)
 from repro.core.metrics import compression_ratio, prd
 
 __all__ = [
+    "KV_DOMAIN_ID",
+    "TRAIN_STATE_DOMAIN_ID",
+    "calibrate_kv",
+    "calibrate_train_state",
     "CodecConfig",
     "DOMAIN_DEFAULTS",
     "Container",

@@ -61,6 +61,20 @@ class CodecConfig:
 # Typical per-domain operating points (paper §3.4: typical values, tuned per
 # domain smoothness / sampling rate).  These seed calibration; the RD
 # benchmark sweeps around them exactly as the paper sweeps N and E.
+#
+# The last two are *device-resident workload* domains, not archival signal
+# domains (see repro.core.domains):
+#   kv          — KV-cache timelines, windowed along the token axis per
+#                 (head, dim) channel.  n == e (quantization-only) by
+#                 default: spectral truncation only helps TRAINED models
+#                 whose adjacent-token keys/values are smooth, and the
+#                 fixed-rate cache path needs a predictable block size
+#                 anyway.  Post-RMSNorm dynamic range is narrow, so a
+#                 moderate mu + headroom covers outlier channels.
+#   train_state — flattened parameter/optimizer/gradient shards.  Near-
+#                 lossless operating point: full retention, heavy mu-law
+#                 resolution, 100th-percentile scales (a clipped weight is
+#                 a training bug, not a rate win).
 DOMAIN_DEFAULTS = {
     "biomedical": CodecConfig(n=32, e=16, b1=4, b2=16, mu=50.0),
     "seismic": CodecConfig(
@@ -70,4 +84,12 @@ DOMAIN_DEFAULTS = {
     "power": CodecConfig(n=32, e=6, b1=2, b2=6, mu=50.0),
     "meteorological": CodecConfig(n=32, e=8, b1=2, b2=8, mu=50.0),
     "default": CodecConfig(),
+    "kv": CodecConfig(
+        n=16, e=16, b1=2, b2=16, mu=50.0, a0_percentile=99.9,
+        scale_headroom=1.25,
+    ),
+    "train_state": CodecConfig(
+        n=64, e=64, b1=64, b2=64, mu=255.0, a0_percentile=100.0,
+        scale_headroom=1.05, l_max=12,
+    ),
 }

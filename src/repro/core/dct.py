@@ -10,8 +10,8 @@ with inverse
 
 On TPU both directions are realized as matmuls against a precomputed basis so
 they run on the MXU (the paper's GPU kernel evaluates cosines per sample; the
-TPU-native formulation is a [windows, N] @ [N, E] contraction — see DESIGN.md
-§2). Bases are cached per (N, E, dtype).
+TPU-native formulation is a [windows, N] @ [N, E] contraction, so both
+directions inherit MXU throughput). Bases are cached per (N, E, dtype).
 """
 from __future__ import annotations
 

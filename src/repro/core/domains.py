@@ -1,0 +1,168 @@
+"""Workload signal domains: KV-cache timelines and training state.
+
+The paper calibrates per *signal domain* (biomedical, seismic, power,
+meteorological).  Two serving/training workloads are just more signal
+domains for the same transform → quantize → (optional) entropy-code
+pipeline:
+
+  * **kv** — a KV-cache block ``[B, T, H, D]`` is ``B * H * D`` independent
+    time-axis channels; adjacent-token keys/values of trained models are
+    smooth, so windowed DCT along the token axis concentrates energy in the
+    low bins exactly like an archival strip.  The cache path runs
+    *fixed-rate* (transform + table quantization, no entropy coding) so
+    compressed blocks keep a static size and O(1) random access during
+    decode.
+  * **train_state** — parameter / optimizer / gradient tensors flatten into
+    fixed-length 1-D shards; accumulators are smooth along the flattened
+    axis, the same structure cuSZ+-class compressors exploit for scientific
+    checkpoints.  Shards ride the full entropy-coded container path (they
+    live on disk / the checkpoint wire, where variable size is fine).
+
+Both calibrations are thin shims over :func:`repro.core.calibration.
+calibrate`; they only own the domain-specific *flattening* of structured
+tensors into the 1-D strips the calibrator samples windows from, plus the
+reserved domain ids the container header carries.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.core.calibration import DomainTables, calibrate
+from repro.core.config import CodecConfig, DOMAIN_DEFAULTS
+
+__all__ = [
+    "KV_DOMAIN_ID",
+    "TRAIN_STATE_DOMAIN_ID",
+    "kv_channel_strips",
+    "calibrate_kv",
+    "train_state_strip",
+    "calibrate_train_state",
+]
+
+# Reserved domain ids for the workload domains.  0-4 are the archival
+# domains (see tests/_synth.GOLDEN_DOMAINS), 5-7 stay free for archival
+# growth; containers carry the id in the header so a decode with the wrong
+# tables is rejected by validate_container_tables.
+KV_DOMAIN_ID = 8
+TRAIN_STATE_DOMAIN_ID = 9
+
+
+def kv_channel_strips(kv: Any, n: int) -> np.ndarray:
+    """Flatten a KV block ``[B, T, H, D]`` into per-channel time strips.
+
+    Returns ``f32[B * H * D, T]`` — one row per (batch, head, dim) channel,
+    samples ordered along the token axis (the axis the windowed DCT runs
+    over).  ``T`` must divide the window size ``n`` so that concatenated
+    rows never share a window.
+    """
+    kv = np.asarray(jax.device_get(kv), dtype=np.float32)
+    if kv.ndim != 4:
+        raise ValueError(
+            f"KV block must be [B, T, H, D], got shape {kv.shape}"
+        )
+    t = kv.shape[1]
+    if t % n:
+        raise ValueError(
+            f"KV time axis T={t} must be a multiple of the DCT window "
+            f"n={n} (fixed-size blocks keep O(1) cache access)"
+        )
+    return np.moveaxis(kv, 1, -1).reshape(-1, t)
+
+
+def calibrate_kv(
+    kv_sample: Any,
+    config: Optional[CodecConfig] = None,
+    *,
+    domain_id: int = KV_DOMAIN_ID,
+    max_windows: Optional[int] = 65536,
+    seed: int = 0,
+) -> DomainTables:
+    """Calibrate ``kv``-domain tables from a representative KV block.
+
+    ``kv_sample`` is ``[B, T, H, D]`` (e.g. one layer's key or value cache
+    after a representative prefill).  Every (batch, head, dim) channel
+    contributes its token timeline to the calibration strip; windows are
+    channel-aligned, so the per-bin scales and the symbol histogram see
+    exactly the coefficient distribution the fixed-rate cache path will
+    quantize.
+    """
+    config = config or DOMAIN_DEFAULTS["kv"]
+    strips = kv_channel_strips(kv_sample, config.n)
+    return calibrate(
+        strips.reshape(-1), config,
+        domain_id=domain_id, max_windows=max_windows, seed=seed,
+    )
+
+
+def train_state_strip(
+    tree_or_leaves: Union[Any, Sequence[Any]],
+    *,
+    max_elems: int = 1 << 22,
+    seed: int = 0,
+) -> np.ndarray:
+    """Flatten a pytree (or iterable) of float tensors into one 1-D strip.
+
+    Large states are subsampled leaf-proportionally to ``max_elems`` with
+    contiguous runs (the calibrator needs *windows*, so sampling keeps
+    whole aligned spans rather than scattered elements).  Non-float leaves
+    are skipped — they do not compress through FPTC.
+
+    Each leaf is normalized to unit max-abs before it joins the strip:
+    checkpoint leaves span orders of magnitude (params vs Adam ``v``), and
+    the encode path (``serving.workloads.state_to_containers``) applies
+    the same per-leaf normalization, so calibration must see the
+    distribution the quantizer will actually face.
+    """
+    leaves: Iterable[Any]
+    if isinstance(tree_or_leaves, (list, tuple)):
+        leaves = tree_or_leaves
+    else:
+        leaves = jax.tree_util.tree_leaves(tree_or_leaves)
+    flats = []
+    for leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind != "f" or arr.size == 0:
+            continue
+        flat = arr.astype(np.float32).ravel()
+        amax = float(np.max(np.abs(flat)))
+        if amax > 0.0:
+            flat = flat / np.float32(amax)
+        flats.append(flat)
+    if not flats:
+        raise ValueError("no float leaves to calibrate train_state on")
+    total = sum(f.size for f in flats)
+    if total > max_elems:
+        rng = np.random.default_rng(seed)
+        kept = []
+        for f in flats:
+            take = max(int(f.size / total * max_elems), 1)
+            take = min(take, f.size)
+            start = int(rng.integers(0, f.size - take + 1))
+            kept.append(f[start:start + take])
+        flats = kept
+    return np.concatenate(flats)
+
+
+def calibrate_train_state(
+    tree_or_leaves: Union[Any, Sequence[Any]],
+    config: Optional[CodecConfig] = None,
+    *,
+    domain_id: int = TRAIN_STATE_DOMAIN_ID,
+    max_windows: Optional[int] = 65536,
+    seed: int = 0,
+) -> DomainTables:
+    """Calibrate ``train_state``-domain tables from a representative state.
+
+    One calibration serves a whole checkpoint: every float leaf contributes
+    to the strip, and the resulting tables are serialized once per
+    checkpoint (scale + histogram sidecar) instead of once per leaf.
+    """
+    config = config or DOMAIN_DEFAULTS["train_state"]
+    strip = train_state_strip(tree_or_leaves, seed=seed)
+    return calibrate(
+        strip, config,
+        domain_id=domain_id, max_windows=max_windows, seed=seed,
+    )

@@ -18,8 +18,8 @@ consumed by the JAX/Pallas decoders:
 With these, decode needs **no 2^L_max LUT**: the code length of a prefix P is
 ``1 + sum_l [P >= limit_shifted[l]]`` (vectorized compares), and the symbol is
 ``sorted_symbols[rank_offset[len] + ((P - first_code_shifted[len]) >>
-(L_max - len))]`` — on TPU the final 256-way lookup is a one-hot matmul (see
-DESIGN.md §2).  A classic 2^L_max LUT is also built for the CPU fast path and
+(L_max - len))]`` — on TPU the final 256-way lookup is a one-hot matmul.
+A classic 2^L_max LUT is also built for the CPU fast path and
 as a cross-check oracle.
 """
 from __future__ import annotations

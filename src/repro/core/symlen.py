@@ -6,8 +6,8 @@ number of symbols it contains — making every word independently decodable
 (the decoder stops after symlen[w] symbols and ignores padding bits).
 
 On-wire format: little-endian uint64 words.  Inside JAX we represent each
-word as a (hi, lo) pair of uint32 because TPU int64 is emulated (DESIGN.md
-§2); ``words_to_u32`` / ``u32_to_words`` convert losslessly.
+word as a (hi, lo) pair of uint32 because TPU int64 is emulated;
+``words_to_u32`` / ``u32_to_words`` convert losslessly.
 
 Four implementations:
   * ``pack_symlen_np``      — faithful Algorithm 1, host numpy (the paper's

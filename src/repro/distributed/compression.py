@@ -1,17 +1,19 @@
-"""FPTC gradient compression for the slow inter-pod axis (DESIGN.md §3.1).
+"""FPTC gradient compression for the slow inter-pod axis.
 
 The paper's pipeline is transform -> quantize -> entropy-code.  Applied to a
 cross-pod all-reduce, the stages map as:
 
   * **windowed DCT + spectral truncation** (transform): linear, therefore
     commutes with summation — the all-reduce runs *in the truncated spectral
-    domain* and moves E/N of the bytes.
+    domain* and moves E/N of the bytes.  The windowing/transform math is the
+    shared :mod:`repro.core.dct` used by every other FPTC path.
   * **quantization**: int8 wire format with a pod-agreed scale (pmax of local
     scales, then quantize -> psum in int32 -> dequant).  Non-linear, so it is
     applied around the collective, not inside it.
   * **entropy coding**: cannot ride a summing collective (codewords are not
-    additive) — Huffman stays in the checkpoint/offline paths.  Recorded as
-    an adaptation in DESIGN.md.
+    additive) — Huffman stays OFF the collective path by design and lives in
+    the checkpoint/offline paths (see ``distributed.checkpoint`` and
+    ``serving.workloads``).
 
 **Error feedback** keeps convergence: the compression residual is added back
 to the next step's gradient (standard EF-SGD; residual lives in OptState).
@@ -90,17 +92,14 @@ class GradCompressor:
         c = self.config
         flat = g.reshape(-1).astype(jnp.float32)
         size = flat.shape[0]
-        pad = (-size) % c.n
-        if pad:
-            flat = jnp.pad(flat, (0, pad))
-        wins = flat.reshape(-1, c.n)
+        wins = _dct.window_signal(flat, c.n)  # zero-pads the tail window
         return _dct.forward_dct(wins, c.e), size  # [W, E]
 
     def _from_spectrum(self, spec: jnp.ndarray, size: int,
                        shape, dtype) -> jnp.ndarray:
         c = self.config
         wins = _dct.inverse_dct(spec.astype(jnp.float32), c.n)
-        return wins.reshape(-1)[:size].reshape(shape).astype(dtype)
+        return _dct.unwindow_signal(wins, size).reshape(shape).astype(dtype)
 
     # -- compressed cross-pod all-reduce --------------------------------
     def _allreduce_leaf(self, g: jnp.ndarray, npods: int) -> jnp.ndarray:
@@ -193,11 +192,8 @@ class GradCompressor:
                 return mean0.astype(g.dtype), (
                     jnp.zeros_like(r) if r is not None else None
                 )
-            flat = gf.reshape(p, -1)
-            pad = (-flat.shape[1]) % c.n
-            if pad:
-                flat = jnp.pad(flat, ((0, 0), (0, pad)))
-            spec = _dct.forward_dct(flat.reshape(p, -1, c.n), c.e)  # [P,W,E]
+            wins = _dct.window_signal(gf.reshape(p, -1), c.n)  # [P, W, N]
+            spec = _dct.forward_dct(wins, c.e)  # [P, W, E]
             if c.mode == "truncate_int8":
                 amax = jnp.max(jnp.abs(spec)) + 1e-12  # pod-agreed scale
                 scale = amax / 127.0
@@ -242,10 +238,20 @@ class GradCompressor:
 
     # -- wire accounting for the roofline -------------------------------
     def wire_bytes(self, num_elems: int) -> int:
+        """Bytes this mode moves over the pod axis for one leaf.
+
+        ``none`` and ``replicated_f32`` are both uncompressed f32 wires
+        (the GSPMD and replicated-DP baselines) — true f32 bytes, not a
+        KeyError.  Unknown modes raise, matching the collective paths.
+        """
         c = self.config
-        if c.mode == "none":
+        if c.mode in ("none", "replicated_f32"):
             return num_elems * 4
         w = -(-num_elems // c.n)
-        per = {"truncate": jnp.dtype(c.wire_dtype).itemsize,
-               "truncate_int8": 1}[c.mode]
+        if c.mode == "truncate":
+            per = jnp.dtype(c.wire_dtype).itemsize
+        elif c.mode == "truncate_int8":
+            per = 1
+        else:
+            raise ValueError(f"unknown compression mode {c.mode!r}")
         return w * c.e * per

@@ -1,6 +1,6 @@
 """Elastic scaling + straggler mitigation utilities.
 
-Elasticity contract (DESIGN.md §6): checkpoints are *sharding-agnostic*
+Elasticity contract: checkpoints are *sharding-agnostic*
 (host numpy trees), so a job restarted with a different device count simply
 rebuilds the mesh from the surviving hosts and re-device_puts — provided the
 new axis sizes still divide the dims they shard (power-of-two meshes keep

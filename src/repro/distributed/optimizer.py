@@ -1,8 +1,8 @@
 """AdamW in pure JAX with configurable accumulator dtype + LR schedule.
 
 At 671B scale the fp32 m/v accumulators alone are 5.4 TB; the largest
-configs therefore run bf16 accumulators (documented trade-off in DESIGN.md
-§6).  Updates are always computed in fp32 regardless of storage dtype.
+configs therefore run bf16 accumulators (a deliberate storage/precision
+trade).  Updates are always computed in fp32 regardless of storage dtype.
 """
 from __future__ import annotations
 

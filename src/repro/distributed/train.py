@@ -1,6 +1,6 @@
 """Distributed train/serve step factories.
 
-Two distribution modes (DESIGN.md §6):
+Two distribution modes:
 
   * ``fsdp_all`` — parameters (and optimizer state) fully sharded over every
     data-parallel axis, including "pod"; gradients reduce via GSPMD-inserted

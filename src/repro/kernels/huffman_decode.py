@@ -1,7 +1,7 @@
 """Pallas TPU kernel: SymLen word-parallel Huffman decode (paper §4.2.1).
 
 GPU original: one CUDA thread per 64-bit word, serial LUT loop per thread,
-warp-shuffle cooperative writes.  TPU adaptation (DESIGN.md §2):
+warp-shuffle cooperative writes.  TPU adaptation:
 
   * one VPU **lane** per word — a block of ``BLOCK_WORDS`` words is decoded by
     looping over *symbol slots*; every iteration decodes one symbol for all

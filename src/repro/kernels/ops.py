@@ -264,17 +264,32 @@ def idct_dequant(
 
 
 def dct_quant(
-    windows: jnp.ndarray, quant: QuantTable, *, e: int
+    windows: jnp.ndarray,
+    quant: QuantTable,
+    *,
+    e: int,
+    basis: jnp.ndarray = None,
+    exact: bool = False,
 ) -> jnp.ndarray:
-    """Fused forward DCT + quantize: [W, N] samples -> [W, E] levels."""
+    """Fused forward DCT + quantize: [W, N] samples -> [W, E] levels.
+
+    ``basis`` lets callers with a persistent encode plan (the serving
+    engines) pass the already-device-resident DCT basis instead of
+    re-deriving it here; ``exact=True`` selects the reference-parity
+    quantization arm (bit-identical levels to ``core.quantize.quantize`` —
+    what the fixed-rate workload path pins its byte-identity tests on).
+    """
     n = windows.shape[-1]
+    if basis is None:
+        basis = _dct.dct_basis(n, e)
     return _dq.dct_quant(
         windows,
         quant.zone,
         quant.scale,
-        _dct.dct_basis(n, e),
+        basis,
         quant.mu,
         quant.alpha1,
         e=e,
         interpret=_interp(),
+        exact=exact,
     )

@@ -8,7 +8,9 @@ Time-mix recurrence per head (head size 64):
 with **data-dependent decay** w_t = exp(-exp(w_base + tanh(x_t A) B)) — the
 headline Finch feature (arXiv:2404.05892).  Token-shift lerps use static
 learned mixes for r/k/v/g (the paper's full DDLERP LoRA stack on every mix is
-collapsed to its static term; the decay LoRA is kept — recorded in DESIGN.md).
+collapsed to its static term; the decay LoRA is kept — a deliberate repro
+simplification: the static mixes dominate quality, the decay LoRA is the
+headline mechanism).
 Channel-mix is the standard squared-ReLU RWKV FFN.
 """
 from __future__ import annotations

@@ -230,6 +230,53 @@ def bucket_cache_size() -> Optional[int]:
 
 
 # ---------------------------------------------------------------------------
+# Fixed-rate (entropy-off) mode: LUT dequantization + inverse DCT only.
+# The decode half of BatchEncoder.encode_fixed — the KV-cache workload's
+# O(1)-access path.  Levels arrive as a device-resident uint8 tensor (no
+# container, no symlen sidecar) and samples come back device-resident.
+# Dequantization selects from the plan's materialized quant_grid LUT, so
+# fixed-rate samples are bit-identical to what the container path would
+# reconstruct from the same levels.
+# ---------------------------------------------------------------------------
+def _decode_fixed_math(
+    levels: jnp.ndarray,  # uint8[..., W, E]
+    lut: jnp.ndarray,  # f32[E, 256]
+    basis: jnp.ndarray,  # f32[E, N]
+    *,
+    e: int,
+) -> jnp.ndarray:
+    idx = levels.astype(jnp.int32)
+    coeffs = lut[jnp.arange(e, dtype=jnp.int32), idx]
+    windows = coeffs @ basis  # [..., W, N]
+    return windows.reshape(windows.shape[:-2] + (-1,))
+
+
+_decode_fixed = functools.partial(
+    jax.jit, static_argnames=("e",)
+)(_decode_fixed_math)
+
+
+def _decode_fixed_kernels_math(
+    levels, tables, basis, *, n, e, tuning_epoch=0
+):
+    # the staged Pallas dequant+iDCT tile; it dequantizes in-kernel (not
+    # from the LUT), so floats agree with the XLA arm to ~1e-5 — the
+    # fixed-rate byte contract lives on the ENCODE side (levels), where the
+    # exact-parity arm is bit-identical
+    del tuning_epoch
+    from repro.kernels import ops as kops
+
+    flat = levels.reshape(-1, e).astype(jnp.int32)
+    windows = kops.idct_dequant(flat, tables.quant, n=n, basis=basis)
+    return windows.reshape(levels.shape[:-2] + (-1,))
+
+
+_decode_fixed_kernels = functools.partial(
+    jax.jit, static_argnames=("n", "e", "tuning_epoch")
+)(_decode_fixed_kernels_math)
+
+
+# ---------------------------------------------------------------------------
 # Decoded batches: outputs stay on device until explicitly drained.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -507,6 +554,45 @@ class BatchDecoder:
         self, container: Container, tables: TablesArg
     ) -> DecodePlan:
         return self._plan_for_key(container.plan_key, tables)
+
+    # -- fixed-rate (entropy-off) decode -----------------------------------
+    def decode_fixed(
+        self,
+        levels: jnp.ndarray,
+        tables: DomainTables,
+        *,
+        length: Optional[int] = None,
+        dtype=jnp.float32,
+    ) -> jnp.ndarray:
+        """Inverse of :meth:`BatchEncoder.encode_fixed`:
+        ``uint8[..., W, E]`` levels -> ``[..., T]`` samples (``T = W * n``,
+        trimmed to ``length`` when given).
+
+        Dequantization is an exact selection from the plan's 256-level
+        ``quant_grid`` LUT — the same values the container decode path
+        reconstructs — followed by the MXU iDCT.  Everything stays device-
+        resident; tables/basis/LUT ride the persistent :class:`DecodePlan`
+        cache, so repeated cold-block reads pay zero re-uploads.
+        """
+        cfg = tables.config
+        key = (tables.domain_id, cfg.n, cfg.e, cfg.l_max)
+        plan = self._plan_for_key(key, tables)
+        n, e = plan.n, plan.e
+        if levels.shape[-1] != e:
+            raise ValueError(
+                f"levels last axis {levels.shape[-1]} != domain E={e}"
+            )
+        if self.use_kernels:
+            x = _decode_fixed_kernels(
+                levels, plan.tables, plan.basis, n=n, e=e,
+                tuning_epoch=_autotune.epoch(),
+            )
+        else:
+            x = _decode_fixed(levels, plan.lut, plan.basis, e=e)
+        self.stats.dispatches += 1
+        if length is not None:
+            x = x[..., :length]
+        return x.astype(dtype)
 
     # -- the batched decode ------------------------------------------------
     def decode(

@@ -321,6 +321,58 @@ _encode_bucket_gather_kernels_donate = functools.partial(
 
 
 # ---------------------------------------------------------------------------
+# Fixed-rate (entropy-off) mode: transform + table quantization only.
+#
+# The KV-cache workload keeps compressed blocks *fixed-size* so cold cache
+# reads stay O(1) during decode — entropy coding would make block size
+# data-dependent, and its rate win on narrow post-RMSNorm coefficient
+# distributions is small anyway.  The fixed-rate path is the front half of
+# the container pipeline (same window/DCT/quantize code, same calibrated
+# tables riding the same EncodePlan cache) with the packer cut off: levels
+# come back as a device-resident uint8 tensor whose shape is a pure
+# function of the input shape.  Everything stays on device — no host
+# staging, no drain; the caller owns the levels array.
+# ---------------------------------------------------------------------------
+def _encode_fixed_math(
+    x: jnp.ndarray,  # f32[..., T] channel strips, T % n == 0
+    tables: DeviceTables,
+    *,
+    n: int,
+    e: int,
+) -> jnp.ndarray:
+    w = x.shape[-1] // n
+    windows = x.reshape(x.shape[:-1] + (w, n))
+    coeffs = dct.forward_dct(windows, e)
+    return quantize(coeffs, tables.quant)  # uint8[..., W, e]
+
+
+_encode_fixed = functools.partial(
+    jax.jit, static_argnames=("n", "e")
+)(_encode_fixed_math)
+
+
+def _encode_fixed_kernels_math(
+    x, tables, basis, *, n, e, tuning_epoch=0
+):
+    # the Pallas DCT+quant tile with the exact-parity quantization arm:
+    # levels are BIT-identical to the XLA arm (pinned in test_workloads),
+    # so the kernels toggle changes which programs run — never bytes
+    del tuning_epoch
+    from repro.kernels import ops as kops
+
+    w = x.shape[-1] // n
+    windows = x.reshape(-1, n)
+    levels = kops.dct_quant(windows, tables.quant, e=e, basis=basis,
+                            exact=True)
+    return levels.astype(jnp.uint8).reshape(x.shape[:-1] + (w, e))
+
+
+_encode_fixed_kernels = functools.partial(
+    jax.jit, static_argnames=("n", "e", "tuning_epoch")
+)(_encode_fixed_kernels_math)
+
+
+# ---------------------------------------------------------------------------
 # Encoded batches: streams stay on device until explicitly drained.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -636,6 +688,43 @@ class BatchEncoder:
         cfg = tables.config
         key = (tables.domain_id, cfg.n, cfg.e, cfg.l_max)
         return self._plans.get(tables, key, device)
+
+    # -- fixed-rate (entropy-off) encode -----------------------------------
+    def encode_fixed(
+        self, x: jnp.ndarray, tables: DomainTables
+    ) -> jnp.ndarray:
+        """Transform + quantize only: ``f32[..., T]`` -> ``uint8[..., W, E]``.
+
+        The KV-cache workload's O(1)-access mode: compressed size is a pure
+        function of input shape (``E/N`` levels per sample, no sidecar), the
+        calibrated tables ride the same :class:`EncodePlan` cache as the
+        container path, and the result is a device-resident array — no host
+        staging on the way in, no drain on the way out.  ``T`` (the last
+        axis) must be a multiple of the domain's window size ``n``; leading
+        axes are free (a KV block arrives as ``[B, H, D, T]`` channels).
+        Decode with :meth:`BatchDecoder.decode_fixed`.
+
+        The ``use_kernels`` toggle selects the Pallas DCT+quant tile in its
+        exact-parity arm — levels are bit-identical either way.
+        """
+        plan = self.plan_for(tables)
+        n, e = plan.n, plan.e
+        if x.shape[-1] % n:
+            raise ValueError(
+                f"fixed-rate encode needs the time axis ({x.shape[-1]}) to "
+                f"be a multiple of the window size n={n} — pad the block "
+                "(fixed-size blocks are the point of this mode)"
+            )
+        x = jnp.asarray(x, jnp.float32)
+        if self.use_kernels:
+            levels = _encode_fixed_kernels(
+                x, plan.tables, plan.basis, n=n, e=e,
+                tuning_epoch=_autotune.epoch(),
+            )
+        else:
+            levels = _encode_fixed(x, plan.tables, n=n, e=e)
+        self.stats.dispatches += 1
+        return levels
 
     # -- the batched encode ------------------------------------------------
     def encode(

@@ -1,18 +1,25 @@
-"""FPTC KV-cache compression for long-context serving (DESIGN.md §3.3).
+"""Legacy standalone KV-cache compression (deprecated shim).
 
-Cold KV blocks are DCT-transformed along the *time* axis in windows of N
-tokens, 3-zone quantized to uint8, and kept compressed in HBM; blocks are
-dequantized + inverse-transformed on access.  This trades ~4x (+truncation)
-cache memory for a small reconstruction error in attention — the same
-asymmetric trade the paper makes for archival signals, applied to the KV
-timeline (keys/values of adjacent tokens are smooth for trained models).
+.. deprecated::
+    Use :class:`repro.serving.workloads.KVCacheCodec` instead.  The codec
+    routes KV blocks through the batched engines' fixed-rate mode with
+    *calibrated* domain tables (3-zone quantization, fused kernels under
+    ``use_kernels``, plans cached per layer group) — this module's ad-hoc
+    per-window max-abs quantizer predates the engine stack and survives
+    only so existing callers keep working for one release.
 
-Entropy coding is intentionally NOT applied here: cache blocks must stay
-fixed-size for O(1) random access during decode (recorded in DESIGN.md).
+Design notes that remain true on the new path (and are load-bearing):
+cold KV blocks are DCT-transformed along the *time* axis in windows of N
+tokens and quantized to uint8; entropy coding is intentionally NOT applied
+so cache blocks stay fixed-size for O(1) random access during decode.
+Keys/values of adjacent tokens are smooth for trained models, so the
+asymmetric transform-side cost buys a ~4x (+truncation) HBM cut for a
+small attention reconstruction error.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Tuple
 
 import jax
@@ -21,6 +28,16 @@ import jax.numpy as jnp
 from repro.core import dct as dctlib
 
 __all__ = ["KVCompressionConfig", "compress_kv_block", "decompress_kv_block"]
+
+
+def _warn_deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.serving.kv_compression.{name} is deprecated; use "
+        "repro.serving.workloads.KVCacheCodec (calibrated tables + the "
+        "batched engines' fixed-rate mode) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,8 +50,17 @@ class KVCompressionConfig:
 
     @property
     def ratio(self) -> float:
-        """Compressed bytes / raw bf16 bytes."""
-        return (self.e / self.n) * (1 / 2) + 4.0 / (self.n * 2 * 128)
+        """Compressed bytes / raw bf16 bytes.
+
+        Per channel, each N-token window stores E uint8 levels plus one f32
+        scale against N bf16 samples: ``E/(2N) + 4/(2N)``.  (The scale
+        overhead is per *channel*, independent of head_dim — an earlier
+        version wrongly divided it by a hard-coded head_dim of 128.)
+
+        Prefer :attr:`repro.serving.workloads.CompressedKV.ratio`, which is
+        measured from the actual array bytes of a round trip.
+        """
+        return (self.e / self.n) * (1 / 2) + 4.0 / (self.n * 2)
 
 
 def compress_kv_block(
@@ -42,17 +68,28 @@ def compress_kv_block(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """kv: [B, T, H, D] with T divisible by cfg.n.
 
-    Returns (levels uint8 [B, T//N*E, H, D], scale f32 [B, T//N, H, D]).
+    Returns ``(levels uint8 [B, W, H, D, E], scale f32 [B, W, H, D])``
+    where ``W = T // N`` — one window of E levels and one scale per
+    (batch, window, head, dim) channel.
+
+    The uint8 mapping is symmetric: quantized values are clipped to
+    [-127, 127] *before* the +128 bias, so level 128 is exactly 0.0 and
+    every stored level decodes back into [-1, 1] of the window scale.
+    (The earlier mapping clipped after biasing, so level 0 decoded to
+    -128/127 — outside the encoder's own range.)
+
+    .. deprecated:: use :class:`repro.serving.workloads.KVCacheCodec`.
     """
+    _warn_deprecated("compress_kv_block")
     b, t, h, d = kv.shape
     w = t // cfg.n
     x = kv.astype(jnp.float32).reshape(b, w, cfg.n, h, d)
     x = jnp.moveaxis(x, 2, -1)  # [B, W, H, D, N]
     coeffs = x @ dctlib.dct_basis(cfg.n, cfg.e)  # [B, W, H, D, E]
     scale = jnp.max(jnp.abs(coeffs), axis=-1, keepdims=True) + 1e-8
-    q = jnp.clip(jnp.round(coeffs / scale * 127.0) + 128.0, 0, 255).astype(
-        jnp.uint8
-    )
+    q = (
+        jnp.clip(jnp.round(coeffs / scale * 127.0), -127, 127) + 128.0
+    ).astype(jnp.uint8)
     return q, scale[..., 0]
 
 
@@ -60,7 +97,11 @@ def decompress_kv_block(
     levels: jnp.ndarray, scale: jnp.ndarray, cfg: KVCompressionConfig,
     dtype=jnp.bfloat16,
 ) -> jnp.ndarray:
-    """Inverse of :func:`compress_kv_block` -> [B, T, H, D]."""
+    """Inverse of :func:`compress_kv_block` -> [B, T, H, D].
+
+    .. deprecated:: use :class:`repro.serving.workloads.KVCacheCodec`.
+    """
+    _warn_deprecated("decompress_kv_block")
     b, w, h, d, e = levels.shape
     coeffs = (levels.astype(jnp.float32) - 128.0) / 127.0 * scale[..., None]
     x = coeffs @ dctlib.idct_basis(cfg.n, e)  # [B, W, H, D, N]

@@ -1,0 +1,368 @@
+"""Device-resident FPTC workloads: KV-cache and training-state compression.
+
+The engines compress *signals*; this module adapts two structured tensor
+workloads onto them:
+
+  * :class:`KVCacheCodec` — a model's KV cache blocks, compressed in the
+    engines' **fixed-rate** mode (``BatchEncoder.encode_fixed`` /
+    ``BatchDecoder.decode_fixed``): windowed DCT along the token axis per
+    (batch, head, dim) channel + calibrated table quantization, entropy
+    coding OFF so every compressed block has a static size and cold cache
+    reads stay O(1) during decode.  Levels live in HBM as uint8 — a 4x
+    footprint cut vs bf16 at ``e == n`` (quantization only), more with
+    spectral truncation on trained models.  Tables — and therefore engine
+    plans (device tables + DCT bases, uploaded once) — are cached per
+    (layer group, dtype); compress/decompress never bounce through the
+    host.
+  * train-state sharding (:func:`shard_state` / :func:`unshard_state` +
+    :func:`state_to_containers` / :func:`state_from_containers`) — float
+    tensors of a checkpoint/optimizer tree flatten into fixed-length 1-D
+    shards that ride the full entropy-coded container path as one batched
+    encode (shards bucket perfectly: every shard but a leaf's last has the
+    same length).  ``distributed.checkpoint`` uses these for compressed
+    checkpoints; the shards are ordinary FPTC containers, so any engine —
+    including the transcoder and the serving front-end — can consume them.
+
+Both workloads use calibrated :class:`~repro.core.calibration.DomainTables`
+from :mod:`repro.core.domains` (``kv`` / ``train_state`` domains) — the
+standalone DCT + ad-hoc quantizer math the seed's ``kv_compression`` and
+gradient compressor carried is replaced by the shared core pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import DomainTables
+from repro.core.config import CodecConfig, DOMAIN_DEFAULTS
+from repro.core.container import Container
+from repro.core.domains import (
+    KV_DOMAIN_ID,
+    TRAIN_STATE_DOMAIN_ID,
+    calibrate_kv,
+    calibrate_train_state,
+)
+from repro.serving.batch_decode import BatchDecoder
+from repro.serving.batch_encode import DEFAULT_CHUNK_SIZE, BatchEncoder
+
+__all__ = [
+    "CompressedKV",
+    "KVCacheCodec",
+    "shard_state",
+    "unshard_state",
+    "state_to_containers",
+    "state_from_containers",
+    "DEFAULT_SHARD_LEN",
+    "write_workloads_report",
+]
+
+
+# ---------------------------------------------------------------------------
+# KV-cache workload.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CompressedKV:
+    """One compressed KV block: device-resident uint8 levels, fixed size.
+
+    ``levels`` is ``uint8[B, H, D, W, E]`` — per-channel token-axis DCT
+    windows, table-quantized.  ``t`` is the original token count
+    (``t == W * n``), ``dtype`` the cache dtype to restore on decompress.
+    The compressed footprint is exactly ``levels.nbytes`` — no sidecar:
+    the quantizer scales live in the calibrated tables, shipped once per
+    (layer group, dtype), not per block.
+    """
+
+    levels: jnp.ndarray
+    t: int
+    dtype: Any
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.levels.size) * self.levels.dtype.itemsize
+
+    def raw_nbytes(self) -> int:
+        """Bytes of the uncompressed block in its original dtype."""
+        b, h, d, w, _ = self.levels.shape
+        return b * h * d * self.t * np.dtype(self.dtype).itemsize
+
+    @property
+    def ratio(self) -> float:
+        """Measured compressed/raw byte ratio (actual array bytes)."""
+        return self.nbytes / self.raw_nbytes()
+
+
+class KVCacheCodec:
+    """Fixed-rate KV-cache compression over the batched engines.
+
+    Usage::
+
+        codec = KVCacheCodec()
+        codec.calibrate(sample_block, layer="attn")   # once, offline
+        ckv = codec.compress(kv_block, layer="attn")  # uint8 levels in HBM
+        kv  = codec.decompress(ckv, layer="attn")     # [B, T, H, D] again
+
+    ``layer`` names a *table group* — calibration is per (layer group,
+    dtype), so e.g. all attention layers of one model can share tables
+    (keys and values usually want separate groups; their distributions
+    differ).  Compress/decompress are device-resident end to end: the
+    only host work is the Python dispatch, pinned by the transfer-guard
+    test in ``tests/test_workloads.py``.
+    """
+
+    def __init__(
+        self,
+        *,
+        config: Optional[CodecConfig] = None,
+        use_kernels: Optional[bool] = None,
+        encoder: Optional[BatchEncoder] = None,
+        decoder: Optional[BatchDecoder] = None,
+    ):
+        self.config = config or DOMAIN_DEFAULTS["kv"]
+        self.encoder = encoder or BatchEncoder(use_kernels=use_kernels)
+        self.decoder = decoder or BatchDecoder(use_kernels=use_kernels)
+        self._tables: Dict[Tuple[Any, str], DomainTables] = {}
+
+    # -- tables ------------------------------------------------------------
+    def _key(self, layer: Any, dtype) -> Tuple[Any, str]:
+        return (layer, str(np.dtype(dtype)))
+
+    def calibrate(
+        self, kv_sample: Any, *, layer: Any = None,
+        domain_id: int = KV_DOMAIN_ID,
+    ) -> DomainTables:
+        """Calibrate (and register) tables for one (layer group, dtype).
+
+        ``kv_sample`` is a representative ``[B, T, H, D]`` block — e.g. the
+        layer's cache after prefilling calibration prompts.
+        """
+        tables = calibrate_kv(
+            kv_sample, self.config, domain_id=domain_id,
+        )
+        self._tables[self._key(layer, _dtype_of(kv_sample))] = tables
+        return tables
+
+    def set_tables(
+        self, tables: DomainTables, *, layer: Any = None,
+        dtype=jnp.bfloat16,
+    ) -> None:
+        """Register pre-calibrated tables (shipped structures) for a group."""
+        self._tables[self._key(layer, dtype)] = tables
+
+    def tables_for(self, *, layer: Any = None, dtype=jnp.bfloat16
+                   ) -> DomainTables:
+        key = self._key(layer, dtype)
+        try:
+            return self._tables[key]
+        except KeyError:
+            raise KeyError(
+                f"no KV tables calibrated for (layer, dtype)={key} — call "
+                "calibrate(sample_block, layer=...) or set_tables(...) first"
+            ) from None
+
+    # -- the hot path ------------------------------------------------------
+    def compress(self, kv: jnp.ndarray, *, layer: Any = None
+                 ) -> CompressedKV:
+        """``[B, T, H, D]`` cache block -> fixed-size uint8 levels.
+
+        One fused dispatch through :meth:`BatchEncoder.encode_fixed` (plus
+        the channel transpose); ``T`` must be a multiple of the domain's
+        window size.  The input stays wherever it lives — device arrays
+        never visit the host.
+        """
+        if kv.ndim != 4:
+            raise ValueError(f"KV block must be [B, T, H, D], got {kv.shape}")
+        tables = self.tables_for(layer=layer, dtype=_dtype_of(kv))
+        x = jnp.moveaxis(kv.astype(jnp.float32), 1, -1)  # [B, H, D, T]
+        levels = self.encoder.encode_fixed(x, tables)
+        return CompressedKV(levels=levels, t=int(kv.shape[1]),
+                            dtype=_dtype_of(kv))
+
+    def decompress(self, ckv: CompressedKV, *, layer: Any = None
+                   ) -> jnp.ndarray:
+        """Inverse of :meth:`compress` -> ``[B, T, H, D]`` in the original
+        dtype (LUT dequantization + MXU iDCT, device-resident)."""
+        tables = self.tables_for(layer=layer, dtype=ckv.dtype)
+        x = self.decoder.decode_fixed(ckv.levels, tables, length=ckv.t)
+        return jnp.moveaxis(x, -1, 1).astype(ckv.dtype)  # [B, T, H, D]
+
+
+def _dtype_of(x: Any):
+    return x.dtype if hasattr(x, "dtype") else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Training-state workload.
+# ---------------------------------------------------------------------------
+DEFAULT_SHARD_LEN = 1 << 16  # 64Ki samples per shard: uniform buckets, and
+# each shard's packing chunks parallelize inside one engine dispatch
+
+
+def shard_state(
+    arrays: Mapping[str, np.ndarray],
+    *,
+    shard_len: int = DEFAULT_SHARD_LEN,
+    normalize: bool = False,
+) -> Tuple[List[np.ndarray], List[dict]]:
+    """Split named float tensors into fixed-length 1-D f32 shards.
+
+    Returns ``(shards, manifest)``: shards in deterministic (key-sorted,
+    then offset) order, and per-leaf manifest entries ``{key, shape,
+    dtype, lengths}`` where ``lengths`` are the true sample counts of the
+    leaf's shards (all ``shard_len`` except the tail).  The split is the
+    serving-side analog of the bucket ladder: uniform shard lengths mean
+    one encode bucket shape per checkpoint, so the batched encode compiles
+    once and pads almost nothing.
+
+    ``normalize=True`` scales each leaf to unit max-abs and records the
+    scale in its manifest entry (``unshard_state`` undoes it).  The lossy
+    container path uses this: one shared quantizer then serves leaves that
+    span orders of magnitude (params vs Adam ``v``), instead of the
+    smallest-scale leaves losing all their resolution to the largest.
+    The default (``False``) keeps shard/unshard bit-exact.
+    """
+    if shard_len <= 0:
+        raise ValueError(f"shard_len must be positive, got {shard_len}")
+    shards: List[np.ndarray] = []
+    manifest: List[dict] = []
+    for key in sorted(arrays):
+        arr = np.asarray(arrays[key])
+        flat = arr.astype(np.float32).ravel()
+        entry = {
+            "key": key,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+        if normalize:
+            amax = float(np.max(np.abs(flat))) if flat.size else 0.0
+            scale = amax if amax > 0.0 else 1.0
+            flat = flat / np.float32(scale)
+            entry["scale"] = scale
+        lengths = []
+        for start in range(0, flat.size, shard_len):
+            piece = flat[start:start + shard_len]
+            shards.append(piece)
+            lengths.append(int(piece.size))
+        entry["lengths"] = lengths
+        manifest.append(entry)
+    return shards, manifest
+
+
+def unshard_state(
+    shards: Sequence[np.ndarray], manifest: Sequence[dict]
+) -> Dict[str, np.ndarray]:
+    """Reassemble :func:`shard_state` output (shards in manifest order)."""
+    out: Dict[str, np.ndarray] = {}
+    pos = 0
+    for entry in manifest:
+        n_shards = len(entry["lengths"])
+        pieces = shards[pos:pos + n_shards]
+        pos += n_shards
+        for piece, want in zip(pieces, entry["lengths"]):
+            if piece.shape[0] != want:
+                raise ValueError(
+                    f"shard of {entry['key']} has {piece.shape[0]} samples, "
+                    f"manifest says {want}"
+                )
+        flat = np.concatenate([np.asarray(p, np.float32) for p in pieces]) \
+            if pieces else np.empty(0, np.float32)
+        if "scale" in entry:  # undo shard_state(normalize=True)
+            flat = flat * np.float32(entry["scale"])
+        out[entry["key"]] = flat.astype(np.dtype(entry["dtype"])).reshape(
+            entry["shape"]
+        )
+    if pos != len(shards):
+        raise ValueError(
+            f"manifest covers {pos} shards, got {len(shards)}"
+        )
+    return out
+
+
+def state_to_containers(
+    arrays: Mapping[str, np.ndarray],
+    tables: DomainTables,
+    *,
+    encoder: Optional[BatchEncoder] = None,
+    shard_len: int = DEFAULT_SHARD_LEN,
+) -> Tuple[List[Container], List[dict]]:
+    """Encode a named-tensor state as FPTC containers, one batched encode.
+
+    Every shard of every leaf goes through ONE :meth:`BatchEncoder.encode`
+    call — uniform shard lengths land in the same bucket, so the whole
+    checkpoint is a handful of fused dispatches with chunk-parallel
+    packing, drained once at the end (the only host sync; the bytes are
+    headed to disk anyway).  Leaves are normalized to unit max-abs before
+    quantization (scales ride the manifest), matching the normalization
+    :func:`repro.core.domains.train_state_strip` applies at calibration.
+    """
+    encoder = encoder or BatchEncoder(chunk_size=DEFAULT_CHUNK_SIZE)
+    shards, manifest = shard_state(
+        arrays, shard_len=shard_len, normalize=True
+    )
+    containers = (
+        encoder.encode(shards, tables).to_host() if shards else []
+    )
+    return containers, manifest
+
+
+def state_from_containers(
+    containers: Sequence[Container],
+    manifest: Sequence[dict],
+    tables: DomainTables,
+    *,
+    decoder: Optional[BatchDecoder] = None,
+) -> Dict[str, np.ndarray]:
+    """Decode :func:`state_to_containers` output back into named tensors
+    (one batched decode, one drain)."""
+    decoder = decoder or BatchDecoder()
+    shards = (
+        decoder.decode(list(containers), tables).to_host()
+        if containers else []
+    )
+    return unshard_state(shards, manifest)
+
+
+# ---------------------------------------------------------------------------
+# Workload benchmark reporting.
+# ---------------------------------------------------------------------------
+def write_workloads_report(
+    section: str,
+    payload: dict,
+    path: Optional[str] = None,
+) -> str:
+    """Merge one workload's report into ``BENCH_workloads.json``.
+
+    Each workload example owns a section (``"kv_cache"`` /
+    ``"checkpoint"``); the file accumulates sections so CI uploads one
+    artifact with bytes-saved / reconstruction-error / overhead-per-step
+    for every domain.  Writes are atomic (temp file + rename).
+    """
+    if path is None:
+        path = os.path.join(
+            "benchmarks", "artifacts", "workloads", "BENCH_workloads.json"
+        )
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    report = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                report = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            report = {}
+    report[section] = payload
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path

@@ -1,0 +1,361 @@
+"""Workload conformance: KV-cache & train-state domains, fixed-rate engine
+modes, checkpoint v2, and the satellite regression pins (wire_bytes,
+KV ratio, legacy shim semantics)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DOMAIN_DEFAULTS, encode
+from repro.core.dct import forward_dct, window_signal
+from repro.core.domains import (
+    KV_DOMAIN_ID,
+    TRAIN_STATE_DOMAIN_ID,
+    calibrate_kv,
+    calibrate_train_state,
+    kv_channel_strips,
+)
+from repro.core.quantize import quantize
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.compression import CompressionConfig, GradCompressor
+from repro.serving import BatchDecoder, BatchEncoder
+from repro.serving.workloads import (
+    KVCacheCodec,
+    shard_state,
+    state_from_containers,
+    state_to_containers,
+    unshard_state,
+    write_workloads_report,
+)
+
+
+def _kv_block(seed=0, b=2, t=64, h=4, d=8, dtype=jnp.bfloat16):
+    """A smooth-ish token timeline per channel (what trained caches look
+    like): walk along the token axis."""
+    rng = np.random.default_rng(seed)
+    walk = np.cumsum(
+        rng.standard_normal((b, t, h, d)).astype(np.float32), axis=1
+    ) * np.float32(4.0 / t ** 0.5)
+    return jnp.asarray(walk, dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV domain: calibration + fixed-rate engine round trip.
+# ---------------------------------------------------------------------------
+def test_kv_roundtrip_bf16():
+    kv = _kv_block()
+    codec = KVCacheCodec()
+    tables = codec.calibrate(kv, layer="attn")
+    assert tables.domain_id == KV_DOMAIN_ID
+    ckv = codec.compress(kv, layer="attn")
+    assert ckv.levels.dtype == jnp.uint8
+    assert ckv.levels.shape == (2, 4, 8, 64 // codec.config.n,
+                                codec.config.e)
+    out = codec.decompress(ckv, layer="attn")
+    assert out.shape == kv.shape and out.dtype == kv.dtype
+    rel = float(
+        jnp.linalg.norm((out - kv).astype(jnp.float32))
+        / jnp.linalg.norm(kv.astype(jnp.float32))
+    )
+    assert rel < 0.05, rel
+
+
+def test_kv_ratio_measured_from_actual_bytes():
+    """Satellite pin: the compressed/raw ratio comes from real array bytes
+    — for bf16 at the quantization-only point (n == e) that is exactly
+    1 uint8 per 2-byte sample = 0.5, with NO per-block scale sidecar and
+    no hard-coded head_dim anywhere."""
+    for d in (8, 128):  # ratio must be head_dim-independent
+        kv = _kv_block(d=d)
+        codec = KVCacheCodec()
+        codec.calibrate(kv)
+        ckv = codec.compress(kv)
+        assert ckv.raw_nbytes() == kv.size * 2
+        assert ckv.nbytes == kv.size  # one byte per sample
+        assert ckv.ratio == pytest.approx(0.5)
+
+
+def test_kv_engine_levels_match_reference_math():
+    """Byte-identity: the engine-routed fixed-rate path produces exactly
+    the symbols of the reference core pipeline (windowed DCT + table
+    quantize) on the channel strips."""
+    kv = _kv_block(dtype=jnp.float32)
+    codec = KVCacheCodec()
+    tables = codec.calibrate(kv)
+    ckv = codec.compress(kv)
+
+    strips = kv_channel_strips(np.asarray(kv, np.float32), codec.config.n)
+    coeffs = forward_dct(
+        window_signal(jnp.asarray(strips), codec.config.n), codec.config.e
+    )
+    ref = np.asarray(quantize(coeffs, tables.quant))
+    got = np.asarray(ckv.levels).reshape(ref.shape)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_kv_kernels_byte_identical_levels():
+    """use_kernels=True (Pallas, interpret on CPU) produces byte-identical
+    levels to the XLA arm; decoded floats agree to float tolerance."""
+    kv = _kv_block()
+    xla = KVCacheCodec(use_kernels=False)
+    tab = xla.calibrate(kv)
+    ker = KVCacheCodec(use_kernels=True)
+    ker.set_tables(tab, dtype=kv.dtype)
+
+    c_x = xla.compress(kv)
+    c_k = ker.compress(kv)
+    np.testing.assert_array_equal(
+        np.asarray(c_x.levels), np.asarray(c_k.levels)
+    )
+    d_x = np.asarray(xla.decompress(c_x), np.float32)
+    d_k = np.asarray(ker.decompress(c_k), np.float32)
+    np.testing.assert_allclose(d_x, d_k, atol=1e-4)
+
+
+def test_kv_zero_host_bounces():
+    """Acceptance: compress + decompress with the transfer guard pinned to
+    disallow — the whole pipeline is device-resident."""
+    kv = _kv_block()
+    codec = KVCacheCodec()
+    codec.calibrate(kv, layer="l0")
+    jax.config.update("jax_transfer_guard_device_to_host", "disallow")
+    try:
+        ckv = codec.compress(kv, layer="l0")
+        out = codec.decompress(ckv, layer="l0")
+        out.block_until_ready()  # device sync, not a transfer
+    finally:
+        jax.config.update("jax_transfer_guard_device_to_host", None)
+    assert out.shape == kv.shape
+
+
+def test_kv_tables_per_layer_and_dtype():
+    """Tables — and therefore engine plans — are keyed per (layer group,
+    dtype); an uncalibrated group fails loudly."""
+    kv16 = _kv_block(seed=1)
+    kv32 = _kv_block(seed=2, dtype=jnp.float32)
+    codec = KVCacheCodec()
+    t_a = codec.calibrate(kv16, layer="a")
+    t_b = codec.calibrate(kv32, layer="a")  # same layer, other dtype
+    assert codec.tables_for(layer="a", dtype=jnp.bfloat16) is t_a
+    assert codec.tables_for(layer="a", dtype=jnp.float32) is t_b
+    with pytest.raises(KeyError, match="no KV tables"):
+        codec.compress(kv16, layer="uncalibrated")
+    # shared engine plan cache: both table sets resolve plans through the
+    # SAME encoder (one plan per tables identity)
+    codec.compress(kv16, layer="a")
+    codec.compress(kv32, layer="a")
+    assert codec.encoder.stats.dispatches >= 2
+
+
+def test_kv_shape_validation():
+    codec = KVCacheCodec()
+    kv = _kv_block()
+    codec.calibrate(kv)
+    with pytest.raises(ValueError, match=r"\[B, T, H, D\]"):
+        codec.compress(kv[0])  # 3-D
+    with pytest.raises(ValueError):
+        codec.compress(kv[:, :30])  # T % n != 0
+    with pytest.raises(ValueError):
+        kv_channel_strips(np.zeros((2, 30, 4, 8), np.float32), 16)
+    with pytest.raises(ValueError):
+        calibrate_kv(np.zeros((4, 8), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Train-state domain: sharding + batched container path.
+# ---------------------------------------------------------------------------
+def test_train_state_shard_roundtrip_exact():
+    rng = np.random.default_rng(0)
+    arrays = {
+        "w": rng.standard_normal((33, 17)).astype(np.float32),
+        "b": rng.standard_normal(5).astype(np.float16),
+    }
+    shards, manifest = shard_state(arrays, shard_len=128)
+    back = unshard_state(shards, manifest)
+    np.testing.assert_array_equal(back["w"], arrays["w"])
+    np.testing.assert_array_equal(
+        back["b"], arrays["b"].astype(np.float32).astype(np.float16)
+    )
+    assert back["b"].dtype == np.float16
+    with pytest.raises(ValueError):
+        unshard_state(shards[:-1], manifest)
+
+
+def test_train_state_containers_roundtrip():
+    rng = np.random.default_rng(1)
+    arrays = {
+        "m": np.cumsum(
+            rng.standard_normal((64, 64)), axis=0
+        ).astype(np.float32),
+    }
+    arrays["m"] /= np.abs(arrays["m"]).max()
+    tables = calibrate_train_state(arrays)
+    assert tables.domain_id == TRAIN_STATE_DOMAIN_ID
+    conts, manifest = state_to_containers(arrays, tables, shard_len=1024)
+    assert len(conts) == 4
+    assert all(c.domain_id == TRAIN_STATE_DOMAIN_ID for c in conts)
+    rec = state_from_containers(conts, manifest, tables)
+    rel = np.linalg.norm(rec["m"] - arrays["m"]) / np.linalg.norm(
+        arrays["m"]
+    )
+    assert rel < 0.02, rel
+    blob = sum(len(c.to_bytes()) for c in conts)
+    assert blob < arrays["m"].nbytes * 0.8  # actually compressed
+
+
+def test_calibrate_train_state_needs_float_leaves():
+    with pytest.raises(ValueError, match="float"):
+        calibrate_train_state({"steps": np.arange(10, dtype=np.int32)})
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint v2: batched sharded state blob + legacy v1 restore.
+# ---------------------------------------------------------------------------
+def _smooth(rng, shape):
+    t = np.cumsum(rng.standard_normal(shape), axis=0).astype(np.float32)
+    return t / np.abs(t).max()
+
+
+def test_checkpoint_v2_roundtrip(tmp_path):
+    rng = np.random.default_rng(3)
+    tree = {
+        "p": {"w": _smooth(rng, (256, 64)), "b": _smooth(rng, (64,))},
+        "m": {"w": _smooth(rng, (256, 64)) * 0.01},
+        "step_tokens": np.arange(10, dtype=np.int32),
+    }
+    path = ckpt.save_checkpoint(str(tmp_path), 2, tree, compress=True)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 2
+    # both big float leaves share ONE state blob; small/int leaves are raw
+    assert os.path.exists(os.path.join(path, "state.fptc"))
+    assert manifest["leaves"]["['p']['w']"]["codec"] == "fptc_state"
+    assert manifest["leaves"]["['m']['w']"]["codec"] == "fptc_state"
+    assert "codec" not in manifest["leaves"]["['p']['b']"]  # < min size
+    assert "codec" not in manifest["leaves"]["['step_tokens']"]
+
+    _, restored = ckpt.restore_latest(str(tmp_path), tree)
+    np.testing.assert_array_equal(
+        restored["step_tokens"], tree["step_tokens"]
+    )
+    np.testing.assert_array_equal(restored["p"]["b"], tree["p"]["b"])
+    for key in (("p", "w"), ("m", "w")):
+        a, b = tree[key[0]][key[1]], restored[key[0]][key[1]]
+        rel = np.linalg.norm(a - b) / np.linalg.norm(a)
+        assert rel < 0.02, (key, rel)
+    # the state blob actually shrinks the float payload
+    blob = os.path.getsize(os.path.join(path, "state.fptc"))
+    float_bytes = tree["p"]["w"].nbytes + tree["m"]["w"].nbytes
+    assert blob < float_bytes * 0.8
+
+
+def test_checkpoint_v2_crc_detects_state_corruption(tmp_path):
+    rng = np.random.default_rng(4)
+    tree = {"m": _smooth(rng, (256, 64))}
+    path = ckpt.save_checkpoint(str(tmp_path), 1, tree, compress=True)
+    fp = os.path.join(path, "state.fptc")
+    raw = bytearray(open(fp, "rb").read())
+    raw[-1] ^= 0xFF
+    open(fp, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match="CRC"):
+        ckpt.restore_checkpoint(str(tmp_path), 1, tree)
+
+
+def test_checkpoint_v1_manifest_still_restores(tmp_path):
+    """A pre-v2 checkpoint (per-leaf .fptc containers with inline aux
+    tables) written by the old code must keep restoring."""
+    import zlib
+
+    from repro.core.calibration import calibrate
+
+    rng = np.random.default_rng(5)
+    arr = _smooth(rng, (256, 64))
+    tree = {"m": arr}
+    (key, _), = ckpt._leaf_paths(tree)
+    name = ckpt._fname(key)
+
+    final = tmp_path / "step_000000000007"
+    os.makedirs(final)
+    flat = arr.astype(np.float32).ravel()
+    tables = calibrate(flat, ckpt.CKPT_CODEC_CONFIG, max_windows=4096)
+    blob = encode(flat, tables).to_bytes()
+    with open(final / f"{name}.fptc", "wb") as f:
+        f.write(blob)
+    manifest = {"step": 7, "version": 1, "leaves": {key: {
+        "shape": list(arr.shape), "dtype": str(arr.dtype), "file": name,
+        "codec": "fptc", "crc": zlib.crc32(blob),
+        "aux": {
+            "scale": np.asarray(tables.quant.scale).tolist(),
+            "hist": np.asarray(tables.hist).tolist(),
+        },
+    }}}
+    with open(final / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+
+    step, restored = ckpt.restore_latest(str(tmp_path), tree)
+    assert step == 7
+    rel = np.linalg.norm(restored["m"] - arr) / np.linalg.norm(arr)
+    assert rel < 0.02, rel
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: wire_bytes, legacy KV shim.
+# ---------------------------------------------------------------------------
+def test_wire_bytes_all_modes():
+    """Satellite pin: every declared mode has a wire-byte account — the
+    uncompressed baselines report true f32 bytes instead of KeyError."""
+    n, e, num = 64, 16, 1000
+    mk = lambda mode: GradCompressor(CompressionConfig(mode=mode, n=n, e=e))
+    assert mk("none").wire_bytes(num) == num * 4
+    assert mk("replicated_f32").wire_bytes(num) == num * 4
+    w = -(-num // n)
+    assert mk("truncate").wire_bytes(num) == w * e * 2  # bf16
+    assert mk("truncate_int8").wire_bytes(num) == w * e * 1
+    with pytest.raises(ValueError, match="unknown compression mode"):
+        mk("gzip").wire_bytes(num)
+
+
+def test_legacy_kv_shim_ratio_and_mapping():
+    from repro.serving.kv_compression import (
+        KVCompressionConfig,
+        compress_kv_block,
+        decompress_kv_block,
+    )
+
+    cfg = KVCompressionConfig(n=16, e=8)
+    # scale overhead is per channel: 4 bytes per N-token window vs 2N raw
+    # bytes — NOT divided by a hard-coded head_dim
+    assert cfg.ratio == pytest.approx(8 / 32 + 4 / 32)
+
+    kv = _kv_block(dtype=jnp.float32)
+    with pytest.warns(DeprecationWarning, match="KVCacheCodec"):
+        levels, scale = compress_kv_block(kv, cfg)
+    # documented shapes: [B, W, H, D, E] levels, [B, W, H, D] scale
+    assert levels.shape == (2, 4, 4, 8, 8)
+    assert scale.shape == (2, 4, 4, 8)
+    # symmetric mapping: level 0 unreachable, 128 is exact zero, every
+    # stored level decodes inside [-1, 1] of the window scale
+    assert int(levels.min()) >= 1
+    norm = (np.asarray(levels, np.float32) - 128.0) / 127.0
+    assert np.all(np.abs(norm) <= 1.0)
+    with pytest.warns(DeprecationWarning):
+        rec = decompress_kv_block(levels, scale, cfg, dtype=jnp.float32)
+    assert rec.shape == kv.shape
+
+
+# ---------------------------------------------------------------------------
+# Report writer.
+# ---------------------------------------------------------------------------
+def test_write_workloads_report_merges_sections(tmp_path):
+    path = str(tmp_path / "BENCH_workloads.json")
+    write_workloads_report("kv_cache", {"ratio": 0.5}, path)
+    write_workloads_report("checkpoint", {"ratio": 0.3}, path)
+    write_workloads_report("kv_cache", {"ratio": 0.25}, path)  # overwrite
+    with open(path) as f:
+        report = json.load(f)
+    assert report == {
+        "kv_cache": {"ratio": 0.25}, "checkpoint": {"ratio": 0.3}
+    }
