@@ -22,7 +22,12 @@ import numpy as np
 from repro.core import dct
 from repro.core.config import CodecConfig
 from repro.core.huffman import HuffmanCodebook, build_codebook
-from repro.core.quantize import QuantTable, build_quant_table, quantize
+from repro.core.quantize import (
+    QuantTable,
+    build_quant_table,
+    predict_levels,
+    quantize,
+)
 
 __all__ = ["DomainTables", "DeviceTables", "calibrate"]
 
@@ -116,6 +121,12 @@ def calibrate(
     if max_windows is not None and windows.shape[0] > max_windows:
         rng = np.random.default_rng(seed)
         idx = rng.choice(windows.shape[0], size=max_windows, replace=False)
+        # sorted: scales and the v2 histogram are order-invariant, but v3
+        # configs histogram PREDICTION RESIDUALS between sampled windows —
+        # keeping the sample in signal order makes adjacent sampled windows
+        # as close as the subsample allows, so the residual histogram the
+        # codebook is built on tracks the one the encoder will produce
+        idx.sort()
         windows = windows[idx]
     coeffs = np.asarray(dct.forward_dct(jnp.asarray(windows), config.e))
 
@@ -129,7 +140,22 @@ def calibrate(
         scale_headroom=config.scale_headroom,
     )
 
-    symbols = np.asarray(quantize(jnp.asarray(coeffs), quant)).ravel()
+    levels = np.asarray(quantize(jnp.asarray(coeffs), quant))
+    pred_id, bands, zplanes = config.coding
+    # v3 configs entropy-code the TRANSFORMED symbols (prediction residuals,
+    # minus suppressed zero planes), so that is what the codebook must be
+    # calibrated on — a book built on raw levels would assign long codes to
+    # the residual mass at 128 and give back the ratio the predictor won.
+    grid = np.asarray(
+        predict_levels(jnp.asarray(levels), pred_id, bands)
+    )
+    if zplanes:
+        from repro.core.symlen import zero_plane_masks
+
+        zrow, zcol = zero_plane_masks(grid)
+        symbols = grid[~zrow, :][:, ~zcol].ravel()
+    else:
+        symbols = grid.ravel()
     hist = np.bincount(symbols, minlength=256).astype(np.int64)
     hist += 1  # Laplace smoothing: every symbol must be encodable
     book = build_codebook(hist, l_max=config.l_max)

@@ -23,7 +23,13 @@ import numpy as np
 from repro.core import dct, symlen
 from repro.core.calibration import DeviceTables, DomainTables
 from repro.core.container import Container
-from repro.core.quantize import dequantize, quantize
+from repro.core.quantize import (
+    dequantize,
+    expand_coded_stream,
+    predict_levels,
+    quantize,
+    unpredict_levels,
+)
 
 __all__ = [
     "encode",
@@ -35,25 +41,25 @@ __all__ = [
 ]
 
 
-def validate_container_tables(
-    plan_key: Tuple[int, int, int, int], tables: DomainTables
-) -> None:
+def validate_container_tables(plan_key, tables: DomainTables) -> None:
     """Reject a container/tables pairing whose configs disagree.
 
-    A container carries its encode-time (domain_id, n, e, l_max) in the
-    header; decoding it with a :class:`DomainTables` built for a different
-    config either dies in an opaque shape error or — worse — decodes
-    silently to garbage (coincident config, different book: two domains can
-    share (n, e, l_max) yet quantize/code differently, so domain_id is part
-    of the check).  Every decode path calls this before touching the stream.
+    A container carries its encode-time (domain_id, n, e, l_max, coding) in
+    the header; decoding it with a :class:`DomainTables` built for a
+    different config either dies in an opaque shape error or — worse —
+    decodes silently to garbage (coincident config, different book: two
+    domains can share (n, e, l_max) yet quantize/code differently, so
+    domain_id is part of the check; a v3 book is calibrated on *coded*
+    residual symbols, so the coding triple is too).  Every decode path calls
+    this before touching the stream.
     """
     cfg = tables.config
-    if plan_key != (tables.domain_id, cfg.n, cfg.e, cfg.l_max):
+    want = (tables.domain_id, cfg.n, cfg.e, cfg.l_max, cfg.coding)
+    if tuple(plan_key) != want:
         raise ValueError(
-            f"container plan_key (domain_id, n, e, l_max)={plan_key} does "
-            f"not match the supplied DomainTables (n={cfg.n}, "
-            f"e={cfg.e}, l_max={cfg.l_max}, domain_id={tables.domain_id}) — "
-            "decoding with mismatched tables would produce garbage"
+            f"container plan_key (domain_id, n, e, l_max, coding)="
+            f"{tuple(plan_key)} does not match the supplied DomainTables "
+            f"{want} — decoding with mismatched tables would produce garbage"
         )
 
 
@@ -61,14 +67,28 @@ def validate_container_tables(
 # Host (reference / embedded-encoder) path
 # ---------------------------------------------------------------------------
 def encode(signal: np.ndarray, tables: DomainTables) -> Container:
-    """Single-pass table-driven encode (paper §4.1, Fig. 5)."""
+    """Single-pass table-driven encode (paper §4.1, Fig. 5).
+
+    With a v3 coding in the config, the quantized level grid is re-coded
+    losslessly before entropy coding: prediction residuals on the low bands
+    (``quantize.predict_levels``) and zero-plane suppression
+    (``symlen.zero_plane_masks``); the container records both in its header.
+    """
     cfg = tables.config
+    pred_id, bands, zplanes = cfg.coding
     signal = np.asarray(signal, dtype=np.float32).ravel()
     length = signal.shape[0]
     windows = dct.window_signal(jnp.asarray(signal), cfg.n)
     coeffs = dct.forward_dct(windows, cfg.e)
-    syms = np.asarray(quantize(coeffs, tables.quant)).ravel()
-    stream = symlen.pack_symlen_np(syms, tables.book)
+    levels = quantize(coeffs, tables.quant)
+    grid = np.asarray(predict_levels(levels, pred_id, bands))
+    zrow = zcol = None
+    if zplanes:
+        zrow, zcol = symlen.zero_plane_masks(grid)
+        coded = grid[~zrow, :][:, ~zcol].ravel()
+    else:
+        coded = grid.ravel()
+    stream = symlen.pack_symlen_np(coded, tables.book)
     return Container(
         words=stream.words,
         symlen=stream.symlen.astype(np.uint8),
@@ -79,6 +99,11 @@ def encode(signal: np.ndarray, tables: DomainTables) -> Container:
         e=cfg.e,
         l_max=cfg.l_max,
         domain_id=tables.domain_id,
+        predictor=pred_id,
+        predict_bands=bands,
+        zero_planes=zplanes,
+        zrow=zrow,
+        zcol=zcol,
     )
 
 
@@ -91,7 +116,25 @@ def decode(container: Container, tables: DomainTables) -> np.ndarray:
         num_symbols=container.num_symbols,
     )
     syms = symlen.unpack_symlen_np(stream, tables.book)
-    coeffs_q = jnp.asarray(syms.reshape(container.num_windows, container.e))
+    pred_id, bands, zplanes = container.coding
+    nw, e = container.num_windows, container.e
+    if container.coding == (0, 0, False):
+        coeffs_q = jnp.asarray(syms.reshape(nw, e))
+    else:
+        idx, seg = symlen.v3_expand_index(
+            [(nw, container.zrow, container.zcol)], e
+        )
+        if syms.size == 0:  # everything suppressed: the grid is all 128
+            grid = np.full((nw, e), 128, dtype=np.int32)
+        else:
+            grid = np.asarray(
+                expand_coded_stream(
+                    jnp.asarray(syms, jnp.int32), jnp.asarray(idx)
+                )
+            ).reshape(nw, e)
+        coeffs_q = unpredict_levels(
+            jnp.asarray(grid, jnp.uint32), jnp.asarray(seg), pred_id, bands
+        )
     coeffs = dequantize(coeffs_q, tables.quant)
     windows = dct.inverse_dct(coeffs, container.n)
     return np.asarray(dct.unwindow_signal(windows, container.signal_length))

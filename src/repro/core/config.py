@@ -1,9 +1,20 @@
-"""Codec configuration — the paper's Table 1 parameters."""
+"""Codec configuration — the paper's Table 1 parameters.
+
+Beyond Table 1, the config carries the **container-v3 coding stage**
+(predictor + zero-plane suppression, ROADMAP item 3): an optional lossless
+re-coding of the quantized levels before entropy coding.  ``predictor``/
+``predict_bands``/``zero_planes`` default off, in which case the encoder
+emits the classic v2 container byte for byte.
+"""
 from __future__ import annotations
 
 import dataclasses
+from typing import Tuple
 
-__all__ = ["CodecConfig", "DOMAIN_DEFAULTS"]
+__all__ = ["CodecConfig", "DOMAIN_DEFAULTS", "PREDICTORS"]
+
+# predictor name -> wire id (container v3 flag bits; order is frozen)
+PREDICTORS = {"none": 0, "delta": 1, "linear2": 2}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,6 +35,17 @@ class CodecConfig:
       scale_headroom: multiplier on calibrated zone maxima — clipping guard
         for low-stationarity domains (paper tunes A0 per-domain by
         stationarity; this is the explicit knob).
+      predictor: container-v3 window predictor on the low-frequency bands —
+        "none" (v2 behaviour), "delta" (residual vs the previous window's
+        level), or "linear2" (residual vs the 2*prev - prev2 linear
+        extrapolation).  Lossless re-coding of the quantized levels: the
+        reconstruction is bit-identical to v2 at the same quant table.
+      predict_bands: how many leading coefficient bands [0, predict_bands)
+        the predictor applies to (the DC/low-frequency bands, where
+        adjacent windows correlate).  0 iff predictor == "none".
+      zero_planes: container-v3 zero-plane suppression — all-zero-bin
+        window rows and coefficient columns of the coded level grid are
+        dropped from the symbol stream and recorded in header bitmaps.
     """
 
     n: int = 32
@@ -35,6 +57,9 @@ class CodecConfig:
     a0_percentile: float = 99.9
     l_max: int = 12
     scale_headroom: float = 1.0
+    predictor: str = "none"
+    predict_bands: int = 0
+    zero_planes: bool = False
 
     def __post_init__(self):
         if not (4 <= self.n <= 128):
@@ -53,6 +78,31 @@ class CodecConfig:
             raise ValueError(f"percentile={self.a0_percentile} outside [90,100]")
         if not (1 <= self.l_max <= 16):
             raise ValueError(f"l_max={self.l_max} outside [1, 16]")
+        if self.predictor not in PREDICTORS:
+            raise ValueError(
+                f"predictor={self.predictor!r} not in {sorted(PREDICTORS)}"
+            )
+        if self.predictor == "none":
+            if self.predict_bands != 0:
+                raise ValueError(
+                    "predict_bands must be 0 when predictor='none'"
+                )
+        elif not (1 <= self.predict_bands <= self.e):
+            raise ValueError(
+                f"predict_bands={self.predict_bands} outside [1, E={self.e}]"
+            )
+
+    @property
+    def coding(self) -> Tuple[int, int, bool]:
+        """The v3 coding triple ``(pred_id, predict_bands, zero_planes)``.
+
+        ``(0, 0, False)`` means "no v3 stage" — the v2 wire format.  This
+        triple is part of every plan key: plans with different codings trace
+        different bucket math and must never share a cache entry.
+        """
+        return (
+            PREDICTORS[self.predictor], self.predict_bands, self.zero_planes
+        )
 
     def replace(self, **kw) -> "CodecConfig":
         return dataclasses.replace(self, **kw)

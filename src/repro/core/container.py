@@ -4,42 +4,108 @@ The container is the unit of archival/transmission.  Header fields make every
 container self-describing (given the domain's calibrated tables, which are
 deployed once per domain — paper §3.4, Fig. 4).
 
-Byte layout (little-endian):
+Byte layout (little-endian), common header (all versions):
   magic           4 bytes  b"FPTC"
-  version         u16
+  version         u16      1, 2 or 3
   l_max           u16
   n, e            u16, u16
   num_words       u32
-  num_symbols     u64
+  num_symbols     u64      (v3: the CODED symbol count, post-suppression)
   num_windows     u32
   signal_length   u64
   max_symlen      u16
   domain_id       u16
-  reserved        u32      (checksum — fault detection; see below)
+  crc             u32      (fault detection; coverage is version-dependent)
+
+Version 1/2 payload:
   words           num_words * 8 bytes (uint64 LE)
   symlen          num_words * 1 byte  (uint8; symlen <= 64)
 
+Version 3 adds a 4-byte extension header immediately after the common
+header, before the payload:
+  flags           u16      bits 0-1: predictor id (0 none / 1 delta /
+                           2 linear2); bit 2: zero-plane suppression;
+                           bits 3-15 reserved, must be zero
+  predict_bands   u16      leading coefficient bands the predictor covers
+
+and, when flag bit 2 (zero planes) is set, two bitmaps after the symlen
+sidecar:
+  zrow bitmap     ceil(num_windows / 8) bytes (LSB-first per byte)
+  zcol bitmap     ceil(e / 8) bytes
+
+**v3 design notes** (ROADMAP item 3).  v3 is a *lossless re-coding of the
+quantized levels* — reconstruction at a given quant table is bit-identical
+to v2; only the entropy-coded byte count changes.  Two optional stages, both
+applied to the level grid ``[num_windows, e]`` before entropy coding:
+
+  1. *Windowed prediction* (cuSZ+-style): bands ``k < predict_bands`` store
+     the mod-256 residual against the previous window's level (delta) or a
+     two-point linear extrapolation (linear2), with a virtual all-128
+     history before the first window.  Smooth domains pile the residual
+     histogram onto 128, which the canonical Huffman stage converts into
+     shorter codes.  Exact math: ``repro.core.quantize.predict_levels`` /
+     ``unpredict_levels``.
+  2. *Zero-plane suppression* (FZ-GPU-style): window rows and coefficient
+     columns whose coded symbols are ALL the zero bin are dropped from the
+     stream entirely and recorded as the two bitmaps — the bit-transposed
+     zero indicator planes.  The surviving cells keep row-major order, so
+     ``num_symbols`` shrinks to ``(rows kept) * (cols kept)``.  Layout
+     contract: ``repro.core.symlen.zero_plane_masks`` / ``v3_expand_index``.
+
+The Huffman book of a v3 domain is calibrated on the *coded* symbols, so a
+v3 container must decode with v3-calibrated tables — the coding triple is
+part of the container's plan key and of table validation.
+
 Checksum: version 2 writes one crc32 over words || symlen, so bit flips in
-either the payload words or the sidecar fail loudly at ``from_bytes``.
+either the payload words or the sidecar fail loudly at ``from_bytes``;
+version 3 extends the coverage to words || symlen || zrow || zcol.
 Version-1 containers (whose crc covered only the symlen sidecar — payload
 flips decoded silently to garbage) are still readable with the legacy
 sidecar-only check.
+
+**Forever-decode promise:** every version this module has ever written
+(v1, v2, v3) stays readable by ``from_bytes`` permanently; the golden-blob
+suite (tests/golden/) pins byte-exact decode of all of them.  Parsing is
+zero-copy on the hot decode-staging path: header and payload sections are
+sliced as ``memoryview``s and wrapped with ``np.frombuffer`` (no bytes
+copies); the returned arrays alias — and keep alive — the input buffer.
 """
 from __future__ import annotations
 
 import dataclasses
 import struct
 import zlib
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
-__all__ = ["Container", "HEADER_BYTES"]
+__all__ = ["Container", "HEADER_BYTES", "SUPPORTED_VERSIONS"]
 
 _MAGIC = b"FPTC"
-_VERSION = 2  # v2: crc covers words + symlen; v1 (symlen only) still reads
+_VERSION = 2  # default wire version for trivially-coded containers
+_V3 = 3  # written iff the coding triple is non-trivial
 _HDR = struct.Struct("<4sHHHHIQIQHHI")
+_EXT3 = struct.Struct("<HH")  # v3 extension: flags, predict_bands
 HEADER_BYTES = _HDR.size
+SUPPORTED_VERSIONS = (1, 2, 3)
+
+_FLAG_PRED_MASK = 0x0003  # bits 0-1: predictor id
+_FLAG_ZPLANES = 0x0004  # bit 2: zero-plane suppression
+
+
+def _pack_bitmap(mask: np.ndarray) -> bytes:
+    """bool[N] -> ceil(N/8) bytes, LSB-first within each byte."""
+    return np.packbits(
+        np.asarray(mask, dtype=bool), bitorder="little"
+    ).tobytes()
+
+
+def _unpack_bitmap(buf, n: int) -> np.ndarray:
+    """ceil(n/8) bytes -> bool[n] (LSB-first)."""
+    bits = np.unpackbits(
+        np.frombuffer(buf, dtype=np.uint8), bitorder="little"
+    )
+    return bits[:n].astype(bool)
 
 
 @dataclasses.dataclass
@@ -53,6 +119,12 @@ class Container:
     e: int
     l_max: int
     domain_id: int = 0
+    # --- v3 coding state (all defaults give the classic v2 container) ---
+    predictor: int = 0  # 0 none / 1 delta / 2 linear2
+    predict_bands: int = 0
+    zero_planes: bool = False
+    zrow: Optional[np.ndarray] = None  # bool[num_windows] when zero_planes
+    zcol: Optional[np.ndarray] = None  # bool[e] when zero_planes
 
     @property
     def num_words(self) -> int:
@@ -63,11 +135,23 @@ class Container:
         return int(self.symlen.max()) if self.symlen.size else 0
 
     @property
-    def plan_key(self) -> Tuple[int, int, int, int]:
+    def coding(self) -> Tuple[int, int, bool]:
+        """The (pred_id, predict_bands, zero_planes) coding triple — matches
+        ``CodecConfig.coding`` of the tables that encoded this container."""
+        return (self.predictor, self.predict_bands, bool(self.zero_planes))
+
+    @property
+    def version(self) -> int:
+        """Wire version ``to_bytes`` will emit: 3 iff any v3 stage is on."""
+        return _V3 if self.coding != (0, 0, False) else _VERSION
+
+    @property
+    def plan_key(self) -> Tuple[int, int, int, int, Tuple[int, int, bool]]:
         """Grouping key for batched decoding: containers sharing a
-        (domain_id, n, e, l_max) decode with the same tables, iDCT basis and
-        kernel specialization, so they can ride one fused dispatch."""
-        return (self.domain_id, self.n, self.e, self.l_max)
+        (domain_id, n, e, l_max, coding) decode with the same tables, iDCT
+        basis, coding transform and kernel specialization, so they can ride
+        one fused dispatch."""
+        return (self.domain_id, self.n, self.e, self.l_max, self.coding)
 
     def words_u32(self) -> Tuple[np.ndarray, np.ndarray]:
         """Payload words as the (hi, lo) uint32 pair the device path consumes
@@ -78,7 +162,12 @@ class Container:
 
     @property
     def compressed_bytes(self) -> int:
-        return HEADER_BYTES + self.num_words * 8 + self.num_words
+        total = HEADER_BYTES + self.num_words * 8 + self.num_words
+        if self.version == _V3:
+            total += _EXT3.size
+            if self.zero_planes:
+                total += (self.num_windows + 7) // 8 + (self.e + 7) // 8
+        return total
 
     @property
     def original_bytes(self) -> int:
@@ -91,9 +180,31 @@ class Container:
     def to_bytes(self) -> bytes:
         words_b = self.words.astype("<u8").tobytes()
         symlen_b = self.symlen.astype(np.uint8).tobytes()
+        version = self.version
+        ext = b""
+        bitmaps = b""
+        if version == _V3:
+            if not (0 <= self.predictor <= 2):
+                raise ValueError(f"bad predictor id {self.predictor}")
+            flags = self.predictor & _FLAG_PRED_MASK
+            if self.zero_planes:
+                flags |= _FLAG_ZPLANES
+                if self.zrow is None or self.zcol is None:
+                    raise ValueError(
+                        "zero_planes container needs zrow/zcol masks"
+                    )
+                if len(self.zrow) != self.num_windows or len(
+                    self.zcol
+                ) != self.e:
+                    raise ValueError("zrow/zcol mask length mismatch")
+                bitmaps = _pack_bitmap(self.zrow) + _pack_bitmap(self.zcol)
+            ext = _EXT3.pack(flags, self.predict_bands)
+        crc = zlib.crc32(symlen_b, zlib.crc32(words_b))
+        if bitmaps:
+            crc = zlib.crc32(bitmaps, crc)
         hdr = _HDR.pack(
             _MAGIC,
-            _VERSION,
+            version,
             self.l_max,
             self.n,
             self.e,
@@ -103,12 +214,21 @@ class Container:
             self.signal_length,
             self.max_symlen,
             self.domain_id,
-            zlib.crc32(symlen_b, zlib.crc32(words_b)),
+            crc,
         )
-        return hdr + words_b + symlen_b
+        return hdr + ext + words_b + symlen_b + bitmaps
 
     @classmethod
-    def from_bytes(cls, data: bytes) -> "Container":
+    def from_bytes(cls, data) -> "Container":
+        """Parse a serialized container from any bytes-like buffer.
+
+        Zero-copy: payload sections are referenced through ``memoryview``
+        slices (``np.frombuffer``), not copied — the hot decode-staging path
+        reads them exactly once while bucketing, so a copy here would be
+        pure overhead.  The returned arrays are read-only views keeping
+        ``data`` alive.
+        """
+        mv = memoryview(data)
         (
             magic,
             version,
@@ -122,24 +242,48 @@ class Container:
             max_symlen,
             domain_id,
             crc,
-        ) = _HDR.unpack_from(data, 0)
+        ) = _HDR.unpack_from(mv, 0)
         if magic != _MAGIC:
             raise ValueError("bad magic — not an FPTC container")
-        if version not in (1, _VERSION):
-            raise ValueError(f"unsupported container version {version}")
+        if version not in SUPPORTED_VERSIONS:
+            raise ValueError(
+                f"unsupported container version {version}; this build reads "
+                f"versions {SUPPORTED_VERSIONS} (the forever-decode set)"
+            )
         off = HEADER_BYTES
-        words = np.frombuffer(data, dtype="<u8", count=num_words, offset=off)
+        predictor, predict_bands, zero_planes = 0, 0, False
+        if version == _V3:
+            flags, predict_bands = _EXT3.unpack_from(mv, off)
+            off += _EXT3.size
+            predictor = flags & _FLAG_PRED_MASK
+            zero_planes = bool(flags & _FLAG_ZPLANES)
+            if flags & ~(_FLAG_PRED_MASK | _FLAG_ZPLANES):
+                raise ValueError(
+                    f"v3 container sets reserved flag bits "
+                    f"{flags:#06x} — written by a newer build?"
+                )
+        words = np.frombuffer(mv, dtype="<u8", count=num_words, offset=off)
         off += num_words * 8
-        symlen = np.frombuffer(data, dtype=np.uint8, count=num_words, offset=off)
+        symlen = np.frombuffer(
+            mv, dtype=np.uint8, count=num_words, offset=off
+        )
+        off += num_words
+        zrow = zcol = None
+        crc_calc = zlib.crc32(symlen, zlib.crc32(words))
         if version == 1:  # legacy: crc covered only the symlen sidecar
-            expect = zlib.crc32(symlen.tobytes())
-        else:
-            expect = zlib.crc32(symlen.tobytes(), zlib.crc32(words.tobytes()))
-        if expect != crc:
+            crc_calc = zlib.crc32(symlen)
+        if zero_planes:
+            nrow_b = (num_windows + 7) // 8
+            ncol_b = (e + 7) // 8
+            bitmaps = mv[off: off + nrow_b + ncol_b]
+            zrow = _unpack_bitmap(bitmaps[:nrow_b], num_windows)
+            zcol = _unpack_bitmap(bitmaps[nrow_b:], e)
+            crc_calc = zlib.crc32(bitmaps, crc_calc)
+        if crc_calc != crc:
             raise ValueError("payload CRC mismatch — corrupt container")
         c = cls(
-            words=words.copy(),
-            symlen=symlen.copy(),
+            words=words,
+            symlen=symlen,
             num_symbols=num_symbols,
             num_windows=num_windows,
             signal_length=signal_length,
@@ -147,6 +291,11 @@ class Container:
             e=e,
             l_max=l_max,
             domain_id=domain_id,
+            predictor=predictor,
+            predict_bands=predict_bands,
+            zero_planes=zero_planes,
+            zrow=zrow,
+            zcol=zcol,
         )
         if c.max_symlen != max_symlen:
             raise ValueError("max_symlen header mismatch — corrupt container")

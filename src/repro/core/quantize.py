@@ -26,7 +26,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["QuantTable", "build_quant_table", "quantize", "dequantize"]
+__all__ = [
+    "QuantTable",
+    "build_quant_table",
+    "quantize",
+    "dequantize",
+    "predict_levels",
+    "unpredict_levels",
+    "expand_coded_stream",
+]
 
 _ZERO_BIN = 128.0
 
@@ -173,6 +181,108 @@ def dequantize(levels: jnp.ndarray, table: QuantTable) -> jnp.ndarray:
 
     c = jnp.where(table.zone == 0, c0, jnp.where(table.zone == 1, c1, 0.0))
     return c
+
+
+# ---------------------------------------------------------------------------
+# Container-v3 window prediction (ROADMAP item 3, cuSZ+-style delta coding).
+#
+# A lossless re-coding of the quantized levels BEFORE entropy coding: for
+# the low-frequency bands k < predict_bands, the coded symbol is the mod-256
+# residual of the level against a prediction from the previous window(s),
+# with a virtual all-128 (zero-bin) history before the first window of each
+# signal.  Smooth domains concentrate the residual histogram around 128,
+# which the canonical Huffman stage then exploits.  This is the EXACT
+# reference math: the XLA bucket arms, the Pallas megakernels (which trace
+# these functions in-kernel) and the host codec all call these same
+# functions, so fused == unfused stays bit-identical by construction.
+#
+# All arithmetic runs in uint32 mod 256 — safe because 256 divides 2**32,
+# so uint32 wraparound never changes a value mod 256 (the linear2 inverse
+# takes a double cumulative sum whose intermediates overflow u8/i32).
+# ---------------------------------------------------------------------------
+def predict_levels(
+    levels: jnp.ndarray, pred_id: int, predict_bands: int
+) -> jnp.ndarray:
+    """Forward prediction: uint8 levels ``[..., W, E]`` -> coded grid.
+
+    Columns ``k < predict_bands`` become mod-256 residuals against the
+    predictor (``pred_id`` 1 = delta, 2 = linear2); the rest pass through.
+    Purely row-local along the window axis (shift-with-128-fill), so it
+    vmaps over batch rows with no segment bookkeeping: every leading-axis
+    row is one signal.
+    """
+    if pred_id == 0 or predict_bands == 0:
+        return levels
+    l = levels.astype(jnp.uint32)
+    zero = jnp.full_like(l[..., :1, :], 128)
+    l1 = jnp.concatenate([zero, l[..., :-1, :]], axis=-2)  # prev window
+    if pred_id == 1:
+        pred = l1
+    else:
+        l2 = jnp.concatenate([zero, l1[..., :-1, :]], axis=-2)  # prev-prev
+        pred = 2 * l1 - l2  # u32 wrap ok mod 256
+    r = jnp.mod(l - pred + 128, 256)
+    e = levels.shape[-1]
+    band = jnp.arange(e, dtype=jnp.int32) < predict_bands
+    return jnp.where(band, r, l).astype(jnp.uint8)
+
+
+def _seg_cumsum(t: jnp.ndarray, seg_start: jnp.ndarray) -> jnp.ndarray:
+    """Segmented inclusive cumsum along axis 0 of ``t`` [W, E] (uint32).
+
+    ``seg_start[w]`` is the index of the first window of w's segment (self
+    for single-window segments).  Implemented as a plain cumsum minus a
+    gather of the exclusive cumsum at each segment start — no scan over
+    segments, so it lowers to the same primitives inside and outside Pallas.
+    """
+    a = jnp.cumsum(t, axis=0, dtype=jnp.uint32)  # inclusive
+    excl = a - t  # exclusive
+    return a - excl[seg_start, :]
+
+
+def unpredict_levels(
+    grid: jnp.ndarray,
+    seg_start: jnp.ndarray,
+    pred_id: int,
+    predict_bands: int,
+) -> jnp.ndarray:
+    """Inverse prediction: coded grid ``[W, E]`` (any uint dtype) -> levels.
+
+    Exactly inverts :func:`predict_levels` over concatenated signals:
+    ``seg_start`` marks each window's signal start so predictions never
+    cross a signal boundary.  The delta inverse is one segmented cumsum of
+    ``t = (r - 128) mod 256``; linear2 telescopes to a double segmented
+    cumsum.  A window whose residuals are all ``t == 0`` (e.g. suppressed /
+    padding windows expanded to 128) contributes the identity, which is why
+    zero-plane expansion commutes with unprediction.
+    """
+    if pred_id == 0 or predict_bands == 0:
+        return grid.astype(jnp.uint8)
+    g = grid.astype(jnp.uint32)
+    t = jnp.mod(g + 128, 256)  # (r - 128) mod 256
+    cs = _seg_cumsum(t, seg_start)
+    if pred_id == 2:
+        cs = _seg_cumsum(cs, seg_start)
+    lvl = jnp.mod(cs + 128, 256)
+    e = grid.shape[-1]
+    band = jnp.arange(e, dtype=jnp.int32) < predict_bands
+    return jnp.where(band, lvl, g).astype(jnp.uint8)
+
+
+def expand_coded_stream(
+    dense: jnp.ndarray, idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Zero-plane expansion: dense coded symbols -> flat residual grid.
+
+    ``idx[p]`` is the position of flat grid cell ``p`` in the dense coded
+    stream, or ``-1`` where the cell was suppressed (zero-plane) or is
+    bucket padding — those cells expand to the zero bin 128.  ``idx`` is
+    built host-side at staging time (:func:`repro.core.symlen.
+    v3_expand_index`); the gather itself is shared by the XLA arm and the
+    decode megakernel epilogue.
+    """
+    took = dense[jnp.clip(idx, 0, None)]
+    return jnp.where(idx >= 0, took, jnp.asarray(128, dense.dtype))
 
 
 def quant_grid(table: QuantTable) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -57,6 +57,8 @@ __all__ = [
     "compact_padded_scatter",
     "words_to_u32",
     "u32_to_words",
+    "zero_plane_masks",
+    "v3_expand_index",
 ]
 
 WORD_BITS = 64
@@ -139,7 +141,7 @@ def pack_symlen_np(symbols: np.ndarray, book: HuffmanCodebook) -> PackedStream:
 # ---------------------------------------------------------------------------
 # Device encoders — scan (1 step per symbol) and chunk-parallel.
 # ---------------------------------------------------------------------------
-def _precheck_symbols(symbols, lengths, num_symbols) -> None:
+def _precheck_symbols(symbols, lengths, num_symbols, valid=None) -> None:
     """Host-side guard against silent corruption: every symbol that occurs in
     the input must have a codeword (``lengths[sym] > 0``).
 
@@ -152,10 +154,13 @@ def _precheck_symbols(symbols, lengths, num_symbols) -> None:
     """
     if any(
         isinstance(x, jax.core.Tracer)
-        for x in (symbols, lengths, num_symbols)
+        for x in (symbols, lengths, num_symbols, valid)
     ):
         return
-    syms = np.asarray(symbols).ravel()[: int(num_symbols)]
+    if valid is not None:
+        syms = np.asarray(symbols).ravel()[np.asarray(valid).ravel()]
+    else:
+        syms = np.asarray(symbols).ravel()[: int(num_symbols)]
     if syms.size == 0:
         return
     lens = np.asarray(lengths).ravel()
@@ -478,6 +483,7 @@ def pack_symlen_chunked_parts(
     *,
     chunk_size: int,
     num_symbols=None,
+    valid=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """The un-stitched form of :func:`pack_symlen_chunked`.
 
@@ -488,26 +494,119 @@ def pack_symlen_chunked_parts(
     consumes this directly — draining chunk runs and concatenating on the
     host is cheaper than a device-side gather stitch, and the stream bytes
     are identical either way.
+
+    ``valid`` (bool[S], mutually exclusive with ``num_symbols``) masks an
+    arbitrary — not necessarily prefix — subset of slots: masked slots emit
+    nothing, advance nothing, and are not counted in the symlen sidecar, so
+    the packed stream equals the greedy pack of the *compacted* valid
+    subsequence.  This is what makes container-v3 zero-plane suppression
+    free at encode time: the suppressed grid cells are simply masked out.
     """
     if chunk_size <= 0:
         raise ValueError(f"chunk_size must be positive, got {chunk_size}")
     s = symbols.shape[0]
     num_chunks = max(-(-s // chunk_size), 1)
     cap = num_chunks * chunk_size
-    if num_symbols is None:
-        num_symbols = s
-    _precheck_symbols(symbols, lengths, num_symbols)
+    if valid is not None:
+        if num_symbols is not None:
+            raise ValueError("pass num_symbols or valid, not both")
+        _precheck_symbols(symbols, lengths, None, valid)
+        valid = valid.astype(bool)
+        if cap != s:
+            valid = jnp.pad(valid, (0, cap - s))
+    else:
+        if num_symbols is None:
+            num_symbols = s
+        _precheck_symbols(symbols, lengths, num_symbols)
+        nsym = jnp.asarray(num_symbols, jnp.int32)
+        valid = jnp.arange(cap, dtype=jnp.int32) < nsym
     symbols = symbols.astype(jnp.int32)
     if cap != s:
         symbols = jnp.pad(symbols, (0, cap - s))
-    nsym = jnp.asarray(num_symbols, jnp.int32)
-    valid = jnp.arange(cap, dtype=jnp.int32) < nsym
     return jax.vmap(_pack_chunk, in_axes=(0, 0, None, None))(
         symbols.reshape(num_chunks, chunk_size),
         valid.reshape(num_chunks, chunk_size),
         codes,
         lengths,
     )
+
+
+# ---------------------------------------------------------------------------
+# Container-v3 zero-plane stream layout (host-side reference).
+#
+# With zero-plane suppression, the coded symbol stream omits every grid cell
+# (w, k) lying in an all-zero-bin window row (zrow[w]) or coefficient column
+# (zcol[k]) of the coded level grid.  The two helpers below define the ONE
+# canonical mapping between the dense coded stream and the flat [W, E] grid
+# — the encoder's suppression mask and the decoder's expansion index are
+# both derived from it, so encode and decode can never disagree about
+# stream order (row-major over the surviving cells).
+# ---------------------------------------------------------------------------
+def zero_plane_masks(grid: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(zrow bool[W], zcol bool[E]) of a coded level grid ``[W, E]``.
+
+    ``zrow[w]``: every band of window w coded to the zero bin 128.
+    ``zcol[k]``: band k coded to 128 in every window (all-zero rows are
+    themselves all-128, so including them cannot flip a column).
+    A cell is suppressed iff its row OR column is a zero plane; the
+    surviving cell count is rectangular: (W - nzrow) * (E - nzcol).
+    """
+    grid = np.asarray(grid)
+    zrow = np.all(grid == 128, axis=1)
+    zcol = np.all(grid == 128, axis=0)
+    return zrow, zcol
+
+
+def v3_expand_index(
+    members,
+    e: int,
+    *,
+    total_windows: int = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Expansion metadata for a (possibly concatenated) v3 coded stream.
+
+    ``members`` is a sequence of ``(num_windows, zrow, zcol)`` per signal in
+    stream order (``zrow``/``zcol`` may be None for no suppression);
+    ``total_windows`` pads the grid to the decode bucket's rounded window
+    count.  Returns:
+
+      idx int32[total_windows * e] — for each flat grid cell, its position
+        in the dense coded stream (concatenation of the members' coded
+        symbols), or -1 where the cell is suppressed or bucket padding
+        (those expand to the zero bin — see ``quantize.expand_coded_stream``).
+      seg_start int32[total_windows] — the index of the first window of the
+        cell's signal (its own index for padding windows, making each one a
+        degenerate single-window segment that unpredicts to all-128), the
+        segment structure ``quantize.unpredict_levels`` needs so prediction
+        never crosses a signal boundary.
+    """
+    win_off = 0
+    sym_off = 0
+    nw_total = sum(int(m[0]) for m in members)
+    if total_windows is None:
+        total_windows = nw_total
+    if total_windows < nw_total:
+        raise ValueError(
+            f"total_windows={total_windows} < member windows {nw_total}"
+        )
+    idx = np.full(total_windows * e, -1, dtype=np.int32)
+    seg_start = np.arange(total_windows, dtype=np.int32)
+    for num_windows, zrow, zcol in members:
+        w = int(num_windows)
+        mask = np.ones((w, e), dtype=bool)
+        if zrow is not None:
+            mask &= ~np.asarray(zrow, dtype=bool)[:, None]
+        if zcol is not None:
+            mask &= ~np.asarray(zcol, dtype=bool)[None, :]
+        flat = mask.ravel()
+        ncoded = int(np.count_nonzero(flat))
+        local = np.cumsum(flat) - 1  # rank of each coded cell, row-major
+        span = idx[win_off * e: win_off * e + w * e]
+        span[flat] = (local[flat] + sym_off).astype(np.int32)
+        seg_start[win_off: win_off + w] = win_off
+        win_off += w
+        sym_off += ncoded
+    return idx, seg_start
 
 
 def _shl32(x: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:

@@ -48,11 +48,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.quantize import expand_coded_stream, unpredict_levels
 from repro.kernels.huffman_decode import BLOCK_WORDS, decode_block_to_dense
 
 __all__ = ["decode_fused", "lut_dequant", "BLOCK_WINDOWS"]
 
 BLOCK_WINDOWS = 256
+
+_TRIVIAL = (0, 0, False)  # no predictor, no zero planes: the v1/v2 stream
 
 
 def lut_dequant(levels: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
@@ -84,17 +87,23 @@ def _fused_kernel(
     dec_syms_ref,
     lut_ref,  # f32[E, 256] — quant_grid reconstruction values
     basis_ref,  # f32[E, N]
-    out_ref,  # f32[BLOCK_WINDOWS, N]
-    syms_ref,  # VMEM scratch int32[cap]: the dense symbol stream
-    tile_ref,  # VMEM scratch int32[max_symlen, BLOCK_WORDS]
-    base_ref,  # SMEM scratch int32[1]
-    *,
+    # remaining refs: [idx_ref, seg_ref] (v3 coding only), then
+    #   out_ref   f32[BLOCK_WINDOWS, N]
+    #   syms_ref  VMEM scratch int32[cap]: the dense symbol stream
+    #   tile_ref  VMEM scratch int32[max_symlen, BLOCK_WORDS]
+    #   base_ref  SMEM scratch int32[1]
+    *refs,
     l_max: int,
     max_symlen: int,
     num_word_blocks: int,
     block_windows: int,
     e: int,
+    coding=_TRIVIAL,
 ):
+    if coding == _TRIVIAL:
+        out_ref, syms_ref, tile_ref, base_ref = refs
+    else:
+        idx_ref, seg_ref, out_ref, syms_ref, tile_ref, base_ref = refs
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -121,6 +130,34 @@ def _fused_kernel(
         )
         base_ref[0] = base + decoded
 
+    if coding != _TRIVIAL:
+        pred_id, bands, _ = coding
+
+        # the v3 epilogue: one extra step's worth of work at the phase
+        # boundary, still inside the same pallas_call.  The dense coded
+        # stream is expanded to the full level grid (idx: -1 = zero-plane
+        # suppressed or bucket padding -> zero bin 128) and un-predicted
+        # per window segment — the SAME reference inverse the host decoder
+        # and the XLA bucket arm call, so all three stay bit-identical.
+        # Runs exactly once, on the first window-phase step, before any
+        # window block reads the scratch back.
+        @pl.when(i == num_word_blocks)
+        def _recode_phase():
+            dense = syms_ref[...]  # materialized value (no aliasing with
+            # the write below)
+            grid = expand_coded_stream(dense, idx_ref[...])
+            grid = grid.reshape(-1, e)  # [nwp, e]
+            lvl = unpredict_levels(
+                grid.astype(jnp.uint32), seg_ref[...], pred_id, bands
+            ).astype(jnp.int32)
+            flat = lvl.reshape(-1)
+            spill = syms_ref.shape[0] - flat.shape[0]
+            if spill:
+                flat = jnp.concatenate(
+                    [flat, jnp.full((spill,), 128, jnp.int32)]
+                )
+            syms_ref[...] = flat
+
     @pl.when(i >= num_word_blocks)
     def _idct_phase():
         j = i - num_word_blocks
@@ -141,6 +178,7 @@ def _fused_kernel(
         "num_windows",
         "n",
         "e",
+        "coding",
         "block_words",
         "block_windows",
         "interpret",
@@ -156,12 +194,15 @@ def decode_fused(
     dec_syms: jnp.ndarray,
     lut: jnp.ndarray,  # f32[E, 256] quant_grid LUT
     basis: jnp.ndarray,  # f32[E, N] idct basis
+    idx: jnp.ndarray = None,  # int32[num_windows * e] (v3 coding only)
+    seg: jnp.ndarray = None,  # int32[num_windows] (v3 coding only)
     *,
     l_max: int,
     max_symlen: int,
     num_windows: int,
     n: int,
     e: int,
+    coding=_TRIVIAL,
     block_words: int = BLOCK_WORDS,
     block_windows: int = BLOCK_WINDOWS,
     interpret: bool = True,
@@ -174,7 +215,18 @@ def decode_fused(
     past the stream's true symbol total read as level 0 (zero-initialized
     scratch + re-zeroed spill, matching the XLA scatter's zero fill), so
     even padding windows come out bit-identical to the XLA bucket arm.
+
+    A non-trivial ``coding`` (container v3) keeps the single-dispatch shape:
+    the coded-stream expansion + un-prediction epilogue
+    (``quantize.expand_coded_stream`` / ``unpredict_levels``) runs in-kernel
+    on the first window-phase grid step, rewriting the dense scratch from
+    coded symbols to plain levels before any window block dequantizes.
+    ``idx``/``seg`` are the host-built expansion arrays
+    (``symlen.v3_expand_index``); they are padded here to the kernel's
+    window-block rounding (-1 / self-segments, which expand and un-predict
+    to the zero bin 128 — exactly the XLA arm's padding semantics).
     """
+    coding = tuple(coding)
     w = hi.shape[0]
     block_words = min(block_words, max(w, 1))
     num_word_blocks = -(-w // block_words)
@@ -197,6 +249,7 @@ def decode_fused(
         num_word_blocks=nwb,
         block_windows=block_windows,
         e=e,
+        coding=coding,
     )
 
     def word_ix(i):
@@ -205,20 +258,54 @@ def decode_fused(
     def rep(i):
         return (0,)
 
+    in_specs = [
+        pl.BlockSpec((block_words,), word_ix),
+        pl.BlockSpec((block_words,), word_ix),
+        pl.BlockSpec((block_words,), word_ix),
+        pl.BlockSpec((dec_limit.shape[0],), rep),
+        pl.BlockSpec((dec_first.shape[0],), rep),
+        pl.BlockSpec((dec_rank.shape[0],), rep),
+        pl.BlockSpec((256,), rep),
+        pl.BlockSpec((e, 256), lambda i: (0, 0)),
+        pl.BlockSpec((e, n), lambda i: (0, 0)),
+    ]
+    operands = [
+        hi,
+        lo,
+        symlen.astype(jnp.int32),
+        dec_limit,
+        dec_first,
+        dec_rank,
+        dec_syms,
+        lut,
+        basis,
+    ]
+    if coding != _TRIVIAL:
+        if idx is None or seg is None:
+            raise ValueError(
+                "v3-coded decode_fused needs the idx/seg expansion arrays "
+                "(symlen.v3_expand_index)"
+            )
+        idx = jnp.asarray(idx, jnp.int32)
+        seg = jnp.asarray(seg, jnp.int32)
+        if idx.shape[0] < nwp * e:
+            idx = jnp.pad(
+                idx, (0, nwp * e - idx.shape[0]), constant_values=-1
+            )
+        if seg.shape[0] < nwp:
+            seg = jnp.concatenate(
+                [seg, jnp.arange(seg.shape[0], nwp, dtype=jnp.int32)]
+            )
+        in_specs += [
+            pl.BlockSpec((nwp * e,), rep),
+            pl.BlockSpec((nwp,), rep),
+        ]
+        operands += [idx, seg]
+
     out = pl.pallas_call(
         kernel,
         grid=(nwb + num_win_blocks,),
-        in_specs=[
-            pl.BlockSpec((block_words,), word_ix),
-            pl.BlockSpec((block_words,), word_ix),
-            pl.BlockSpec((block_words,), word_ix),
-            pl.BlockSpec((dec_limit.shape[0],), rep),
-            pl.BlockSpec((dec_first.shape[0],), rep),
-            pl.BlockSpec((dec_rank.shape[0],), rep),
-            pl.BlockSpec((256,), rep),
-            pl.BlockSpec((e, 256), lambda i: (0, 0)),
-            pl.BlockSpec((e, n), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (block_windows, n),
             lambda i: (jnp.maximum(i - nwb, 0), 0),
@@ -230,15 +317,5 @@ def decode_fused(
             pltpu.SMEM((1,), jnp.int32),
         ],
         interpret=interpret,
-    )(
-        hi,
-        lo,
-        symlen.astype(jnp.int32),
-        dec_limit,
-        dec_first,
-        dec_rank,
-        dec_syms,
-        lut,
-        basis,
-    )
+    )(*operands)
     return out[:num_windows]

@@ -44,10 +44,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quantize import QuantTable, quantize
+from repro.core.quantize import QuantTable, predict_levels, quantize
 from repro.core.symlen import _pack_chunk_emit
 
 __all__ = ["encode_fused"]
+
+_TRIVIAL = (0, 0, False)  # no predictor, no zero planes: the v2 stream
 
 
 def _kernel(
@@ -60,18 +62,26 @@ def _kernel(
     mu_ref,  # f32[1]
     alpha1_ref,  # f32[1]
     basis_ref,  # f32[N, E] (dct_basis)
-    hi_ref,  # uint32[R, B, C]
-    lo_ref,  # uint32[R, B, C]
-    sl_ref,  # int32[R, B, C]
-    wpc_ref,  # int32[R, B]
-    bad_ref,  # int32[R] — histogram-gap flag per signal
-    *,
+    # out refs: hi, lo, sl, wpc, bad [+ ncoded [+ zrow, zcol] under a
+    # non-trivial coding] — arity is fixed at trace time by ``coding``
+    *out_refs,
     n: int,
     e: int,
     num_chunks: int,
     chunk_size: int,
     check_gaps: bool,
+    coding=_TRIVIAL,
 ):
+    pred_id, bands, zplanes = coding
+    if coding == _TRIVIAL:
+        hi_ref, lo_ref, sl_ref, wpc_ref, bad_ref = out_refs
+        nc_ref = zr_ref = zc_ref = None
+    elif zplanes:
+        (hi_ref, lo_ref, sl_ref, wpc_ref, bad_ref,
+         nc_ref, zr_ref, zc_ref) = out_refs
+    else:
+        hi_ref, lo_ref, sl_ref, wpc_ref, bad_ref, nc_ref = out_refs
+        zr_ref = zc_ref = None
     quant = QuantTable(
         zone=zone_ref[...],
         scale=scale_ref[...],
@@ -91,10 +101,43 @@ def _kernel(
         )  # [Wp, E]
         # the exact reference quantizer — same ops the XLA path traces, so
         # the levels (hence every packed bit) are identical under jit
-        syms = quantize(coeffs, quant).reshape(-1).astype(jnp.int32)  # [Sp]
-        if cap != syms.shape[0]:
-            syms = jnp.pad(syms, (0, cap - syms.shape[0]))
-        valid = jnp.arange(cap, dtype=jnp.int32) < count
+        levels = quantize(coeffs, quant)  # uint8[Wp, E]
+        if coding == _TRIVIAL:
+            syms = levels.reshape(-1).astype(jnp.int32)  # [Sp]
+            if cap != syms.shape[0]:
+                syms = jnp.pad(syms, (0, cap - syms.shape[0]))
+            valid = jnp.arange(cap, dtype=jnp.int32) < count
+            extras = ()
+        else:
+            # the v3 prologue — the SAME reference transform the XLA engine
+            # arm traces (quantize.predict_levels + the zero-plane masks),
+            # fused between quantization and the codeword lookup
+            grid = predict_levels(levels, pred_id, bands)  # uint8[Wp, E]
+            w = grid.shape[0]
+            win_valid = (
+                jnp.arange(w, dtype=jnp.int32) < count // e
+            )  # true (non-padding) windows of this row
+            if zplanes:
+                is_zero = grid == jnp.uint8(128)
+                zrow = jnp.all(is_zero, axis=1)  # [Wp]
+                zcol = jnp.all(
+                    is_zero | ~win_valid[:, None], axis=0
+                )  # [E], over true windows only
+                valid2 = (win_valid & ~zrow)[:, None] & ~zcol[None, :]
+            else:
+                valid2 = jnp.broadcast_to(win_valid[:, None], grid.shape)
+            syms = grid.reshape(-1).astype(jnp.int32)
+            valid = valid2.reshape(-1)
+            if cap != syms.shape[0]:
+                syms = jnp.pad(syms, (0, cap - syms.shape[0]))
+                valid = jnp.pad(valid, (0, cap - valid.shape[0]))
+            if zplanes:
+                ncoded = jnp.sum(valid, dtype=jnp.int32)
+                extras = (
+                    ncoded, zrow.astype(jnp.int32), zcol.astype(jnp.int32)
+                )
+            else:
+                extras = (count,)
 
         # one batched one-hot lookup for the whole signal (a single MXU
         # matmul equation — an unrolled per-chunk loop traces O(B) ops for
@@ -119,25 +162,29 @@ def _kernel(
         code = jnp.where(validr, raw_code, jnp.uint32(0))
         clen = jnp.where(validr, raw_len, 0)
         hi, lo, sl, wpc = jax.vmap(_pack_chunk_emit)(code, clen, validr)
-        return hi, lo, sl, wpc, bad
+        return (hi, lo, sl, wpc, bad) + extras
 
     # rows are independent signals: vmap keeps every per-row selection /
     # pack identical to the one-row kernel while a tuned block_rows > 1
     # amortizes the per-step dispatch overhead across R rows
-    hi, lo, sl, wpc, bad = jax.vmap(one_row)(
-        sig_ref[...], counts_ref[...]
-    )
-    hi_ref[...] = hi
-    lo_ref[...] = lo
-    sl_ref[...] = sl
-    wpc_ref[...] = wpc
-    bad_ref[...] = bad
+    outs = jax.vmap(one_row)(sig_ref[...], counts_ref[...])
+    hi_ref[...] = outs[0]
+    lo_ref[...] = outs[1]
+    sl_ref[...] = outs[2]
+    wpc_ref[...] = outs[3]
+    bad_ref[...] = outs[4]
+    if nc_ref is not None:
+        nc_ref[...] = outs[5]
+    if zr_ref is not None:
+        zr_ref[...] = outs[6]
+        zc_ref[...] = outs[7]
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "n", "e", "chunk_size", "check_gaps", "block_rows", "interpret"
+        "n", "e", "chunk_size", "check_gaps", "coding", "block_rows",
+        "interpret",
     ),
 )
 def encode_fused(
@@ -155,6 +202,7 @@ def encode_fused(
     e: int,
     chunk_size: int,
     check_gaps: bool,
+    coding=_TRIVIAL,
     block_rows: int = 1,
     interpret: bool = True,
 ):
@@ -164,7 +212,11 @@ def encode_fused(
     C], words_per_chunk int32[K, B], bad bool[])`` — exactly the contract
     of the XLA path (``vmap`` of :func:`repro.core.symlen.
     pack_symlen_chunked_parts` plus the batch-wide histogram-gap flag),
-    byte for byte.
+    byte for byte.  A non-trivial ``coding`` (container v3) appends the
+    XLA arm's extra outputs: per-signal coded-symbol counts ``ncoded
+    int32[K]`` and — with zero planes — ``zrow bool[K, Wp]`` / ``zcol
+    bool[K, E]``; the v3 prologue (prediction + zero-plane masking) runs
+    inside the same single ``pallas_call``.
 
     ``block_rows`` is the autotuner's knob: signals packed per grid step
     (rows are independent, so it trades per-step VMEM footprint against
@@ -172,8 +224,11 @@ def encode_fused(
     to a row multiple with zero-count rows, which pack zero words, and the
     outputs slice back to ``K``).
     """
+    coding = tuple(coding)
+    zplanes = coding != _TRIVIAL and bool(coding[2])
     k, width = signals.shape
-    sp = (width // n) * e
+    wp = width // n
+    sp = wp * e
     num_chunks = max(-(-sp // chunk_size), 1)
     br = max(min(int(block_rows), max(k, 1)), 1)
     kp = -(-k // br) * br
@@ -187,6 +242,7 @@ def encode_fused(
         num_chunks=num_chunks,
         chunk_size=chunk_size,
         check_gaps=check_gaps,
+        coding=coding,
     )
 
     def row(i):
@@ -198,7 +254,33 @@ def encode_fused(
     def rep(i):
         return (0,)
 
-    hi, lo, sl, wpc, bad = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((br, num_chunks, chunk_size), row3),
+        pl.BlockSpec((br, num_chunks, chunk_size), row3),
+        pl.BlockSpec((br, num_chunks, chunk_size), row3),
+        pl.BlockSpec((br, num_chunks), row),
+        pl.BlockSpec((br,), lambda i: (i,)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((kp, num_chunks, chunk_size), jnp.uint32),
+        jax.ShapeDtypeStruct((kp, num_chunks, chunk_size), jnp.uint32),
+        jax.ShapeDtypeStruct((kp, num_chunks, chunk_size), jnp.int32),
+        jax.ShapeDtypeStruct((kp, num_chunks), jnp.int32),
+        jax.ShapeDtypeStruct((kp,), jnp.int32),
+    ]
+    if coding != _TRIVIAL:
+        out_specs.append(pl.BlockSpec((br,), lambda i: (i,)))
+        out_shape.append(jax.ShapeDtypeStruct((kp,), jnp.int32))
+    if zplanes:
+        out_specs += [
+            pl.BlockSpec((br, wp), row),
+            pl.BlockSpec((br, e), row),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((kp, wp), jnp.int32),
+            jax.ShapeDtypeStruct((kp, e), jnp.int32),
+        ]
+    outs = pl.pallas_call(
         kernel,
         grid=(kp // br,),
         in_specs=[
@@ -212,20 +294,8 @@ def encode_fused(
             pl.BlockSpec((1,), rep),
             pl.BlockSpec((n, e), lambda i: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((br, num_chunks, chunk_size), row3),
-            pl.BlockSpec((br, num_chunks, chunk_size), row3),
-            pl.BlockSpec((br, num_chunks, chunk_size), row3),
-            pl.BlockSpec((br, num_chunks), row),
-            pl.BlockSpec((br,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((kp, num_chunks, chunk_size), jnp.uint32),
-            jax.ShapeDtypeStruct((kp, num_chunks, chunk_size), jnp.uint32),
-            jax.ShapeDtypeStruct((kp, num_chunks, chunk_size), jnp.int32),
-            jax.ShapeDtypeStruct((kp, num_chunks), jnp.int32),
-            jax.ShapeDtypeStruct((kp,), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(
         signals,
@@ -238,7 +308,14 @@ def encode_fused(
         jnp.reshape(alpha1.astype(jnp.float32), (1,)),
         basis,
     )
-    if kp != k:
-        hi, lo, sl = hi[:k], lo[:k], sl[:k]
-        wpc, bad = wpc[:k], bad[:k]
-    return hi, lo, sl, wpc, jnp.any(bad > 0)
+    outs = [o[:k] for o in outs] if kp != k else list(outs)
+    hi, lo, sl, wpc, bad = outs[:5]
+    if coding == _TRIVIAL:
+        return hi, lo, sl, wpc, jnp.any(bad > 0)
+    ncoded = outs[5]
+    if zplanes:
+        zrow = outs[6].astype(jnp.bool_)
+        zcol = outs[7].astype(jnp.bool_)
+    else:
+        zrow = zcol = None
+    return hi, lo, sl, wpc, jnp.any(bad > 0), ncoded, zrow, zcol

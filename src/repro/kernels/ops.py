@@ -60,6 +60,18 @@ __all__ = [
 ]
 
 _I32_MAX = np.iinfo(np.int32).max
+_TRIVIAL_CODING = (0, 0, False)
+
+
+def _coding_key(coding) -> tuple:
+    """Flatten a non-trivial container-v3 coding into tuning plan-key ints.
+
+    Trivial codings contribute NOTHING so every pre-v3 tuned entry (keyed
+    without coding) keeps matching v1/v2 traffic byte-for-byte."""
+    coding = tuple(coding)
+    if coding == _TRIVIAL_CODING:
+        return ()
+    return (int(coding[0]), int(coding[1]), int(bool(coding[2])))
 
 
 def on_tpu() -> bool:
@@ -141,12 +153,14 @@ def decode_bucket_fused(
     tables: DeviceTables,
     lut: jnp.ndarray,  # f32[E, 256] quant_grid reconstruction LUT
     basis: jnp.ndarray,  # f32[E, N] idct basis
+    v3=None,  # (idx, seg) expansion arrays for non-trivial codings
     *,
     l_max: int,
     max_symlen: int,
     num_windows: int,
     n: int,
     e: int,
+    coding=_TRIVIAL_CODING,
     block_words: int = None,
     block_windows: int = None,
 ) -> jnp.ndarray:
@@ -154,21 +168,28 @@ def decode_bucket_fused(
     in exactly one ``pallas_call`` (Huffman + compaction + LUT dequant +
     iDCT; see :mod:`repro.kernels.decode_fused`).
 
+    A non-trivial ``coding`` (container v3) adds the in-kernel expansion +
+    un-prediction epilogue; ``v3`` must then carry the host-built
+    ``(idx, seg)`` arrays from :func:`repro.core.symlen.v3_expand_index`.
+    Still exactly one ``pallas_call``.
+
     ``block_words``/``block_windows`` default to the tuning cache's winner
     for this (backend, plan key, bucket shape) — or the kernel's built-in
     defaults when nothing is tuned.  Explicit values (the autotuner's own
     sweep path) bypass the consult."""
     check_i32_offsets(num_windows * e, max_symlen)
+    coding = tuple(coding)
     if block_words is None or block_windows is None:
         tuned = _tuned_blocks(
             "decode",
-            plan_key=(n, e, l_max, max_symlen),
+            plan_key=(n, e, l_max, max_symlen) + _coding_key(coding),
             shape=(int(hi.shape[0]), int(num_windows)),
         )
         if block_words is None:
             block_words = tuned.get("block_words", _hd.BLOCK_WORDS)
         if block_windows is None:
             block_windows = tuned.get("block_windows", _df.BLOCK_WINDOWS)
+    idx, seg = v3 if v3 is not None else (None, None)
     return _df.decode_fused(
         hi,
         lo,
@@ -179,11 +200,14 @@ def decode_bucket_fused(
         tables.dec_syms,
         lut,
         basis,
+        idx,
+        seg,
         l_max=l_max,
         max_symlen=max_symlen,
         num_windows=num_windows,
         n=n,
         e=e,
+        coding=coding,
         block_words=int(block_words),
         block_windows=int(block_windows),
         interpret=_interp(),
@@ -200,20 +224,27 @@ def encode_bucket_fused(
     e: int,
     chunk_size: int,
     check_gaps: bool,
+    coding=_TRIVIAL_CODING,
     block_rows: int = None,
 ):
     """The encode megakernel: signal rows -> SymLen chunk parts in one
     ``pallas_call``, bit-identical to the XLA engine path (see
     :mod:`repro.kernels.encode_fused`).
 
+    A non-trivial ``coding`` (container v3) turns on the in-kernel
+    prediction + zero-plane prologue; the return grows the per-row
+    ``ncoded``/``zrow``/``zcol`` outputs (see
+    :func:`repro.kernels.encode_fused.encode_fused`).
+
     ``block_rows`` (signals per grid step) defaults to the tuning cache's
     winner for this (backend, plan key, bucket shape), falling back to 1;
     explicit values bypass the consult (the autotuner's sweep path)."""
     _check_encode_i32(signals.shape[1], e, n)
+    coding = tuple(coding)
     if block_rows is None:
         tuned = _tuned_blocks(
             "encode",
-            plan_key=(n, e, int(chunk_size)),
+            plan_key=(n, e, int(chunk_size)) + _coding_key(coding),
             shape=(int(signals.shape[0]), int(signals.shape[1])),
         )
         block_rows = tuned.get("block_rows", 1)
@@ -231,6 +262,7 @@ def encode_bucket_fused(
         e=e,
         chunk_size=chunk_size,
         check_gaps=check_gaps,
+        coding=coding,
         block_rows=int(block_rows),
         interpret=_interp(),
     )

@@ -22,7 +22,26 @@ from collections import OrderedDict
 from typing import Any, Callable, Tuple, TypeVar
 
 Plan = TypeVar("Plan")
-PlanKey = Tuple[int, int, int, int]  # (domain_id, n, e, l_max)
+# (domain_id, n, e, l_max, coding) — coding is the container-v3 triple
+# (pred_id, predict_bands, zero_planes), (0, 0, False) for v1/v2 streams.
+# Plans with different codings trace different bucket math (the coding is a
+# static argument of the fused/XLA bucket functions), so it must split the
+# cache exactly like the shape parameters do.
+PlanKey = Tuple[int, int, int, int, Tuple[int, int, bool]]
+
+TRIVIAL_CODING = (0, 0, False)
+
+
+def normalize_plan_key(key) -> PlanKey:
+    """Accept legacy 4-tuple (domain_id, n, e, l_max) keys by appending the
+    trivial coding; 5-tuples pass through.  Keeps pre-v3 callers (and
+    archived key literals in tests/benchmarks) valid."""
+    key = tuple(key)
+    if len(key) == 4:
+        return key + (TRIVIAL_CODING,)
+    if len(key) != 5:
+        raise ValueError(f"malformed plan key {key!r}")
+    return key[:4] + (tuple(key[4]),)
 
 
 @dataclasses.dataclass(frozen=True)

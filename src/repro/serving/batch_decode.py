@@ -64,8 +64,16 @@ from repro.core import dct, symlen
 from repro.core.calibration import DeviceTables, DomainTables
 from repro.core.codec import validate_container_tables
 from repro.core.container import Container
-from repro.core.quantize import quant_grid
-from repro.serving._plans import PlanCache
+from repro.core.quantize import (
+    expand_coded_stream,
+    quant_grid,
+    unpredict_levels,
+)
+from repro.serving._plans import (
+    TRIVIAL_CODING,
+    PlanCache,
+    normalize_plan_key,
+)
 from repro.serving.engine import (
     BucketScheduler,
     DevicesArg,
@@ -117,12 +125,13 @@ class DecodePlan:
     domain_id: int
     device: object
     source: DomainTables  # host tables (kept so cache keys stay alive)
+    # container-v3 coding triple (pred_id, predict_bands, zero_planes);
+    # TRIVIAL_CODING decodes the classic v1/v2 stream
+    coding: Tuple[int, int, bool] = TRIVIAL_CODING
 
 
-def _build_decode_plan(
-    tables: DomainTables, key: Tuple[int, int, int, int], device
-) -> DecodePlan:
-    domain_id, n, e, l_max = key
+def _build_decode_plan(tables: DomainTables, key, device) -> DecodePlan:
+    domain_id, n, e, l_max, coding = normalize_plan_key(key)
     dev_tables = tables.device_tables()
     basis = dct.idct_basis(n, e)
     # the 256-level reconstruction LUT (quant_grid): dequantization becomes
@@ -144,6 +153,7 @@ def _build_decode_plan(
         domain_id=domain_id,
         device=device,
         source=tables,
+        coding=coding,
     )
 
 
@@ -157,6 +167,7 @@ def _decode_bucket_math(
     tables: DeviceTables,
     lut: jnp.ndarray,  # f32[E, 256] quant_grid reconstruction LUT
     basis: jnp.ndarray,  # f32[E, N]
+    v3: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     *,
     l_max: int,
     max_symlen: int,
@@ -164,6 +175,7 @@ def _decode_bucket_math(
     n: int,
     e: int,
     use_kernels: bool,
+    coding: Tuple[int, int, bool] = TRIVIAL_CODING,
     tuning_epoch: int = 0,
 ) -> jnp.ndarray:
     """Decode one concatenated bucket to windows f32[num_windows, N].
@@ -190,6 +202,21 @@ def _decode_bucket_math(
     its stale specialization forever.  Engines pass the cache epoch
     (bumped on every store) when ``use_kernels`` — the XLA arm always
     passes 0, since it has no tunables to invalidate.
+
+    A non-trivial ``coding`` (container v3) inserts the inverse of the
+    encoder's lossless pre-entropy stage between symbol unpack and LUT
+    dequantization.  ``v3`` carries the host-precomputed expansion index
+    ``idx int32[num_windows * e]`` (each cell's position in the dense coded
+    stream, -1 = zero-plane-suppressed or bucket padding, expanding to the
+    zero bin 128) and per-window segment starts ``seg int32[num_windows]``
+    (the owning signal's first window; self for padding windows, whose
+    degenerate segments unpredict back to 128).  ``num_symbols`` stays the
+    ``num_windows * e`` capacity bound — ``idx`` never references a
+    position at or beyond the bucket's true coded-symbol total, so the
+    garbage tail is never read.  Exact inverse math:
+    ``quantize.expand_coded_stream`` / ``unpredict_levels`` — the same
+    reference functions the host decoder and the fused kernel epilogue
+    call, which is what keeps all three bit-identical.
     """
     del tuning_epoch  # participates in the jit cache key only
     num_symbols = num_windows * e
@@ -197,16 +224,24 @@ def _decode_bucket_math(
         from repro.kernels import ops as kops
 
         return kops.decode_bucket_fused(
-            hi, lo, sl, tables, lut, basis,
+            hi, lo, sl, tables, lut, basis, v3,
             l_max=l_max, max_symlen=max_symlen, num_windows=num_windows,
-            n=n, e=e,
+            n=n, e=e, coding=coding,
         )
     syms = symlen.unpack_symlen(
         hi, lo, sl,
         tables.dec_limit, tables.dec_first, tables.dec_rank, tables.dec_syms,
         l_max=l_max, max_symlen=max_symlen, num_symbols=num_symbols,
     )
-    levels = syms.reshape(num_windows, e).astype(jnp.int32)
+    if coding == TRIVIAL_CODING:
+        levels = syms.reshape(num_windows, e).astype(jnp.int32)
+    else:
+        idx, seg = v3
+        pred_id, bands, _ = coding
+        grid = expand_coded_stream(syms, idx).reshape(num_windows, e)
+        levels = unpredict_levels(
+            grid.astype(jnp.uint32), seg, pred_id, bands
+        ).astype(jnp.int32)
     coeffs = lut[jnp.arange(e, dtype=jnp.int32)[None, :], levels]
     return coeffs @ basis
 
@@ -215,7 +250,7 @@ _decode_bucket = functools.partial(
     jax.jit,
     static_argnames=(
         "l_max", "max_symlen", "num_windows", "n", "e", "use_kernels",
-        "tuning_epoch",
+        "coding", "tuning_epoch",
     ),
 )(_decode_bucket_math)
 
@@ -357,9 +392,18 @@ class StreamGroup:
     placement); ``live_words`` is the host-known true word count when the
     producer has it (container staging does; device-resident stitches
     don't) — it feeds the padding-occupancy stats only.
+
+    v3 groups (plan key with a non-trivial coding triple) additionally
+    carry the host-precomputed coded-stream expansion: ``v3_idx``
+    ``int32[num_windows_bucketed * e]`` (dense-stream position per grid
+    cell, -1 = suppressed/padding) and ``v3_seg``
+    ``int32[num_windows_bucketed]`` (per-window segment start for the
+    unpredictor), both built by ``symlen.v3_expand_index`` at the
+    *scheduler-rounded* window count so the arrays are bucket-shaped (no
+    per-batch retrace).
     """
 
-    plan_key: Tuple[int, int, int, int]  # (domain_id, n, e, l_max)
+    plan_key: tuple  # (domain_id, n, e, l_max, coding)
     hi: jnp.ndarray  # uint32[Wp]
     lo: jnp.ndarray  # uint32[Wp]
     symlen: jnp.ndarray  # int32[Wp]
@@ -368,6 +412,8 @@ class StreamGroup:
     device: object = None
     shard: int = 0
     live_words: Optional[int] = None
+    v3_idx: Optional[jnp.ndarray] = None  # int32[NWp * e]
+    v3_seg: Optional[jnp.ndarray] = None  # int32[NWp]
 
     @property
     def total_windows(self) -> int:
@@ -376,7 +422,7 @@ class StreamGroup:
 
 def _stage_container_group(
     members: Sequence[Container],
-    key: Tuple[int, int, int, int],
+    key,
     device,
     shard: int,
     rounder: Callable[[int], int] = p2,
@@ -384,7 +430,10 @@ def _stage_container_group(
     """Host-stage one bucket: concatenate member streams into bucket-edge
     padded word arrays (``rounder`` — the scheduler policy's ``round``;
     power-of-two by default) and upload them (to ``device`` when
-    sharded)."""
+    sharded).  For a v3 plan key the coded-stream expansion index/segment
+    arrays are built here too, at the rounded window count the dispatch
+    will use (padding windows expand to the zero bin and unpredict to
+    themselves)."""
     total_words = sum(c.num_words for c in members)
     wp = rounder(max(total_words, 1))
     hi = np.zeros(wp, dtype=np.uint32)
@@ -398,6 +447,17 @@ def _stage_container_group(
         sl[woff:woff + c.num_words] = c.symlen
         woff += c.num_words
     put = putter(device)
+    key = normalize_plan_key(key)
+    v3_idx = v3_seg = None
+    if key[4] != TRIVIAL_CODING:
+        e = key[2]
+        nwp = rounder(max(sum(c.num_windows for c in members), 1))
+        idx, seg = symlen.v3_expand_index(
+            [(c.num_windows, c.zrow, c.zcol) for c in members],
+            e, total_windows=nwp,
+        )
+        v3_idx = put(idx)
+        v3_seg = put(seg)
     return StreamGroup(
         plan_key=key,
         hi=put(hi),
@@ -408,6 +468,8 @@ def _stage_container_group(
         device=device,
         shard=shard,
         live_words=total_words,
+        v3_idx=v3_idx,
+        v3_seg=v3_seg,
     )
 
 
@@ -530,9 +592,7 @@ class BatchDecoder:
         return self.decode(self._pending.take(), tables)
 
     # -- plan management ---------------------------------------------------
-    def _tables_for(
-        self, key: Tuple[int, int, int, int], tables: TablesArg
-    ) -> DomainTables:
+    def _tables_for(self, key, tables: TablesArg) -> DomainTables:
         if isinstance(tables, DomainTables):
             return tables
         domain_id = key[0]
@@ -543,9 +603,8 @@ class BatchDecoder:
                 f"no DomainTables registered for domain_id={domain_id}"
             ) from None
 
-    def _plan_for_key(
-        self, key: Tuple[int, int, int, int], tables: TablesArg, device=None
-    ) -> DecodePlan:
+    def _plan_for_key(self, key, tables: TablesArg, device=None) -> DecodePlan:
+        key = normalize_plan_key(key)
         tab = self._tables_for(key, tables)
         validate_container_tables(key, tab)
         return self._plans.get(tab, key, device)
@@ -575,7 +634,7 @@ class BatchDecoder:
         cache, so repeated cold-block reads pay zero re-uploads.
         """
         cfg = tables.config
-        key = (tables.domain_id, cfg.n, cfg.e, cfg.l_max)
+        key = (tables.domain_id, cfg.n, cfg.e, cfg.l_max, cfg.coding)
         plan = self._plan_for_key(key, tables)
         n, e = plan.n, plan.e
         if levels.shape[-1] != e:
@@ -682,7 +741,13 @@ class BatchDecoder:
             # PlanCache.get is thread-safe and the factory only transfers
             self._plan_for_key(tuple(grp.plan_key), tables, grp.device)
             return dataclasses.replace(
-                grp, hi=put(grp.hi), lo=put(grp.lo), symlen=put(grp.symlen)
+                grp, hi=put(grp.hi), lo=put(grp.lo), symlen=put(grp.symlen),
+                v3_idx=(
+                    put(grp.v3_idx) if grp.v3_idx is not None else None
+                ),
+                v3_seg=(
+                    put(grp.v3_seg) if grp.v3_seg is not None else None
+                ),
             )
 
         def dispatch(g, grp: StreamGroup) -> Tuple[jnp.ndarray,
@@ -692,6 +757,17 @@ class BatchDecoder:
             )
             wp = int(grp.hi.shape[0])
             num_windows = self.scheduler.round(max(grp.total_windows, 1))
+            if plan.coding != TRIVIAL_CODING:
+                if grp.v3_idx is None or grp.v3_seg is None:
+                    raise ValueError(
+                        "v3-coded StreamGroup is missing its "
+                        "v3_idx/v3_seg expansion arrays (build them with "
+                        "symlen.v3_expand_index at the scheduler-rounded "
+                        "window count)"
+                    )
+                v3 = (grp.v3_idx, grp.v3_seg)
+            else:
+                v3 = None
             windows = _decode_bucket(
                 grp.hi,
                 grp.lo,
@@ -699,12 +775,14 @@ class BatchDecoder:
                 plan.tables,
                 plan.lut,
                 plan.basis,
+                v3,
                 l_max=plan.l_max,
                 max_symlen=symlen_bucket(grp.max_symlen),
                 num_windows=num_windows,
                 n=plan.n,
                 e=plan.e,
                 use_kernels=self.use_kernels,
+                coding=plan.coding,
                 # retrace when the tuning cache learns better block sizes
                 # (kernel path only — the XLA arm has no tunables)
                 tuning_epoch=(

@@ -61,8 +61,12 @@ import numpy as np
 from repro.core import dct, symlen
 from repro.core.calibration import DeviceTables, DomainTables
 from repro.core.container import Container
-from repro.core.quantize import quantize
-from repro.serving._plans import PlanCache
+from repro.core.quantize import predict_levels, quantize
+from repro.serving._plans import (
+    TRIVIAL_CODING,
+    PlanCache,
+    normalize_plan_key,
+)
 from repro.serving.engine import (
     Bucket,
     BucketScheduler,
@@ -118,12 +122,13 @@ class EncodePlan:
     has_gaps: bool
     device: object
     source: DomainTables  # host tables (kept so cache keys stay alive)
+    # container-v3 coding triple (pred_id, predict_bands, zero_planes);
+    # TRIVIAL_CODING selects the classic v2 stream byte-for-byte
+    coding: Tuple[int, int, bool] = TRIVIAL_CODING
 
 
-def _build_encode_plan(
-    tables: DomainTables, key: Tuple[int, int, int, int], device
-) -> EncodePlan:
-    domain_id, n, e, l_max = key
+def _build_encode_plan(tables: DomainTables, key, device) -> EncodePlan:
+    domain_id, n, e, l_max, coding = normalize_plan_key(key)
     dev_tables = tables.device_tables()
     basis = dct.dct_basis(n, e)
     if device is not None:
@@ -139,6 +144,7 @@ def _build_encode_plan(
         has_gaps=bool(np.any(np.asarray(tables.book.lengths) == 0)),
         device=device,
         source=tables,
+        coding=coding,
     )
 
 
@@ -154,7 +160,8 @@ def _encode_bucket_math(
     e: int,
     chunk_size: int,
     check_gaps: bool,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    coding: Tuple[int, int, bool] = TRIVIAL_CODING,
+):
     """DCT + quantize + chunk-parallel pack for one shape bucket.
 
     Statics are *bucket shape only*; per-signal true lengths ride in
@@ -165,34 +172,84 @@ def _encode_bucket_math(
     cheaper than a device-side stitch and byte-identical — plus the
     batch-wide unencodable-symbol flag (const False unless the book has
     histogram gaps).
+
+    A non-trivial ``coding`` (container v3) inserts the lossless pre-entropy
+    stage between quantize and pack: windowed prediction re-codes the low
+    bands as mod-256 residuals (``quantize.predict_levels`` — row-local, so
+    it vmaps over the batch with no cross-signal state), and zero-plane
+    suppression masks all-128 window rows / coefficient columns out of the
+    packer's validity mask (the masked chunk packer emits nothing for them,
+    so the stream equals a greedy pack of the compacted symbols).  The v3
+    return adds per-signal coded-symbol counts and — under zero planes —
+    the row/column bitmaps: ``(hi, lo, sl, wpc, bad, ncoded, zrow, zcol)``.
     """
     windows = dct.window_signal(signals, n)  # [K, Wp, n]
     coeffs = dct.forward_dct(windows, e)  # [K, Wp, e]
     syms = quantize(coeffs, tables.quant)  # uint8[K, Wp, e]
     k = signals.shape[0]
-    syms = syms.reshape(k, -1).astype(jnp.int32)  # [K, Sp]
+    if coding == TRIVIAL_CODING:
+        syms = syms.reshape(k, -1).astype(jnp.int32)  # [K, Sp]
+        if check_gaps:
+            valid = (
+                jnp.arange(syms.shape[1], dtype=jnp.int32)[None, :]
+                < counts[:, None]
+            )
+            bad = jnp.any((tables.lengths[syms] == 0) & valid)
+        else:
+            bad = jnp.zeros((), jnp.bool_)
+        hi, lo, sl, wpc = jax.vmap(
+            lambda s, c: symlen.pack_symlen_chunked_parts(
+                s,
+                tables.codes,
+                tables.lengths,
+                chunk_size=chunk_size,
+                num_symbols=c,
+            )
+        )(syms, counts)
+        return hi, lo, sl, wpc, bad
+    pred_id, bands, zplanes = coding
+    grid = predict_levels(syms, pred_id, bands)  # uint8[K, Wp, e]
+    flat = grid.reshape(k, -1).astype(jnp.int32)  # [K, Sp]
+    # true-window mask: batch/window padding quantizes to 128 but its
+    # *residuals* need not be 128, so every v3 mask is gated on it
+    win_valid = (
+        jnp.arange(grid.shape[1], dtype=jnp.int32)[None, :]
+        < (counts // e)[:, None]
+    )  # bool[K, Wp]
+    if zplanes:
+        is_zero = grid == jnp.uint8(128)
+        # zrow over all rows (padding rows are garbage but the drain slices
+        # mask[:num_windows]); zcol over VALID rows only, matching the host
+        # encoder's grid which has exactly num_windows rows
+        zrow = jnp.all(is_zero, axis=2)  # bool[K, Wp]
+        zcol = jnp.all(is_zero | ~win_valid[:, :, None], axis=1)  # [K, e]
+        valid = (win_valid & ~zrow)[:, :, None] & ~zcol[:, None, :]
+        valid = valid.reshape(k, -1)
+        ncoded = jnp.sum(valid, axis=1, dtype=jnp.int32)
+    else:
+        zrow = zcol = None
+        valid = jnp.broadcast_to(win_valid[:, :, None], grid.shape)
+        valid = valid.reshape(k, -1)
+        ncoded = counts
     if check_gaps:
-        valid = (
-            jnp.arange(syms.shape[1], dtype=jnp.int32)[None, :]
-            < counts[:, None]
-        )
-        bad = jnp.any((tables.lengths[syms] == 0) & valid)
+        bad = jnp.any((tables.lengths[flat] == 0) & valid)
     else:
         bad = jnp.zeros((), jnp.bool_)
     hi, lo, sl, wpc = jax.vmap(
-        lambda s, c: symlen.pack_symlen_chunked_parts(
+        lambda s, v: symlen.pack_symlen_chunked_parts(
             s,
             tables.codes,
             tables.lengths,
             chunk_size=chunk_size,
-            num_symbols=c,
+            valid=v,
         )
-    )(syms, counts)
-    return hi, lo, sl, wpc, bad
+    )(flat, valid)
+    return hi, lo, sl, wpc, bad, ncoded, zrow, zcol
 
 
 _encode_bucket = functools.partial(
-    jax.jit, static_argnames=("n", "e", "chunk_size", "check_gaps")
+    jax.jit,
+    static_argnames=("n", "e", "chunk_size", "check_gaps", "coding"),
 )(_encode_bucket_math)
 
 
@@ -239,6 +296,7 @@ def _encode_bucket_gather_math(
     e: int,
     chunk_size: int,
     check_gaps: bool,
+    coding: Tuple[int, int, bool] = TRIVIAL_CODING,
 ):
     """Device staging fused INTO the bucket encode: gather + DCT + quantize
     + pack in one jit per bucket (the former separate ``_gather_rows``
@@ -247,11 +305,11 @@ def _encode_bucket_gather_math(
     x = _gather_rows_math(flat, starts, lens, width)
     return _encode_bucket_math(
         x, counts, tables, n=n, e=e, chunk_size=chunk_size,
-        check_gaps=check_gaps,
+        check_gaps=check_gaps, coding=coding,
     )
 
 
-_GATHER_STATICS = ("width", "n", "e", "chunk_size", "check_gaps")
+_GATHER_STATICS = ("width", "n", "e", "chunk_size", "check_gaps", "coding")
 _encode_bucket_gather = functools.partial(
     jax.jit, static_argnames=_GATHER_STATICS
 )(_encode_bucket_gather_math)
@@ -275,7 +333,7 @@ def _donation_supported(device) -> bool:
 # ---------------------------------------------------------------------------
 def _encode_bucket_kernels_math(
     signals, counts, tables, basis, *, n, e, chunk_size, check_gaps,
-    tuning_epoch=0,
+    coding=TRIVIAL_CODING, tuning_epoch=0,
 ):
     # tuning_epoch is a pure retrace key (see batch_decode._decode_bucket):
     # the kernel resolves its rows-per-step block from the tuning cache at
@@ -286,18 +344,22 @@ def _encode_bucket_kernels_math(
     return kops.encode_bucket_fused(
         signals, counts, tables, basis,
         n=n, e=e, chunk_size=chunk_size, check_gaps=check_gaps,
+        coding=coding,
     )
 
 
 _encode_bucket_kernels = functools.partial(
     jax.jit,
-    static_argnames=("n", "e", "chunk_size", "check_gaps", "tuning_epoch"),
+    static_argnames=(
+        "n", "e", "chunk_size", "check_gaps", "coding", "tuning_epoch"
+    ),
 )(_encode_bucket_kernels_math)
 
 
 def _encode_bucket_gather_kernels_math(
     flat, starts, lens, counts, tables, basis,
-    *, width, n, e, chunk_size, check_gaps, tuning_epoch=0,
+    *, width, n, e, chunk_size, check_gaps, coding=TRIVIAL_CODING,
+    tuning_epoch=0,
 ):
     """GatherStage staging for the kernel path: the row gather stays an XLA
     ``dynamic_slice`` batch fused into the same jit as the pallas_call (the
@@ -307,7 +369,7 @@ def _encode_bucket_gather_kernels_math(
     return _encode_bucket_kernels_math(
         x, counts, tables, basis,
         n=n, e=e, chunk_size=chunk_size, check_gaps=check_gaps,
-        tuning_epoch=tuning_epoch,
+        coding=coding, tuning_epoch=tuning_epoch,
     )
 
 
@@ -388,6 +450,7 @@ class _Slice:
     e: int
     l_max: int
     domain_id: int
+    coding: Tuple[int, int, bool] = TRIVIAL_CODING
 
 
 @dataclasses.dataclass(frozen=True)
@@ -406,9 +469,15 @@ class EncodedBucketParts:
     consumers (the transcode pipeline stitches these straight into decoder
     bucket streams via ``symlen.stitch_chunk_parts`` — no host round
     trip, each shard staying on its own device).
+
+    Buckets encoded under a non-trivial coding (container v3) additionally
+    carry per-signal coded-symbol counts ``ncoded`` and — when zero-plane
+    suppression is on — the device-resident ``zrow``/``zcol`` masks; for
+    trivial (v2) buckets all three stay ``None`` and the drain syncs
+    exactly the arrays it always did.
     """
 
-    plan_key: Tuple[int, int, int, int]  # (domain_id, n, e, l_max)
+    plan_key: tuple  # (domain_id, n, e, l_max, coding)
     hi: jnp.ndarray  # uint32[K, B, C]
     lo: jnp.ndarray  # uint32[K, B, C]
     symlen: jnp.ndarray  # int32[K, B, C]
@@ -416,6 +485,9 @@ class EncodedBucketParts:
     unencodable: jnp.ndarray  # bool[]
     shard: int = 0
     device: object = None
+    ncoded: Optional[jnp.ndarray] = None  # int32[K] (v3 only)
+    zrow: Optional[jnp.ndarray] = None  # bool[K, Wp] (v3 zero planes)
+    zcol: Optional[jnp.ndarray] = None  # bool[K, e] (v3 zero planes)
 
     @property
     def chunk_size(self) -> int:
@@ -451,8 +523,7 @@ class EncodedBatch:
         self,
         buckets: List[EncodedBucketParts],
         slices: List[_Slice],
-        pending_flags: Sequence[Tuple[Tuple[int, int, int, int],
-                                      jnp.ndarray]] = (),
+        pending_flags: Sequence[Tuple[tuple, jnp.ndarray]] = (),
     ):
         self._buckets = buckets
         self._slices = slices
@@ -508,7 +579,8 @@ class EncodedBatch:
                 # a retry must re-raise this error, not a bogus
                 # "already drained" message
                 raise ValueError(
-                    f"encode batch for plan_key (domain_id, n, e, l_max)="
+                    f"encode batch for plan_key "
+                    f"(domain_id, n, e, l_max, coding)="
                     f"{key} produced symbol(s) with no codeword (histogram "
                     "gap in the Huffman book) — the stream would decode to "
                     "garbage; recalibrate with Laplace smoothing or a "
@@ -522,7 +594,11 @@ class EncodedBatch:
             per_bucket[s.bucket].append((i, s))
 
         def stitch_bucket(b: int, host: List[np.ndarray]):
-            hi, lo, sl, wpc = host
+            hi, lo, sl, wpc = host[:4]
+            # v3 buckets drain (ncoded[, zrow, zcol]) after the stream parts
+            ncoded = host[4] if len(host) > 4 else None
+            zrow = host[5] if len(host) > 5 else None
+            zcol = host[6] if len(host) > 6 else None
             stitched = []
             for i, s in per_bucket[b]:
                 runs = [
@@ -537,22 +613,42 @@ class EncodedBatch:
                 else:
                     hi_cat = lo_cat = np.empty(0, np.uint32)
                     sl_cat = np.empty(0, np.int32)
+                pred_id, bands, zplanes = s.coding
+                num_symbols = (
+                    s.num_windows * s.e if ncoded is None
+                    else int(ncoded[s.row])
+                )
                 stitched.append((i, Container(
                     words=symlen.u32_to_words(hi_cat, lo_cat),
                     symlen=sl_cat.astype(np.uint8),
-                    num_symbols=s.num_windows * s.e,
+                    num_symbols=num_symbols,
                     num_windows=s.num_windows,
                     signal_length=s.signal_length,
                     n=s.n,
                     e=s.e,
                     l_max=s.l_max,
                     domain_id=s.domain_id,
+                    predictor=pred_id,
+                    predict_bands=bands,
+                    zero_planes=zplanes,
+                    zrow=(
+                        zrow[s.row, : s.num_windows].copy()
+                        if zplanes else None
+                    ),
+                    zcol=zcol[s.row].copy() if zplanes else None,
                 )))
             return stitched
 
+        def drain_arrays(p: EncodedBucketParts):
+            arrs = (p.hi, p.lo, p.symlen, p.words_per_chunk)
+            if p.ncoded is not None:
+                arrs += (p.ncoded,)
+            if p.zrow is not None:
+                arrs += (p.zrow, p.zcol)
+            return arrs
+
         results = fetch_to_host_stitched(
-            [(p.hi, p.lo, p.symlen, p.words_per_chunk)
-             for p in self._buckets],
+            [drain_arrays(p) for p in self._buckets],
             stitch_bucket,
         )
         self._consumed = (
@@ -686,7 +782,7 @@ class BatchEncoder:
 
     def plan_for(self, tables: DomainTables, device=None) -> EncodePlan:
         cfg = tables.config
-        key = (tables.domain_id, cfg.n, cfg.e, cfg.l_max)
+        key = (tables.domain_id, cfg.n, cfg.e, cfg.l_max, cfg.coding)
         return self._plans.get(tables, key, device)
 
     # -- fixed-rate (entropy-off) encode -----------------------------------
@@ -815,7 +911,7 @@ class BatchEncoder:
             num_windows = -(-length // cfg.n)
             all_windows.append(num_windows)
             key = (
-                (dom, cfg.n, cfg.e, cfg.l_max),
+                (dom, cfg.n, cfg.e, cfg.l_max, cfg.coding),
                 self.scheduler.round(max(num_windows, 1)),
             )
             keys.append(key)
@@ -839,7 +935,7 @@ class BatchEncoder:
         slices: List[Optional[_Slice]] = [None] * len(lengths)
         for b, bucket in enumerate(buckets):
             plan_key, wp = bucket.key
-            _, n, e, l_max = plan_key
+            _, n, e, l_max, coding = plan_key
             for row, i in enumerate(bucket.items):
                 slices[i] = _Slice(
                     bucket=b,
@@ -850,11 +946,12 @@ class BatchEncoder:
                     e=e,
                     l_max=l_max,
                     domain_id=plan_key[0],
+                    coding=coding,
                 )
 
         def upload(bucket: Bucket):
             plan_key, wp = bucket.key
-            _, n, e, _ = plan_key
+            _, n, e, _, _ = plan_key
             idxs = list(bucket.items)
             # pad batch dim to a bucket edge; pad rows pack 0 symbols
             kp = self.scheduler.round(len(idxs))
@@ -880,6 +977,7 @@ class BatchEncoder:
                 per_tab[bucket.key], plan_key, bucket.device
             )
             n, e = plan.n, plan.e
+            coding = plan_key[4]
             sp = wp * e
             chunk = sp if self.chunk_size is None else min(self.chunk_size, sp)
             if isinstance(x, GatherStage):
@@ -889,36 +987,42 @@ class BatchEncoder:
                         _encode_bucket_gather_kernels_donate
                         if donate else _encode_bucket_gather_kernels
                     )
-                    hi, lo, sl, wpc, bad = fused(
+                    out = fused(
                         x.flat, x.starts, x.lens, counts, plan.tables,
                         plan.basis, width=wp * n, n=n, e=e,
                         chunk_size=chunk, check_gaps=plan.has_gaps,
-                        tuning_epoch=_autotune.epoch(),
+                        coding=coding, tuning_epoch=_autotune.epoch(),
                     )
                 else:
                     fused = (
                         _encode_bucket_gather_donate
                         if donate else _encode_bucket_gather
                     )
-                    hi, lo, sl, wpc, bad = fused(
+                    out = fused(
                         x.flat, x.starts, x.lens, counts, plan.tables,
                         width=wp * n, n=n, e=e, chunk_size=chunk,
-                        check_gaps=plan.has_gaps,
+                        check_gaps=plan.has_gaps, coding=coding,
                     )
                 kp = int(x.starts.shape[0])
             elif self.use_kernels:
-                hi, lo, sl, wpc, bad = _encode_bucket_kernels(
+                out = _encode_bucket_kernels(
                     x, counts, plan.tables, plan.basis,
                     n=n, e=e, chunk_size=chunk, check_gaps=plan.has_gaps,
-                    tuning_epoch=_autotune.epoch(),
+                    coding=coding, tuning_epoch=_autotune.epoch(),
                 )
                 kp = int(x.shape[0])
             else:
-                hi, lo, sl, wpc, bad = _encode_bucket(
+                out = _encode_bucket(
                     x, counts, plan.tables,
                     n=n, e=e, chunk_size=chunk, check_gaps=plan.has_gaps,
+                    coding=coding,
                 )
                 kp = int(x.shape[0])
+            if coding == TRIVIAL_CODING:
+                hi, lo, sl, wpc, bad = out
+                ncoded = zrow = zcol = None
+            else:
+                hi, lo, sl, wpc, bad, ncoded, zrow, zcol = out
             self.stats.dispatches += 1
             self.stats.bucket_pad.append({
                 "plan_key": plan_key,
@@ -935,6 +1039,7 @@ class BatchEncoder:
                 plan_key=plan_key, hi=hi, lo=lo, symlen=sl,
                 words_per_chunk=wpc, unencodable=bad,
                 shard=bucket.shard, device=bucket.device,
+                ncoded=ncoded, zrow=zrow, zcol=zcol,
             )
 
         out_buckets = self.executor.run(buckets, upload, dispatch)

@@ -381,7 +381,7 @@ class ServingFrontend:
             domain_id = next(iter(self.tables))
         tab = self._tables_for(domain_id)
         cfg = tab.config
-        key = ("encode", (domain_id, cfg.n, cfg.e, cfg.l_max))
+        key = ("encode", (domain_id, cfg.n, cfg.e, cfg.l_max, cfg.coding))
         return self._admit(key, (signal, domain_id), deadline_ms)
 
     def submit_transcode(

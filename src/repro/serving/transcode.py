@@ -238,8 +238,14 @@ class Transcoder:
         self, src_tables: DomainTables, dst_tables: DomainTables, device=None
     ) -> TranscodePlan:
         src_cfg, dst_cfg = src_tables.config, dst_tables.config
-        src_key = (src_tables.domain_id, src_cfg.n, src_cfg.e, src_cfg.l_max)
-        dst_key = (dst_tables.domain_id, dst_cfg.n, dst_cfg.e, dst_cfg.l_max)
+        src_key = (
+            src_tables.domain_id, src_cfg.n, src_cfg.e, src_cfg.l_max,
+            src_cfg.coding,
+        )
+        dst_key = (
+            dst_tables.domain_id, dst_cfg.n, dst_cfg.e, dst_cfg.l_max,
+            dst_cfg.coding,
+        )
         return self._plans.get(
             (src_tables, dst_tables), (src_key, dst_key), device
         )
@@ -258,6 +264,21 @@ class Transcoder:
         failed transcode (bad routing, missing tables) leaves the source
         drainable."""
         parts = batch.device_parts()
+        for p in parts:
+            key = tuple(p.plan_key)
+            if len(key) == 5 and tuple(key[4]) != (0, 0, False):
+                # a v3-coded SOURCE stream needs its per-signal ncoded /
+                # zero-plane bitmaps on host to build the decode expansion
+                # (symlen.v3_expand_index) — a sync this zero-transfer path
+                # refuses by contract.  Drain the batch and feed the host
+                # containers instead (the container path decodes v3 fine);
+                # v2 -> v3 *upgrades* (v3 on the TARGET) are unaffected.
+                raise NotImplementedError(
+                    "device-resident transcode from a v3-coded EncodedBatch "
+                    f"source (coding={tuple(key[4])}) is not supported — "
+                    "drain it with to_host() and transcode the containers, "
+                    "or keep the source coding trivial"
+                )
         slices = batch.signal_slices()
         # signals per bucket, in row order (== stream symbol order)
         per_bucket: List[List] = [[] for _ in parts]

@@ -81,15 +81,28 @@ GOLDEN_DOMAINS = [
 ]
 GOLDEN_WINDOWS = 16  # windows per golden signal (tiny, checked-in blobs)
 
+# the v3 coding every golden domain's _v3 fixture freezes: delta predictor
+# on the two leading bands + zero-plane suppression (predict_bands=2 fits
+# every golden config's e)
+GOLDEN_V3_CODING = dict(
+    predictor="delta", predict_bands=2, zero_planes=True
+)
 
-def golden_tables(domain_key, domain_id):
+
+def golden_tables(domain_key, domain_id, v3=False):
     """Deterministic DomainTables for one golden domain: quant scales from
     a seeded standard-normal coefficient draw (identical bit stream on
     every platform per the numpy Generator stability guarantee), codebook
-    from a seeded integer histogram (pure integer construction)."""
+    from a seeded integer histogram (pure integer construction).
+
+    ``v3=True`` overlays :data:`GOLDEN_V3_CODING` on the config — same
+    quant/book (the coding is post-quantization), so the v3 fixture freezes
+    ONLY the re-coding stage's bytes."""
     from repro.core import DOMAIN_DEFAULTS
 
     cfg = DOMAIN_DEFAULTS[domain_key]
+    if v3:
+        cfg = cfg.replace(**GOLDEN_V3_CODING)
     rng = np.random.default_rng(1000 + domain_id)
     calib = rng.standard_normal((256, cfg.e)) * np.linspace(
         4.0, 0.5, cfg.e

@@ -47,12 +47,19 @@ def main():
         assert np.array_equal(back, got), key  # construction is exact
         v2 = container.to_bytes()
         v1 = container_v1_bytes(container)
+        # v3 fixture: SAME signal and quant/book, the GOLDEN_V3_CODING
+        # re-coding stage on top — freezes the v3 wire bytes per domain
+        c3 = encode(sig, golden_tables(key, dom_id, v3=True))
+        assert c3.version == 3, key
+        v3 = c3.to_bytes()
         with open(os.path.join(out_dir, f"{key}_v2.fptc"), "wb") as f:
             f.write(v2)
         with open(os.path.join(out_dir, f"{key}_v1.fptc"), "wb") as f:
             f.write(v1)
+        with open(os.path.join(out_dir, f"{key}_v3.fptc"), "wb") as f:
+            f.write(v3)
         print(f"{key}: {container.num_words} words, v2 {len(v2)} B, "
-              f"v1 {len(v1)} B")
+              f"v1 {len(v1)} B, v3 {len(v3)} B")
 
 
 if __name__ == "__main__":

@@ -90,9 +90,10 @@ def test_container_reads_v1_blobs(power_tables):
     c1 = Container.from_bytes(bytes(blob))
     np.testing.assert_array_equal(c1.words, c.words)
     np.testing.assert_array_equal(c1.symlen, c.symlen)
-    # unknown versions still fail loudly
-    blob[:HEADER_BYTES] = _HDR.pack(magic, 3, *rest[:-1], v1_crc)
-    with pytest.raises(ValueError, match="version"):
+    # unknown versions still fail loudly, naming the byte and the
+    # supported set (v3 is a real version now — probe with 4)
+    blob[:HEADER_BYTES] = _HDR.pack(magic, 4, *rest[:-1], v1_crc)
+    with pytest.raises(ValueError, match=r"version 4.*\(1, 2, 3\)"):
         Container.from_bytes(bytes(blob))
 
 

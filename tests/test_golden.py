@@ -119,6 +119,46 @@ def test_golden_kernel_paths_byte_identical(domain_key, dom_id):
     assert rk.to_bytes() == rx.to_bytes()
 
 
+@pytest.mark.parametrize("domain_key,dom_id", GOLDEN_DOMAINS)
+def test_encoder_reproduces_v3_bytes(domain_key, dom_id):
+    """Container-v3 tripwire: under the frozen GOLDEN_V3_CODING the host
+    encoder, the exact-mode batch engine, and the fused encode megakernel
+    must all emit the frozen v3 blob byte for byte."""
+    tables = golden_tables(domain_key, dom_id, v3=True)
+    _, sig = golden_signal(tables)
+    c = encode(sig, tables)
+    assert c.version == 3
+    assert c.to_bytes() == _blob(f"{domain_key}_v3.fptc")
+    for uk in (False, True):
+        batch = BatchEncoder(chunk_size=None, use_kernels=uk).encode(
+            [sig], tables
+        ).to_host()[0]
+        assert batch.to_bytes() == _blob(f"{domain_key}_v3.fptc"), uk
+
+
+@pytest.mark.parametrize("domain_key,dom_id", GOLDEN_DOMAINS)
+def test_v3_decodes_identically_to_v2(domain_key, dom_id):
+    """The v3 stage is a LOSSLESS re-coding of the quantized levels: the
+    frozen v3 blob must reconstruct float-for-float the same samples as
+    the frozen v2 blob (same signal, same quant/book), on the host decoder
+    and both engine arms."""
+    t2 = golden_tables(domain_key, dom_id)
+    t3 = golden_tables(domain_key, dom_id, v3=True)
+    c2 = Container.from_bytes(_blob(f"{domain_key}_v2.fptc"))
+    c3 = Container.from_bytes(_blob(f"{domain_key}_v3.fptc"))
+    assert c3.plan_key[:4] == c2.plan_key[:4]
+    assert c3.plan_key[4] != c2.plan_key[4]
+
+    ref = decode(c2, t2)
+    np.testing.assert_array_equal(decode(c3, t3), ref)
+    for uk in (False, True):
+        out = BatchDecoder(use_kernels=uk).decode([c3], t3).to_host()[0]
+        np.testing.assert_array_equal(out, np.asarray(
+            BatchDecoder(use_kernels=uk).decode([c2], t2).to_host()[0]
+        ))
+        np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
 def test_corrupt_golden_blob_rejected():
     """Bit flips in the frozen payload fail the CRC on v2, and the header
     magic check everywhere."""

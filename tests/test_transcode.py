@@ -326,8 +326,12 @@ def test_plan_pairing_cache(domain_tables):
     src, dst = domain_tables[0], domain_tables[1]
     tc = Transcoder()
     plan = tc.plan_for(src, dst)
-    assert plan.src_key == (0, src.config.n, src.config.e, src.config.l_max)
-    assert plan.dst_key == (1, dst.config.n, dst.config.e, dst.config.l_max)
+    assert plan.src_key == (
+        0, src.config.n, src.config.e, src.config.l_max, src.config.coding
+    )
+    assert plan.dst_key == (
+        1, dst.config.n, dst.config.e, dst.config.l_max, dst.config.coding
+    )
     assert plan.decode.n == src.config.n
     assert plan.encode.n == dst.config.n
 
