@@ -34,6 +34,15 @@ Everything lands in ``benchmarks/artifacts/serving/BENCH_serving.json``.
 ``--smoke`` is the CI guard: single-domain fixed-size stream, pipelined
 mode (plus sharded when devices allow), asserting the knee ordering and
 that overload sheds — the two claims the front-end exists for.
+
+``--chaos`` runs the fault-isolation soak instead: a mixed-kind stream
+with a seeded fraction of corrupted containers and injected dispatcher
+faults (transient failures, device loss, latency), measuring what fault
+handling *costs* — clean-request goodput under the fault rate, quarantine
+and retry counters, and the byte-identity verdict for every clean result
+against the offline engines.  Lands in ``BENCH_chaos.json``; with
+``--smoke`` it also asserts the chaos contract (zero hangs, zero untyped
+failures, zero silent drops, byte-identical clean results).
 """
 from __future__ import annotations
 
@@ -307,13 +316,136 @@ def run(fast: bool = False, smoke: bool = False) -> dict:
     return results
 
 
+def run_chaos(smoke: bool = False) -> dict:
+    """The chaos soak as a measurement: serving under a sustained fault
+    rate (corrupt containers + dispatcher sabotage), reporting what
+    fault isolation costs and whether the contract held."""
+    import time
+
+    from repro.serving.traffic import replay
+    from repro.testing.faults import (
+        DispatcherFaultInjector,
+        chaos_replay,
+        offline_expected,
+    )
+
+    os.makedirs(ART, exist_ok=True)
+    tables = build_domain_tables()
+    # two domains with different codec configs so the wrong-table fault
+    # deterministically lands on plan-mismatch
+    rate = 1200.0 if smoke else 2400.0
+    duration_s = 1.0 if smoke else 2.0
+    corrupt_frac = 0.08
+    cfg = TrafficConfig(
+        rate=rate, duration_s=duration_s, fixed_windows=8,
+        mix={"decode": 0.5, "encode": 0.3, "transcode": 0.2},
+        domains=(2, 3), seed=31,
+    )
+    requests = generate(cfg, tables)
+    expected = offline_expected(requests, tables)
+    fcfg = FrontendConfig(
+        max_batch=64, max_queue_depth=8192, default_slo_ms=600_000.0,
+    )
+
+    # clean baseline first (same stream, no corruption, no sabotage):
+    # the goodput delta IS the price of the injected chaos
+    with ServingFrontend(tables, config=fcfg, pipeline=True) as fe:
+        replay(fe, requests)  # warm pass: compile the micro-batch shapes
+    t0 = time.perf_counter()
+    with ServingFrontend(tables, config=fcfg, pipeline=True) as fe:
+        baseline = chaos_replay(
+            fe, requests, corrupt_frac=0.0, seed=31, expected=expected,
+            result_timeout_s=600.0,
+        )
+    baseline_wall = time.perf_counter() - t0
+
+    inj = DispatcherFaultInjector(
+        fail_on={3, 11}, latency_on={6: 0.05}, device_loss_on={17},
+    )
+    t0 = time.perf_counter()
+    with ServingFrontend(
+        tables, config=fcfg, pipeline=True, fault_injector=inj
+    ) as fe:
+        report = chaos_replay(
+            fe, requests, corrupt_frac=corrupt_frac, seed=31,
+            expected=expected, result_timeout_s=600.0,
+        )
+        stats = fe.stats_snapshot()
+    wall = time.perf_counter() - t0
+
+    byte_identical = report.clean_mismatches == 0
+    results = {
+        "requests": len(requests),
+        "corrupt_frac": corrupt_frac,
+        "corrupted": report.corrupted,
+        "clean": report.clean,
+        "clean_ok": report.clean_ok,
+        "ok": report.ok,
+        "poisoned": report.poisoned,
+        "dispatch_failed": report.dispatch_failed,
+        "rejected": report.rejected,
+        "untyped_failures": report.untyped_failures,
+        "hangs": report.hangs,
+        "clean_mismatches": report.clean_mismatches,
+        "byte_identical": byte_identical,
+        "quarantined": stats.quarantined,
+        "retries": stats.retries,
+        "retry_successes": stats.retry_successes,
+        "dispatch_failures": stats.dispatch_failures,
+        "watchdog_restarts": stats.watchdog_restarts,
+        "injected_faults": [[n, kind] for n, kind in inj.injected],
+        "wall_s": wall,
+        "clean_goodput_rps": report.clean_ok / wall if wall > 0 else 0.0,
+        "baseline_wall_s": baseline_wall,
+        "baseline_goodput_rps": (
+            baseline.ok / baseline_wall if baseline_wall > 0 else 0.0
+        ),
+    }
+    with open(os.path.join(ART, "BENCH_chaos.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(
+        f"serving_chaos,{wall * 1e3:.0f},"
+        f"clean_goodput={results['clean_goodput_rps']:.0f}/s "
+        f"(baseline {results['baseline_goodput_rps']:.0f}/s) "
+        f"poisoned={report.poisoned}/{report.corrupted} "
+        f"retries={stats.retries} hangs={report.hangs}",
+        flush=True,
+    )
+    print(f"# wrote {os.path.join(ART, 'BENCH_chaos.json')}", flush=True)
+
+    if smoke:
+        assert report.accounted == report.total, "silent drop detected"
+        assert report.hangs == 0, "a future never resolved"
+        assert report.untyped_failures == 0, (
+            "an untyped error escaped the fault taxonomy"
+        )
+        assert report.poisoned == report.corrupted, (
+            "a corrupted container did not surface as typed poison"
+        )
+        assert byte_identical, (
+            f"{report.clean_mismatches} clean result(s) diverged from the "
+            "offline engines under chaos"
+        )
+        assert report.clean_ok == report.clean, (
+            "a clean request failed to complete"
+        )
+        assert len(inj.injected) >= 3, "dispatcher sabotage never fired"
+        print("# chaos assertions passed", flush=True)
+    return results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run + knee/shed assertions")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-isolation soak -> BENCH_chaos.json")
     args = ap.parse_args()
-    run(fast=args.fast, smoke=args.smoke)
+    if args.chaos:
+        run_chaos(smoke=args.smoke)
+    else:
+        run(fast=args.fast, smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -79,7 +79,19 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-__all__ = ["Container", "HEADER_BYTES", "SUPPORTED_VERSIONS"]
+__all__ = [
+    "Container",
+    "ContainerFormatError",
+    "ContainerHeader",
+    "HEADER_BYTES",
+    "SUPPORTED_VERSIONS",
+    "FAULT_BAD_MAGIC",
+    "FAULT_BAD_VERSION",
+    "FAULT_RESERVED_FLAGS",
+    "FAULT_CRC_MISMATCH",
+    "FAULT_HEADER_MISMATCH",
+    "FAULT_TRUNCATED",
+]
 
 _MAGIC = b"FPTC"
 _VERSION = 2  # default wire version for trivially-coded containers
@@ -91,6 +103,73 @@ SUPPORTED_VERSIONS = (1, 2, 3)
 
 _FLAG_PRED_MASK = 0x0003  # bits 0-1: predictor id
 _FLAG_ZPLANES = 0x0004  # bit 2: zero-plane suppression
+
+# Wire-format fault classes (the serving quarantine taxonomy — see
+# repro.serving.quarantine for the full error→HTTP contract).
+FAULT_BAD_MAGIC = "bad-magic"
+FAULT_BAD_VERSION = "bad-version"
+FAULT_RESERVED_FLAGS = "reserved-flags"
+FAULT_CRC_MISMATCH = "crc-mismatch"
+FAULT_HEADER_MISMATCH = "header-mismatch"
+FAULT_TRUNCATED = "truncated"
+
+# Byte offsets of the header fields inside _HDR (for fault records).
+_OFF_MAGIC = 0
+_OFF_VERSION = 4
+_OFF_SIGNAL_LENGTH = 28
+_OFF_MAX_SYMLEN = 36
+_OFF_CRC = 40
+
+
+class ContainerFormatError(ValueError):
+    """A buffer failed container wire-format validation.
+
+    ``ValueError`` subclass so every legacy ``except ValueError`` call site
+    keeps working; additionally carries the machine-readable quarantine
+    record: the fault class (one of the ``FAULT_*`` constants), the byte
+    ``offset`` of the offending field where known (``None`` otherwise), and
+    the container's ``index`` within its submitted batch when the caller
+    supplied one.
+    """
+
+    def __init__(self, message, *, fault, offset=None, index=None):
+        super().__init__(message)
+        self.fault = fault
+        self.offset = offset
+        self.index = index
+
+    def __str__(self):
+        where = []
+        if self.index is not None:
+            where.append(f"container[{self.index}]")
+        if self.offset is not None:
+            where.append(f"byte offset {self.offset}")
+        loc = f" ({', '.join(where)})" if where else ""
+        return f"[{self.fault}] {self.args[0]}{loc}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ContainerHeader:
+    """The parsed common header — what ``Container.peek`` returns.
+
+    Admission-time routing (the serving frontend needs a plan key before it
+    is worth paying for the full CRC pass) reads only this."""
+
+    version: int
+    n: int
+    e: int
+    l_max: int
+    domain_id: int
+    num_words: int
+    num_symbols: int
+    num_windows: int
+    signal_length: int
+    max_symlen: int
+    coding: Tuple[int, int, bool]
+
+    @property
+    def plan_key(self) -> Tuple[int, int, int, int, Tuple[int, int, bool]]:
+        return (self.domain_id, self.n, self.e, self.l_max, self.coding)
 
 
 def _pack_bitmap(mask: np.ndarray) -> bytes:
@@ -218,17 +297,24 @@ class Container:
         )
         return hdr + ext + words_b + symlen_b + bitmaps
 
-    @classmethod
-    def from_bytes(cls, data) -> "Container":
-        """Parse a serialized container from any bytes-like buffer.
+    @staticmethod
+    def _parse_header(mv: memoryview, index):
+        """Validate and unpack the common (+v3 ext) header of ``mv``.
 
-        Zero-copy: payload sections are referenced through ``memoryview``
-        slices (``np.frombuffer``), not copied — the hot decode-staging path
-        reads them exactly once while bucketing, so a copy here would be
-        pure overhead.  The returned arrays are read-only views keeping
-        ``data`` alive.
+        Returns ``(header, payload_off, flags_faulty_checked)`` where
+        ``payload_off`` is the byte offset of the words section.  Raises
+        :class:`ContainerFormatError` (fault class + byte offset + batch
+        ``index``) on every malformed-header path, including truncation —
+        the quarantine layer keys off these records.
         """
-        mv = memoryview(data)
+        if len(mv) < HEADER_BYTES:
+            raise ContainerFormatError(
+                f"truncated container: {len(mv)} bytes is shorter than the "
+                f"{HEADER_BYTES}-byte header",
+                fault=FAULT_TRUNCATED,
+                offset=len(mv),
+                index=index,
+            )
         (
             magic,
             version,
@@ -244,24 +330,102 @@ class Container:
             crc,
         ) = _HDR.unpack_from(mv, 0)
         if magic != _MAGIC:
-            raise ValueError("bad magic — not an FPTC container")
+            raise ContainerFormatError(
+                "bad magic — not an FPTC container",
+                fault=FAULT_BAD_MAGIC,
+                offset=_OFF_MAGIC,
+                index=index,
+            )
         if version not in SUPPORTED_VERSIONS:
-            raise ValueError(
+            raise ContainerFormatError(
                 f"unsupported container version {version}; this build reads "
-                f"versions {SUPPORTED_VERSIONS} (the forever-decode set)"
+                f"versions {SUPPORTED_VERSIONS} (the forever-decode set)",
+                fault=FAULT_BAD_VERSION,
+                offset=_OFF_VERSION,
+                index=index,
             )
         off = HEADER_BYTES
         predictor, predict_bands, zero_planes = 0, 0, False
         if version == _V3:
+            if len(mv) < off + _EXT3.size:
+                raise ContainerFormatError(
+                    f"truncated container: {len(mv)} bytes cuts off the "
+                    f"v3 extension header",
+                    fault=FAULT_TRUNCATED,
+                    offset=len(mv),
+                    index=index,
+                )
             flags, predict_bands = _EXT3.unpack_from(mv, off)
             off += _EXT3.size
             predictor = flags & _FLAG_PRED_MASK
             zero_planes = bool(flags & _FLAG_ZPLANES)
             if flags & ~(_FLAG_PRED_MASK | _FLAG_ZPLANES):
-                raise ValueError(
+                raise ContainerFormatError(
                     f"v3 container sets reserved flag bits "
-                    f"{flags:#06x} — written by a newer build?"
+                    f"{flags:#06x} — written by a newer build?",
+                    fault=FAULT_RESERVED_FLAGS,
+                    offset=HEADER_BYTES,
+                    index=index,
                 )
+        expected = off + num_words * 9
+        if zero_planes:
+            expected += (num_windows + 7) // 8 + (e + 7) // 8
+        if len(mv) < expected:
+            raise ContainerFormatError(
+                f"truncated container: have {len(mv)} bytes, header "
+                f"promises {expected}",
+                fault=FAULT_TRUNCATED,
+                offset=len(mv),
+                index=index,
+            )
+        hdr = ContainerHeader(
+            version=version,
+            n=n,
+            e=e,
+            l_max=l_max,
+            domain_id=domain_id,
+            num_words=num_words,
+            num_symbols=num_symbols,
+            num_windows=num_windows,
+            signal_length=signal_length,
+            max_symlen=max_symlen,
+            coding=(predictor, predict_bands, zero_planes),
+        )
+        return hdr, off, crc
+
+    @classmethod
+    def peek(cls, data, *, index=None) -> ContainerHeader:
+        """Header-only parse: O(1), no CRC pass over the payload.
+
+        The serving frontend routes raw bytes to a (kind, plan) queue at
+        admission with this — the full :meth:`from_bytes` validation runs
+        later at staging, inside the quarantine boundary.  Raises the same
+        typed :class:`ContainerFormatError` records for malformed headers
+        and truncation.
+        """
+        return cls._parse_header(memoryview(data), index)[0]
+
+    @classmethod
+    def from_bytes(cls, data, *, index=None) -> "Container":
+        """Parse a serialized container from any bytes-like buffer.
+
+        Zero-copy: payload sections are referenced through ``memoryview``
+        slices (``np.frombuffer``), not copied — the hot decode-staging path
+        reads them exactly once while bucketing, so a copy here would be
+        pure overhead.  The returned arrays are read-only views keeping
+        ``data`` alive.
+
+        All validation failures raise :class:`ContainerFormatError` (a
+        ``ValueError``) carrying the fault class, the byte offset of the
+        offending field where known, and ``index`` (the container's position
+        in its batch, when the caller supplies one) — the serving quarantine
+        turns these into per-request outcomes.
+        """
+        mv = memoryview(data)
+        hdr, off, crc = cls._parse_header(mv, index)
+        version = hdr.version
+        predictor, predict_bands, zero_planes = hdr.coding
+        num_words = hdr.num_words
         words = np.frombuffer(mv, dtype="<u8", count=num_words, offset=off)
         off += num_words * 8
         symlen = np.frombuffer(
@@ -273,30 +437,40 @@ class Container:
         if version == 1:  # legacy: crc covered only the symlen sidecar
             crc_calc = zlib.crc32(symlen)
         if zero_planes:
-            nrow_b = (num_windows + 7) // 8
-            ncol_b = (e + 7) // 8
+            nrow_b = (hdr.num_windows + 7) // 8
+            ncol_b = (hdr.e + 7) // 8
             bitmaps = mv[off: off + nrow_b + ncol_b]
-            zrow = _unpack_bitmap(bitmaps[:nrow_b], num_windows)
-            zcol = _unpack_bitmap(bitmaps[nrow_b:], e)
+            zrow = _unpack_bitmap(bitmaps[:nrow_b], hdr.num_windows)
+            zcol = _unpack_bitmap(bitmaps[nrow_b:], hdr.e)
             crc_calc = zlib.crc32(bitmaps, crc_calc)
         if crc_calc != crc:
-            raise ValueError("payload CRC mismatch — corrupt container")
+            raise ContainerFormatError(
+                "payload CRC mismatch — corrupt container",
+                fault=FAULT_CRC_MISMATCH,
+                offset=_OFF_CRC,
+                index=index,
+            )
         c = cls(
             words=words,
             symlen=symlen,
-            num_symbols=num_symbols,
-            num_windows=num_windows,
-            signal_length=signal_length,
-            n=n,
-            e=e,
-            l_max=l_max,
-            domain_id=domain_id,
+            num_symbols=hdr.num_symbols,
+            num_windows=hdr.num_windows,
+            signal_length=hdr.signal_length,
+            n=hdr.n,
+            e=hdr.e,
+            l_max=hdr.l_max,
+            domain_id=hdr.domain_id,
             predictor=predictor,
             predict_bands=predict_bands,
             zero_planes=zero_planes,
             zrow=zrow,
             zcol=zcol,
         )
-        if c.max_symlen != max_symlen:
-            raise ValueError("max_symlen header mismatch — corrupt container")
+        if c.max_symlen != hdr.max_symlen:
+            raise ContainerFormatError(
+                "max_symlen header mismatch — corrupt container",
+                fault=FAULT_HEADER_MISMATCH,
+                offset=_OFF_MAX_SYMLEN,
+                index=index,
+            )
         return c

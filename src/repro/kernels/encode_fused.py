@@ -209,7 +209,7 @@ def encode_fused(
     """Fused bucket encode, one ``pallas_call``: signal rows -> chunk parts.
 
     Returns ``(hi uint32[K, B, C], lo uint32[K, B, C], symlen int32[K, B,
-    C], words_per_chunk int32[K, B], bad bool[])`` — exactly the contract
+    C], words_per_chunk int32[K, B], bad bool[K])`` — exactly the contract
     of the XLA path (``vmap`` of :func:`repro.core.symlen.
     pack_symlen_chunked_parts` plus the batch-wide histogram-gap flag),
     byte for byte.  A non-trivial ``coding`` (container v3) appends the
@@ -311,11 +311,11 @@ def encode_fused(
     outs = [o[:k] for o in outs] if kp != k else list(outs)
     hi, lo, sl, wpc, bad = outs[:5]
     if coding == _TRIVIAL:
-        return hi, lo, sl, wpc, jnp.any(bad > 0)
+        return hi, lo, sl, wpc, bad > 0
     ncoded = outs[5]
     if zplanes:
         zrow = outs[6].astype(jnp.bool_)
         zcol = outs[7].astype(jnp.bool_)
     else:
         zrow = zcol = None
-    return hi, lo, sl, wpc, jnp.any(bad > 0), ncoded, zrow, zcol
+    return hi, lo, sl, wpc, bad > 0, ncoded, zrow, zcol

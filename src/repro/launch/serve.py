@@ -33,6 +33,17 @@ queues with explicit shedding):
     response, never a silent drop); an already-expired deadline gets
     **400**; decode of a domain the service has no tables for gets **404**.
 
+    Fault handling (see the README's taxonomy table): a corrupt container
+    gets **422** with the typed quarantine record (fault class + byte
+    offset) — whether caught at admission (header faults) or by the
+    per-request quarantine at dispatch (payload faults) — while its
+    batch-mates are unaffected; a dispatch the watchdog/retry machinery
+    gave up on gets **503** with ``dispatch-failed``.  ``GET /healthz``
+    returns **200** with ``{"status": "ok"}`` when healthy and **503**
+    with the degraded evidence (recent fault events, shed rate,
+    quarantine/retry counters) when a watchdog restart, dispatcher crash
+    or dispatch failure happened within the degraded window.
+
 (The seed's LM inference driver moved to :mod:`repro.launch.serve_lm`.)
 """
 from __future__ import annotations
@@ -45,14 +56,17 @@ from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
-from repro.core.container import Container
+from repro.core.container import ContainerFormatError
 from repro.serving.frontend import (
     DeadlineExpiredError,
+    DispatchFailedError,
     FrontendClosedError,
     FrontendConfig,
     QueueFullError,
+    RetryPolicy,
     ServingFrontend,
 )
+from repro.serving.quarantine import PoisonedContainerError
 from repro.serving.traffic import (
     TrafficConfig,
     build_domain_tables,
@@ -61,7 +75,7 @@ from repro.serving.traffic import (
 )
 
 
-def build_frontend(args) -> ServingFrontend:
+def build_frontend(args, fault_injector=None) -> ServingFrontend:
     tables = build_domain_tables(seed=args.seed)
     return ServingFrontend(
         tables,
@@ -70,9 +84,13 @@ def build_frontend(args) -> ServingFrontend:
             max_queue_depth=args.queue_depth,
             default_slo_ms=args.slo_ms,
             flush_slack_ms=args.slack_ms,
+            quarantine=not args.no_quarantine,
+            retry=RetryPolicy(max_retries=args.retries),
+            watchdog_timeout_ms=args.watchdog_ms,
         ),
         pipeline=not args.no_pipeline,
         devices="auto",
+        fault_injector=fault_injector,
     )
 
 
@@ -105,10 +123,14 @@ def make_handler(frontend: ServingFrontend):
         def do_GET(self):
             path = urlparse(self.path).path
             if path == "/healthz":
-                self._reply(200, b"ok", "text/plain")
+                health = frontend.health()
+                self._reply_json(
+                    200 if health["status"] == "ok" else 503, health
+                )
             elif path == "/statz":
                 st = frontend.stats_snapshot()
                 self._reply_json(200, {
+                    "health": frontend.health(),
                     "stats": {
                         k: getattr(st, k)
                         for k in st.__dataclass_fields__
@@ -134,8 +156,11 @@ def make_handler(frontend: ServingFrontend):
             deadline_ms = float(deadline) if deadline else None
             try:
                 if url.path == "/v1/decode":
+                    # raw wire bytes go straight to admission: under
+                    # quarantine the frontend routes off the O(1) header
+                    # peek and a corrupt payload poisons only this request
                     fut = frontend.submit_decode(
-                        Container.from_bytes(body), deadline_ms=deadline_ms
+                        body, deadline_ms=deadline_ms
                     )
                     payload = fut.result().astype("<f4").tobytes()
                 elif url.path == "/v1/encode":
@@ -152,7 +177,7 @@ def make_handler(frontend: ServingFrontend):
                         )
                         return
                     fut = frontend.submit_transcode(
-                        Container.from_bytes(body),
+                        body,
                         int(query["dst"][0]),
                         deadline_ms=deadline_ms,
                     )
@@ -173,6 +198,24 @@ def make_handler(frontend: ServingFrontend):
                 return
             except FrontendClosedError:
                 self._reply_json(503, {"error": "shutting down"})
+                return
+            except (ContainerFormatError, PoisonedContainerError) as e:
+                # the typed quarantine record: the request's payload is
+                # bad, the rest of its batch completed untouched
+                self._reply_json(422, {
+                    "error": "poisoned-container",
+                    "fault": e.fault,
+                    "offset": e.offset,
+                    "index": e.index,
+                    "detail": str(e),
+                })
+                return
+            except DispatchFailedError as e:
+                # the serving machinery (not the payload) gave up —
+                # resubmitting is safe
+                self._reply_json(503, {
+                    "error": "dispatch-failed", "detail": str(e),
+                }, extra=[("Retry-After", "1")])
                 return
             except (KeyError, ValueError) as e:
                 self._reply_json(404, {"error": str(e)})
@@ -245,6 +288,12 @@ def main(argv=None):
     ap.add_argument("--slack-ms", type=float, default=5.0)
     ap.add_argument("--no-pipeline", action="store_true",
                     help="synchronous engines (debugging)")
+    ap.add_argument("--no-quarantine", action="store_true",
+                    help="batch-fatal container faults (offline contract)")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="transient-fault retry budget per request")
+    ap.add_argument("--watchdog-ms", type=float, default=10_000.0,
+                    help="dispatcher watchdog timeout (0 disables)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.rate, args.duration = 50.0, 0.5

@@ -46,6 +46,7 @@ import dataclasses
 import functools
 from collections import deque
 from typing import (
+    Any,
     Callable,
     Dict,
     List,
@@ -331,13 +332,24 @@ class DecodedBatch:
     ``to_host()`` performs the only host sync: every bucket's d2h copy is
     started before any is materialized (so shard drains overlap), then
     numpy slicing back to per-container signals (input order preserved).
+
+    A quarantined decode (``BatchDecoder.decode(..., quarantine=True)``)
+    carries a ``poisoned`` record per excluded signal: its slice is None,
+    ``to_host()`` returns the typed
+    :class:`~repro.serving.quarantine.PoisonedContainerError` at that
+    position, and ``device_signal(i)`` raises it.
     """
 
     def __init__(
-        self, groups: List[jnp.ndarray], slices: List[_Slice]
+        self,
+        groups: List[jnp.ndarray],
+        slices: List[Optional[_Slice]],
+        *,
+        poisoned: Optional[Dict[int, Exception]] = None,
     ):
         self._groups = groups  # per group: f32[num_windows_p, N] on device
         self._slices = slices
+        self._poisoned: Dict[int, Exception] = dict(poisoned or {})
 
     def __len__(self) -> int:
         return len(self._slices)
@@ -348,8 +360,11 @@ class DecodedBatch:
         return list(self._groups)
 
     def device_signal(self, i: int) -> jnp.ndarray:
-        """Container i's reconstructed signal as a device array (lazy)."""
+        """Container i's reconstructed signal as a device array (lazy).
+        Raises the typed per-request error for a quarantined signal."""
         s = self._slices[i]
+        if s is None:
+            raise self._poisoned[i]
         rows = self._groups[s.group][s.win_off:s.win_off + s.num_windows]
         return rows.reshape(-1)[: s.signal_length]
 
@@ -358,12 +373,17 @@ class DecodedBatch:
             g.block_until_ready()
         return self
 
-    def to_host(self) -> List[np.ndarray]:
+    def to_host(self) -> List[Any]:
         """Drain the batch: one device->host transfer per bucket, all
-        copies in flight before the first materializes."""
+        copies in flight before the first materializes.  Quarantined
+        positions hold their typed per-request error instead of samples —
+        a poisoned signal never raises batch-wide here."""
         host = fetch_to_host(self._groups)
-        out = []
-        for s in self._slices:
+        out: List[Any] = []
+        for i, s in enumerate(self._slices):
+            if s is None:
+                out.append(self._poisoned[i])
+                continue
             rows = host[s.group][s.win_off:s.win_off + s.num_windows]
             out.append(rows.reshape(-1)[: s.signal_length].copy())
         return out
@@ -511,6 +531,7 @@ class BatchDecoderStats:
     dispatches: int = 0  # fused bucket launches
     plan_hits: int = 0
     plan_misses: int = 0
+    quarantined: int = 0  # signals poisoned out of quarantine=True batches
     # per-dispatch padding/occupancy records (bounded history) — feeds the
     # bench JSON's bucket-waste report and the half-octave bucket-policy
     # decision (ROADMAP)
@@ -586,10 +607,12 @@ class BatchDecoder:
         """Containers submitted since the last flush."""
         return len(self._pending)
 
-    def flush(self, tables: TablesArg) -> DecodedBatch:
+    def flush(
+        self, tables: TablesArg, *, quarantine: bool = False
+    ) -> DecodedBatch:
         """Decode everything submitted since the last flush as one batch
         (submission order).  An empty flush is a no-op empty batch."""
-        return self.decode(self._pending.take(), tables)
+        return self.decode(self._pending.take(), tables, quarantine=quarantine)
 
     # -- plan management ---------------------------------------------------
     def _tables_for(self, key, tables: TablesArg) -> DomainTables:
@@ -655,17 +678,51 @@ class BatchDecoder:
 
     # -- the batched decode ------------------------------------------------
     def decode(
-        self, containers: Sequence[Container], tables: TablesArg
+        self,
+        containers: Sequence[Any],
+        tables: TablesArg,
+        *,
+        quarantine: bool = False,
     ) -> DecodedBatch:
         """Decode a (possibly mixed-domain, mixed-length) batch of containers.
 
         Returns a :class:`DecodedBatch`; nothing is synced to host here.
+
+        ``quarantine=True`` is the serving contract: items may be raw bytes
+        or parsed :class:`Container` objects, each is wire-format + deep
+        validated against ``tables`` before staging, and a poisoned item is
+        excluded from its bucket instead of raising batch-wide — the clean
+        subset decodes byte-identically to a clean batch and the poisoned
+        slot's :class:`~repro.serving.quarantine.PoisonedContainerError`
+        rides the returned batch.  Without quarantine every item must be a
+        :class:`Container` and any fault raises (the offline contract).
         """
         containers = list(containers)
         self.stats.batches += 1
         self.stats.containers += len(containers)
+
+        poisoned: Dict[int, Exception] = {}
+        clean_pos = list(range(len(containers)))
+        if quarantine:
+            from repro.serving.quarantine import validate_or_poison
+
+            clean_pos, clean = [], []
+            for i, item in enumerate(containers):
+                c, err = validate_or_poison(item, i, tables)
+                if err is not None:
+                    poisoned[i] = err
+                else:
+                    clean_pos.append(i)
+                    clean.append(c)
+            total = len(containers)
+            self.stats.quarantined += len(poisoned)
+            containers = clean
+
         if not containers:
-            return DecodedBatch([], [])
+            slices: List[Optional[_Slice]] = (
+                [None] * total if quarantine else []
+            )
+            return DecodedBatch([], slices, poisoned=poisoned)
 
         if isinstance(tables, DomainTables):
             # a single DomainTables means "decode everything with these" —
@@ -710,7 +767,12 @@ class BatchDecoder:
         # decode_streams orders slices by (group, member); restore the
         # caller's container order
         slices = [batch._slices[member_pos[i]] for i in range(len(containers))]
-        return DecodedBatch(batch._groups, slices)
+        if quarantine:
+            full: List[Optional[_Slice]] = [None] * total
+            for j, i in enumerate(clean_pos):
+                full[i] = slices[j]
+            slices = full
+        return DecodedBatch(batch._groups, slices, poisoned=poisoned)
 
     def decode_streams(
         self,

@@ -52,7 +52,16 @@ from __future__ import annotations
 import dataclasses
 import functools
 from collections import deque
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from typing import (
+    Any,
+    Dict,
+    List,
+    Mapping,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
 
 import jax
 import jax.numpy as jnp
@@ -170,8 +179,11 @@ def _encode_bucket_math(
     parts* (hi/lo/symlen ``[K, B, chunk_size]`` + words-per-chunk
     ``[K, B]``) — the drain concatenates chunk runs on the host, which is
     cheaper than a device-side stitch and byte-identical — plus the
-    batch-wide unencodable-symbol flag (const False unless the book has
-    histogram gaps).
+    PER-ROW unencodable-symbol flags ``bool[K]`` (const False unless the
+    book has histogram gaps; padding rows have no valid symbols and stay
+    False).  Per-row rather than batch-wide is what lets the serving
+    quarantine demote a histogram gap from batch-fatal to a per-signal
+    outcome at drain.
 
     A non-trivial ``coding`` (container v3) inserts the lossless pre-entropy
     stage between quantize and pack: windowed prediction re-codes the low
@@ -194,9 +206,9 @@ def _encode_bucket_math(
                 jnp.arange(syms.shape[1], dtype=jnp.int32)[None, :]
                 < counts[:, None]
             )
-            bad = jnp.any((tables.lengths[syms] == 0) & valid)
+            bad = jnp.any((tables.lengths[syms] == 0) & valid, axis=1)
         else:
-            bad = jnp.zeros((), jnp.bool_)
+            bad = jnp.zeros((k,), jnp.bool_)
         hi, lo, sl, wpc = jax.vmap(
             lambda s, c: symlen.pack_symlen_chunked_parts(
                 s,
@@ -232,9 +244,9 @@ def _encode_bucket_math(
         valid = valid.reshape(k, -1)
         ncoded = counts
     if check_gaps:
-        bad = jnp.any((tables.lengths[flat] == 0) & valid)
+        bad = jnp.any((tables.lengths[flat] == 0) & valid, axis=1)
     else:
-        bad = jnp.zeros((), jnp.bool_)
+        bad = jnp.zeros((k,), jnp.bool_)
     hi, lo, sl, wpc = jax.vmap(
         lambda s, v: symlen.pack_symlen_chunked_parts(
             s,
@@ -463,7 +475,9 @@ class EncodedBucketParts:
     pack_symlen_chunked_parts` produces per signal, batched over the
     bucket's ``K`` rows (rows past the real signals are batch padding and
     pack zero words).  ``unencodable`` is the bucket's device-side
-    histogram-gap flag, checked at drain.  ``shard``/``device`` record the
+    histogram-gap flag — per ROW (``bool[K]``; padding rows stay False) so
+    a drain can demote the fault to a per-signal outcome — checked at
+    drain.  ``shard``/``device`` record the
     scheduler placement (device None = default single-shard).  This is the
     shared stream contract between the encode engine and device-resident
     consumers (the transcode pipeline stitches these straight into decoder
@@ -482,7 +496,7 @@ class EncodedBucketParts:
     lo: jnp.ndarray  # uint32[K, B, C]
     symlen: jnp.ndarray  # int32[K, B, C]
     words_per_chunk: jnp.ndarray  # int32[K, B]
-    unencodable: jnp.ndarray  # bool[]
+    unencodable: jnp.ndarray  # bool[K]
     shard: int = 0
     device: object = None
     ncoded: Optional[jnp.ndarray] = None  # int32[K] (v3 only)
@@ -522,14 +536,23 @@ class EncodedBatch:
     def __init__(
         self,
         buckets: List[EncodedBucketParts],
-        slices: List[_Slice],
+        slices: List[Optional[_Slice]],
         pending_flags: Sequence[Tuple[tuple, jnp.ndarray]] = (),
+        *,
+        poisoned: Optional[Dict[int, Exception]] = None,
+        quarantine: bool = False,
     ):
         self._buckets = buckets
         self._slices = slices
         # histogram-gap flags inherited from upstream device stages (a
         # transcode's source batch): checked at drain like our own
         self._pending_flags = list(pending_flags)
+        # quarantine records: signals excluded before encoding (slice is
+        # None at their index); the drain returns their typed error
+        self._poisoned: Dict[int, Exception] = dict(poisoned or {})
+        # quarantine drains demote a device-side histogram-gap flag from a
+        # batch-fatal ValueError to a per-signal PoisonedContainerError
+        self._quarantine = bool(quarantine)
         self._consumed: Optional[str] = None
 
     def __len__(self) -> int:
@@ -561,36 +584,76 @@ class EncodedBatch:
         self._check_live("consume")
         self._consumed = reason
 
-    def to_host(self) -> List[Container]:
+    def to_host(self) -> List[Any]:
         """Drain the batch into containers: one sync per bucket (all d2h
         copies in flight together), then a host-side stitch of each
         signal's chunk word-runs (chunk b of signal k contributes its
         row's first ``wpc[k, b]`` words).  The stitch is double-buffered
         (:func:`repro.serving.engine.fetch_to_host_stitched`): a worker
         concatenates bucket k's numpy chunk runs while bucket k+1's d2h
-        copies land."""
+        copies land.
+
+        A quarantined batch returns a :class:`~repro.serving.quarantine.
+        PoisonedContainerError` at each poisoned signal's position instead
+        of a :class:`Container` — never a batch-wide raise for per-signal
+        faults.  Without quarantine, a device-side histogram-gap flag stays
+        batch-fatal (the offline contract)."""
         self._check_live("drain")
-        flags = self._pending_flags + [
-            (p.plan_key, p.unencodable) for p in self._buckets
-        ]
-        for key, flag in flags:
-            if bool(flag):
-                # leave the batch live: a failed drain returned nothing, so
-                # a retry must re-raise this error, not a bogus
-                # "already drained" message
-                raise ValueError(
-                    f"encode batch for plan_key "
-                    f"(domain_id, n, e, l_max, coding)="
-                    f"{key} produced symbol(s) with no codeword (histogram "
-                    "gap in the Huffman book) — the stream would decode to "
-                    "garbage; recalibrate with Laplace smoothing or a "
-                    "complete codebook"
-                )
+
+        def _gap_error(key):
+            # leave the batch live: a failed drain returned nothing, so
+            # a retry must re-raise this error, not a bogus
+            # "already drained" message
+            return ValueError(
+                f"encode batch for plan_key "
+                f"(domain_id, n, e, l_max, coding)="
+                f"{key} produced symbol(s) with no codeword (histogram "
+                "gap in the Huffman book) — the stream would decode to "
+                "garbage; recalibrate with Laplace smoothing or a "
+                "complete codebook"
+            )
+
+        # upstream flags (a transcode's source batch) have no row->signal
+        # mapping here, so they stay batch-fatal even under quarantine
+        for key, flag in self._pending_flags:
+            if bool(np.any(np.asarray(flag))):
+                raise _gap_error(key)
+        bucket_bad = [np.asarray(p.unencodable) for p in self._buckets]
+        poisoned: Dict[int, Exception] = dict(self._poisoned)
+        if self._quarantine:
+            # demote the device-side gap flag to per-signal outcomes: the
+            # flagged row's stream is garbage, but every other row packed
+            # independently and drains byte-identically to a clean run
+            from repro.serving.quarantine import (
+                FAULT_HISTOGRAM_GAP,
+                PoisonedContainerError,
+            )
+
+            for i, s in enumerate(self._slices):
+                if s is None or i in poisoned:
+                    continue
+                if bool(bucket_bad[s.bucket][s.row]):
+                    poisoned[i] = PoisonedContainerError(
+                        "signal quantizes to symbol(s) with no codeword "
+                        "(histogram gap in the Huffman book) under "
+                        f"plan_key (domain_id, n, e, l_max, coding)="
+                        f"{self._buckets[s.bucket].plan_key} — "
+                        "recalibrate with Laplace smoothing or a complete "
+                        "codebook",
+                        index=i,
+                        fault=FAULT_HISTOGRAM_GAP,
+                    )
+        else:
+            for p, bad in zip(self._buckets, bucket_bad):
+                if bool(np.any(bad)):
+                    raise _gap_error(p.plan_key)
 
         per_bucket: List[List[Tuple[int, _Slice]]] = [
             [] for _ in self._buckets
         ]
         for i, s in enumerate(self._slices):
+            if s is None or i in poisoned:
+                continue
             per_bucket[s.bucket].append((i, s))
 
         def stitch_bucket(b: int, host: List[np.ndarray]):
@@ -655,7 +718,9 @@ class EncodedBatch:
             "it was already drained by to_host() — hold on to the returned "
             "containers instead of draining twice"
         )
-        out: List[Optional[Container]] = [None] * len(self._slices)
+        out: List[Any] = [None] * len(self._slices)
+        for i, err in poisoned.items():
+            out[i] = err
         for stitched in results:
             for i, c in stitched:
                 out[i] = c
@@ -748,7 +813,9 @@ class BatchEncoder:
         """Signals submitted since the last flush."""
         return len(self._pending)
 
-    def flush(self, tables: TablesArg) -> EncodedBatch:
+    def flush(
+        self, tables: TablesArg, *, quarantine: bool = False
+    ) -> EncodedBatch:
         """Encode everything submitted since the last flush as one batch
         (submission order).  An empty flush is a no-op empty batch."""
         items = self._pending.take()
@@ -767,7 +834,9 @@ class BatchEncoder:
             ]
         else:
             domain_ids = doms
-        return self.encode(signals, tables, domain_ids=domain_ids)
+        return self.encode(
+            signals, tables, domain_ids=domain_ids, quarantine=quarantine
+        )
 
     # -- plan management ---------------------------------------------------
     def _tables_for(self, domain_id: int, tables: TablesArg) -> DomainTables:
@@ -829,12 +898,15 @@ class BatchEncoder:
         tables: TablesArg,
         *,
         domain_ids: Optional[Sequence[int]] = None,
+        quarantine: bool = False,
     ) -> EncodedBatch:
         """Encode a (possibly mixed-domain, mixed-length) batch of signals.
 
         ``domain_ids`` assigns each signal its domain when ``tables`` is a
         mapping; with a single :class:`DomainTables` every signal uses it.
         Returns an :class:`EncodedBatch`; nothing is synced to host here.
+        ``quarantine=True`` demotes the device-side histogram-gap flag from
+        batch-fatal to a typed per-signal outcome at drain.
         """
         signals = [np.asarray(s, dtype=np.float32).ravel() for s in signals]
 
@@ -846,7 +918,7 @@ class BatchEncoder:
 
         return self.encode_staged(
             [int(s.shape[0]) for s in signals], tables,
-            domain_ids=domain_ids, stage=stage,
+            domain_ids=domain_ids, stage=stage, quarantine=quarantine,
         )
 
     def encode_staged(
@@ -859,6 +931,7 @@ class BatchEncoder:
         pending_flags: Sequence[tuple] = (),
         shard_ids: Optional[Sequence[int]] = None,
         shard_devices: Optional[Dict[int, object]] = None,
+        quarantine: bool = False,
     ) -> EncodedBatch:
         """The bucketing/dispatch core of :meth:`encode`, with the signal
         *staging* pluggable.
@@ -883,7 +956,9 @@ class BatchEncoder:
         self.stats.batches += 1
         self.stats.signals += len(lengths)
         if not lengths:
-            return EncodedBatch([], [], pending_flags)
+            return EncodedBatch(
+                [], [], pending_flags, quarantine=quarantine
+            )
         if domain_ids is None:
             if not isinstance(tables, DomainTables):
                 raise ValueError(
@@ -1045,7 +1120,9 @@ class BatchEncoder:
         out_buckets = self.executor.run(buckets, upload, dispatch)
         self.stats.plan_hits = self._plans.hits
         self.stats.plan_misses = self._plans.misses
-        return EncodedBatch(out_buckets, slices, pending_flags)
+        return EncodedBatch(
+            out_buckets, slices, pending_flags, quarantine=quarantine
+        )
 
     def encode_to_host(
         self,
@@ -1055,7 +1132,9 @@ class BatchEncoder:
         domain_ids: Optional[Sequence[int]] = None,
     ) -> List[Container]:
         """Convenience: encode + drain in one call."""
-        return self.encode(signals, tables, domain_ids=domain_ids).to_host()
+        return self.encode(
+            signals, tables, domain_ids=domain_ids
+        ).to_host()
 
 
 # ---------------------------------------------------------------------------

@@ -535,9 +535,18 @@ class PipelineExecutor:
                 pop_dispatch()
         finally:
             # on error, drain leftover staging futures so their (harmless)
-            # transfers don't outlive the arrays they close over
-            for _, _, fut in pending:
-                fut.cancel()
+            # transfers don't outlive the arrays they close over.
+            # cancel() is a no-op on an already-RUNNING future — the
+            # staging worker must be JOINED, not abandoned, or its
+            # in-flight upload (possibly holding donated buffers) outlives
+            # this call and the next run() races it on the 1-thread pool
+            while pending:
+                _, _, fut = pending.popleft()
+                if not fut.cancel():
+                    try:
+                        fut.result()
+                    except BaseException:
+                        pass  # the primary exception is already in flight
                 self._inflight_add(-1)
         return results
 

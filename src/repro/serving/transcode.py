@@ -101,6 +101,7 @@ class TranscoderStats:
     capacity_syncs: int = 0  # exact_capacity pre-decode word-count syncs
     plan_hits: int = 0
     plan_misses: int = 0
+    quarantined: int = 0  # signals poisoned out of quarantine=True batches
 
 
 class Transcoder:
@@ -194,7 +195,11 @@ class Transcoder:
         return len(self._pending)
 
     def flush(
-        self, src_tables: TablesArg, dst_tables: TablesArg
+        self,
+        src_tables: TablesArg,
+        dst_tables: TablesArg,
+        *,
+        quarantine: bool = False,
     ) -> EncodedBatch:
         """Transcode everything submitted since the last flush as one batch
         (submission order).  An empty flush is a no-op empty batch."""
@@ -209,14 +214,24 @@ class Transcoder:
             single = (
                 dst_tables if isinstance(dst_tables, DomainTables) else None
             )
+
+            def _src_domain(c) -> int:
+                if isinstance(c, Container):
+                    return c.domain_id
+                try:  # quarantine admits raw bytes; route off the header
+                    return Container.peek(c).domain_id
+                except Exception:
+                    return 0  # unparseable: poisoned before routing matters
+
             dst_ids = [
                 d if d is not None
                 else (single.domain_id if single is not None
-                      else c.domain_id)
+                      else _src_domain(c))
                 for c, d in items
             ]
         return self.transcode(
-            containers, src_tables, dst_tables, dst_domain_ids=dst_ids
+            containers, src_tables, dst_tables, dst_domain_ids=dst_ids,
+            quarantine=quarantine,
         )
 
     @property
@@ -383,14 +398,26 @@ class Transcoder:
         dst_tables: TablesArg,
         *,
         dst_domain_ids: Optional[Sequence[int]] = None,
+        quarantine: bool = False,
     ) -> EncodedBatch:
         """Decode ``source`` under ``src_tables`` and re-encode under
         ``dst_tables``, device-resident end to end.
 
         Returns an :class:`EncodedBatch` (source order); nothing is synced
         to host here — drain it once with ``to_host()``.
+
+        ``quarantine=True`` (container sources): items may be raw bytes or
+        :class:`Container` objects; each is validated against
+        ``src_tables`` at staging and a poisoned item is excluded from its
+        bucket instead of raising batch-wide — its typed error rides the
+        returned batch's drain.  EncodedBatch sources are device-resident
+        output of our own engines (no wire format to corrupt), so only the
+        per-signal histogram-gap demotion applies to them.
         """
         src_batch: Optional[EncodedBatch] = None
+        poisoned: Dict[int, Exception] = {}
+        clean_pos: List[int] = []
+        total = 0
         if isinstance(source, EncodedBatch):
             src_batch = source
             groups, member_pos, meta, flags, shard_ids = (
@@ -403,6 +430,29 @@ class Transcoder:
             shard_devices = {g.shard: g.device for g in groups}
         else:
             containers = list(source)
+            total = len(containers)
+            clean_pos = list(range(total))
+            if quarantine:
+                from repro.serving.quarantine import validate_or_poison
+
+                clean_pos, clean = [], []
+                for i, item in enumerate(containers):
+                    c, err = validate_or_poison(item, i, src_tables)
+                    if err is not None:
+                        poisoned[i] = err
+                    else:
+                        clean_pos.append(i)
+                        clean.append(c)
+                self.stats.quarantined += len(poisoned)
+                containers = clean
+                if dst_domain_ids is not None:
+                    dst_domain_ids = [dst_domain_ids[i] for i in clean_pos]
+                if not containers:
+                    self.stats.batches += 1
+                    return EncodedBatch(
+                        [], [None] * total, (),
+                        poisoned=poisoned, quarantine=True,
+                    )
             buckets = self.scheduler.buckets(
                 [c.plan_key for c in containers]
             )
@@ -541,7 +591,18 @@ class Transcoder:
             pending_flags=flags,
             shard_ids=shard_ids,
             shard_devices=shard_devices,
+            quarantine=quarantine,
         )
+        if quarantine and src_batch is None and total:
+            # restore source positions: poisoned slots hold their typed
+            # error, clean slots keep their (unchanged) bucket/row slices
+            full = [None] * total
+            for j, i in enumerate(clean_pos):
+                full[i] = out._slices[j]
+            out = EncodedBatch(
+                out._buckets, full, out._pending_flags,
+                poisoned=poisoned, quarantine=True,
+            )
         if src_batch is not None:
             # commit point: the source's buffers now back the transcode
             # result; mark it consumed only NOW, so any earlier failure

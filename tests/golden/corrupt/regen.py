@@ -1,0 +1,40 @@
+"""Regenerate the frozen corrupt-container fixtures.
+
+    PYTHONPATH=src python tests/golden/corrupt/regen.py
+
+One blob per fault class in :data:`repro.testing.faults.CONTAINER_FAULTS`,
+derived from the frozen golden containers (``power_v2.fptc``, or
+``power_v3.fptc`` for the v3-only ``reserved-flags`` fault) with a PINNED
+seed — so the expected typed error for each blob is a frozen contract,
+like the golden blobs' bytes themselves.  Only rerun this when the golden
+sources or the corruption functions intentionally change; ``faults.py``'s
+determinism means an unintended diff here is a harness regression.
+"""
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(__file__), "..", "..", "..", "src")
+)
+
+from repro.testing.faults import CONTAINER_FAULTS, corrupt  # noqa: E402
+
+SEED = 13  # pinned: the frozen blobs' bytes depend on it
+
+
+def main():
+    out_dir = os.path.dirname(os.path.abspath(__file__))
+    golden_dir = os.path.dirname(out_dir)
+    v2 = open(os.path.join(golden_dir, "power_v2.fptc"), "rb").read()
+    v3 = open(os.path.join(golden_dir, "power_v3.fptc"), "rb").read()
+    for fault in CONTAINER_FAULTS:
+        src = v3 if fault == "reserved-flags" else v2
+        blob = corrupt(src, fault, seed=SEED)
+        path = os.path.join(out_dir, f"{fault}.fptc")
+        with open(path, "wb") as f:
+            f.write(blob)
+        print(f"wrote {path} ({len(blob)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""The chaos soak: an open-loop multi-thousand-request replay with seeded
+payload corruption and dispatcher sabotage, asserting the full fault-
+isolation contract at once —
+
+  * **zero silent drops** — every submitted request resolves to exactly
+    one typed outcome (the :class:`ChaosReport` accounting is closed);
+  * **zero hangs** — no future outlives the replay, even when a dispatch
+    hangs outright (the watchdog cuts it loose with a typed error);
+  * **typed poison** — every corrupted container surfaces as
+    :class:`PoisonedContainerError` (or its admission-time
+    ``ContainerFormatError`` twin), never as a batch-wide failure;
+  * **byte identity** — every clean request's result equals the offline
+    engines' output bit for bit, corruption and retries notwithstanding.
+
+The sharded leg re-runs a soak over auto-sharded pipelined engines and
+is exercised by the multidevice CI job
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DOMAIN_DEFAULTS, calibrate
+from repro.data import make_signal
+from repro.serving.batch_decode import BatchDecoder
+from repro.serving.frontend import (
+    FrontendConfig,
+    RetryPolicy,
+    ServingFrontend,
+)
+from repro.serving.traffic import DOMAIN_DATASETS, TrafficConfig, generate
+from repro.testing.faults import (
+    CONTAINER_FAULTS,
+    DispatcherFaultInjector,
+    chaos_replay,
+    offline_expected,
+)
+
+CHAOS_SEED = 1303
+
+
+@pytest.fixture(scope="module")
+def chaos_tables():
+    """Two serving domains with *different* codec configs (power e=6,
+    meteorological e=8) so a flipped domain_id deterministically lands on
+    plan-mismatch, not a silent wrong-tables decode."""
+    tables = {}
+    for domain_id in (2, 3):
+        domain, dataset = DOMAIN_DATASETS[domain_id]
+        tables[domain_id] = calibrate(
+            make_signal(dataset, 32768, seed=1000 + domain_id),
+            DOMAIN_DEFAULTS[domain],
+            domain_id=domain_id,
+        )
+    return tables
+
+
+# ---------------------------------------------------------------------------
+# The soak.
+# ---------------------------------------------------------------------------
+def test_chaos_soak_typed_outcomes_and_byte_identity(chaos_tables):
+    """>=2k mixed requests, >=5% of container traffic corrupted cycling
+    every fault class, transient dispatch faults + device loss + latency
+    injected mid-stream: clean results byte-identical to offline, poison
+    typed per-request, the accounting closed, and the retry policy
+    absorbing every transient (zero dispatch failures surface)."""
+    cfg = TrafficConfig(
+        rate=2400.0, duration_s=1.0, fixed_windows=8,
+        mix={"decode": 0.5, "encode": 0.3, "transcode": 0.2},
+        domains=(2, 3), seed=CHAOS_SEED,
+    )
+    requests = generate(cfg, chaos_tables)
+    assert len(requests) >= 2000, "soak needs a >=2k-request stream"
+    expected = offline_expected(requests, chaos_tables)
+
+    inj = DispatcherFaultInjector(
+        fail_on={3, 11}, latency_on={6: 0.05}, device_loss_on={17},
+    )
+    fcfg = FrontendConfig(
+        max_batch=64, max_queue_depth=4096, default_slo_ms=600_000.0,
+        retry=RetryPolicy(max_retries=2, base_backoff_ms=1.0),
+    )
+    with ServingFrontend(
+        chaos_tables, config=fcfg, pipeline=True, devices=None,
+        fault_injector=inj,
+    ) as fe:
+        report = chaos_replay(
+            fe, requests, corrupt_frac=0.06, seed=CHAOS_SEED,
+            expected=expected, result_timeout_s=600.0,
+        )
+        stats = fe.stats_snapshot()
+
+    # the chaos actually happened: corruption covered every fault class,
+    # and the dispatcher took >=3 injected faults
+    corruptible = sum(r.kind != "encode" for r in requests)
+    assert report.corrupted >= max(
+        len(CONTAINER_FAULTS), int(0.05 * corruptible)
+    )
+    assert len(inj.injected) >= 3
+
+    # zero silent drops, zero hangs, zero untyped failures
+    assert report.accounted == report.total == len(requests)
+    assert report.hangs == 0
+    assert report.untyped_failures == 0
+
+    # every corrupted request surfaced as typed poison; every clean one
+    # completed byte-identical to the offline engines
+    assert report.poisoned == report.corrupted
+    assert report.clean_ok == report.clean
+    assert report.clean_mismatches == 0
+    assert report.dispatch_failed == 0  # retries absorbed every transient
+
+    assert stats.retries >= 3
+    assert stats.retry_successes >= 3
+    # poison splits between admission (header-visible faults typed at
+    # submit, never admitted) and engine staging (payload faults counted
+    # by the frontend's quarantine); together they cover every corruption
+    admission_poison = report.total - stats.admitted
+    assert stats.quarantined + admission_poison == report.corrupted
+    assert stats.quarantined > 0 and admission_poison > 0
+
+
+def test_chaos_hung_dispatch_resolves_typed_not_hung(chaos_tables):
+    """A dispatch that hangs outright: the watchdog cuts it loose, its
+    members resolve with a *typed* DispatchFailedError (a hang would be
+    the one forbidden outcome), and the replacement dispatcher finishes
+    the rest of the stream."""
+    cfg = TrafficConfig(
+        rate=200.0, duration_s=0.5, fixed_windows=8,
+        mix={"decode": 1.0}, domains=(2,), seed=CHAOS_SEED + 1,
+    )
+    requests = generate(cfg, chaos_tables)
+    assert len(requests) >= 20
+    expected = offline_expected(requests, chaos_tables)
+
+    inj = DispatcherFaultInjector(hang_on={2}, hang_timeout_s=120.0)
+    fcfg = FrontendConfig(
+        max_batch=8, max_queue_depth=4096, default_slo_ms=600_000.0,
+        retry=RetryPolicy(max_retries=1, base_backoff_ms=1.0),
+        watchdog_timeout_ms=500.0, watchdog_poll_ms=25.0,
+    )
+    try:
+        with ServingFrontend(
+            chaos_tables, config=fcfg, pipeline=False, devices=None,
+            fault_injector=inj,
+        ) as fe:
+            report = chaos_replay(
+                fe, requests, corrupt_frac=0.0, seed=CHAOS_SEED + 1,
+                expected=expected, result_timeout_s=600.0,
+            )
+            stats = fe.stats_snapshot()
+            health = fe.health()
+    finally:
+        inj.release()  # unblock the abandoned dispatcher before exiting
+
+    assert report.accounted == report.total
+    assert report.hangs == 0
+    assert report.untyped_failures == 0
+    assert report.clean_mismatches == 0
+    # the hung batch's members failed TYPED; everything else completed
+    assert report.dispatch_failed > 0
+    assert report.ok + report.dispatch_failed == report.total
+    assert stats.watchdog_restarts == 1
+    assert health["status"] == "degraded"
+    assert any(kind == "hang" for _, kind in inj.injected)
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >1 device (CI multidevice leg: "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+)
+def test_chaos_soak_sharded_multidevice(chaos_tables):
+    """The soak over auto-sharded pipelined engines: quarantine excludes
+    poison *before* the shard split, so clean batch-mates stay
+    byte-identical to the offline single-device engines even while
+    corrupt requests and transient dispatch faults land mid-stream."""
+    cfg = TrafficConfig(
+        rate=600.0, duration_s=0.5, fixed_windows=8,
+        mix={"decode": 0.6, "encode": 0.4}, domains=(2,),
+        seed=CHAOS_SEED + 2,
+    )
+    requests = generate(cfg, chaos_tables)
+    assert len(requests) >= 100
+    expected = offline_expected(requests, chaos_tables)
+
+    inj = DispatcherFaultInjector(fail_on={2})
+    fcfg = FrontendConfig(
+        max_batch=32, max_queue_depth=4096, default_slo_ms=600_000.0,
+        retry=RetryPolicy(max_retries=2, base_backoff_ms=1.0),
+    )
+    with ServingFrontend(
+        chaos_tables, config=fcfg, pipeline=True, devices="auto",
+        fault_injector=inj,
+    ) as fe:
+        report = chaos_replay(
+            fe, requests, corrupt_frac=0.1, seed=CHAOS_SEED + 2,
+            expected=expected, result_timeout_s=600.0,
+        )
+
+    assert report.accounted == report.total
+    assert report.hangs == 0
+    assert report.untyped_failures == 0
+    assert report.poisoned == report.corrupted > 0
+    assert report.clean_ok == report.clean
+    assert report.clean_mismatches == 0
+    assert inj.injected  # the transient fault fired and was absorbed
+
+
+# ---------------------------------------------------------------------------
+# Harness units.
+# ---------------------------------------------------------------------------
+def test_chaos_replay_is_deterministic_in_seed(chaos_tables):
+    """Which requests get corrupted, and with which fault, depends only
+    on (stream, corrupt_frac, seed) — a chaos failure is reproducible
+    from its seed alone."""
+    cfg = TrafficConfig(
+        rate=120.0, duration_s=0.5, fixed_windows=4,
+        mix={"decode": 1.0}, domains=(2,), seed=CHAOS_SEED + 3,
+    )
+    requests = generate(cfg, chaos_tables)
+
+    def outcomes():
+        with ServingFrontend(
+            chaos_tables,
+            config=FrontendConfig(
+                max_batch=16, max_queue_depth=4096,
+                default_slo_ms=600_000.0,
+            ),
+            pipeline=False, devices=None,
+        ) as fe:
+            rep = chaos_replay(
+                fe, requests, corrupt_frac=0.2, seed=CHAOS_SEED + 3,
+                result_timeout_s=600.0,
+            )
+        return [(i, kind) for i, kind, _ in rep.outcomes]
+
+    assert outcomes() == outcomes()
+
+
+def test_chaos_report_accounting_identity():
+    from repro.testing.faults import ChaosReport
+
+    rep = ChaosReport(
+        total=10, ok=4, poisoned=3, dispatch_failed=1, rejected=1,
+        untyped_failures=1, hangs=0,
+    )
+    assert rep.accounted == 10
+
+
+def test_offline_oracle_matches_traffic_payloads(chaos_tables):
+    """generate() pre-encodes decode payloads byte-identically to the
+    offline encoder — the oracle and the stream agree on what 'clean'
+    means before any chaos runs."""
+    cfg = TrafficConfig(
+        rate=60.0, duration_s=0.5, fixed_windows=4,
+        mix={"decode": 1.0}, domains=(2,), seed=CHAOS_SEED + 4,
+    )
+    requests = generate(cfg, chaos_tables)
+    expected = offline_expected(requests, chaos_tables)
+    for i, r in enumerate(requests):
+        dec = BatchDecoder(pipeline=False, devices=None)
+        out = dec.decode([r.container], chaos_tables[r.domain_id]).to_host()
+        np.testing.assert_array_equal(out[0], expected[i])

@@ -224,6 +224,41 @@ def test_executor_propagates_errors():
     assert ex.run(_work(2), lambda b: b.key, lambda b, s: s) == [0, 1]
 
 
+def test_executor_teardown_joins_inflight_upload():
+    """Regression: a dispatch exception used to tear down via
+    ``fut.cancel()`` alone — a no-op on an already-RUNNING future — so
+    the staging worker's in-flight upload (possibly holding donated
+    buffers) outlived run() and raced the next run() on the one-thread
+    pool.  Teardown must JOIN the running upload before re-raising."""
+    import time
+
+    ex = PipelineExecutor(pipeline=True, prefetch=2)
+    upload_started = threading.Event()
+    uploads_done = []
+
+    def upload(b):
+        if b.key == 1:
+            upload_started.set()
+            time.sleep(0.3)  # long enough to be RUNNING at teardown
+        uploads_done.append(b.key)
+        return b.key
+
+    def dispatch(b, staged):
+        # fail bucket 0's dispatch only once bucket 1's upload is
+        # mid-flight on the staging worker
+        assert upload_started.wait(10)
+        raise RuntimeError("dispatch boom")
+
+    with pytest.raises(RuntimeError, match="dispatch boom"):
+        ex.run(_work(4), upload, dispatch)
+    # the in-flight upload was joined (completed), not abandoned
+    assert 1 in uploads_done
+    # the inflight gauge unwound: nothing leaked into the next run
+    assert ex.inflight == 0
+    assert ex.run(_work(2), lambda b: b.key, lambda b, s: s) == [0, 1]
+    assert ex.inflight == 0
+
+
 def test_executor_rejects_bad_prefetch():
     with pytest.raises(ValueError, match="prefetch"):
         PipelineExecutor(prefetch=0)

@@ -1,0 +1,354 @@
+"""The fault taxonomy as a contract: frozen corrupt blobs decode to their
+pinned typed errors, quarantine isolates poison per request with
+byte-identity for batch-mates, the retry policy absorbs transient faults
+(and never re-runs poison), and the watchdog cuts hung dispatches loose.
+
+The frozen-blob tests run identically on the host/XLA path and under
+``FPTC_USE_KERNELS=1`` (the kernels-interpret CI leg re-executes this
+file) — the error taxonomy must not depend on which arm decodes.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from _synth import golden_tables
+from repro.core import DOMAIN_DEFAULTS, calibrate
+from repro.core.container import Container, ContainerFormatError
+from repro.data import make_signal
+from repro.serving.batch_decode import BatchDecoder
+from repro.serving.batch_encode import BatchEncoder
+from repro.serving.frontend import (
+    DispatchFailedError,
+    FrontendConfig,
+    RetryPolicy,
+    ServingFrontend,
+)
+from repro.serving.quarantine import (
+    PoisonedContainerError,
+    validate_or_poison,
+)
+from repro.serving.transcode import Transcoder
+from repro.testing.faults import (
+    CONTAINER_FAULTS,
+    EXPECTED_FAULT,
+    DispatcherFaultInjector,
+    InjectedDispatchError,
+    corrupt,
+)
+
+CORRUPT_DIR = os.path.join(os.path.dirname(__file__), "golden", "corrupt")
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+PINNED_SEED = 13  # regen.py's seed — part of the frozen contract
+
+
+def _frozen(fault: str) -> bytes:
+    with open(os.path.join(CORRUPT_DIR, f"{fault}.fptc"), "rb") as f:
+        return f.read()
+
+
+@pytest.fixture(scope="module")
+def power_v2_tables():
+    return golden_tables("power", 2)
+
+
+@pytest.fixture(scope="module")
+def power_v3_tables():
+    return golden_tables("power", 2, v3=True)
+
+
+@pytest.fixture(scope="module")
+def serving_tables():
+    sig = make_signal("load_power", 65536, seed=7)
+    return calibrate(sig, DOMAIN_DEFAULTS["power"], domain_id=0)
+
+
+def _tables_for_fault(fault, v2, v3):
+    return v3 if fault == "reserved-flags" else v2
+
+
+# ---------------------------------------------------------------------------
+# The frozen corrupt-blob suite.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fault", CONTAINER_FAULTS)
+def test_frozen_blob_bytes_are_pinned(fault):
+    """corrupt() is deterministic: regenerating a frozen blob from its
+    golden source and pinned seed reproduces it byte for byte."""
+    src = "power_v3.fptc" if fault == "reserved-flags" else "power_v2.fptc"
+    with open(os.path.join(GOLDEN_DIR, src), "rb") as f:
+        golden = f.read()
+    assert corrupt(golden, fault, seed=PINNED_SEED) == _frozen(fault)
+
+
+@pytest.mark.parametrize("fault", CONTAINER_FAULTS)
+def test_frozen_blob_validates_to_expected_fault(
+    fault, power_v2_tables, power_v3_tables
+):
+    """Each frozen blob surfaces exactly its pinned fault class from the
+    quarantine staging pre-pass, with the container index threaded in."""
+    tables = _tables_for_fault(fault, power_v2_tables, power_v3_tables)
+    container, err = validate_or_poison(_frozen(fault), 5, tables)
+    assert container is None
+    assert isinstance(err, PoisonedContainerError)
+    assert err.fault in EXPECTED_FAULT[fault], (
+        f"{fault}: got [{err.fault}] {err}"
+    )
+    assert err.index == 5
+
+
+@pytest.mark.parametrize("fault", CONTAINER_FAULTS)
+def test_frozen_blob_poisons_engine_decode(
+    fault, power_v2_tables, power_v3_tables
+):
+    """The engine path (BatchDecoder under quarantine — host, XLA, or
+    FPTC_USE_KERNELS=1, whichever this process runs) delivers the same
+    typed per-request outcome at drain."""
+    tables = _tables_for_fault(fault, power_v2_tables, power_v3_tables)
+    dec = BatchDecoder(pipeline=False)
+    out = dec.decode([_frozen(fault)], tables, quarantine=True).to_host()
+    assert isinstance(out[0], PoisonedContainerError)
+    assert out[0].fault in EXPECTED_FAULT[fault]
+
+
+def test_wire_faults_raise_typed_without_quarantine(power_v2_tables):
+    """The offline contract is unchanged: without quarantine a corrupt
+    blob raises out of parsing — but now as ContainerFormatError (still a
+    ValueError) carrying fault class, byte offset and container index."""
+    with pytest.raises(ContainerFormatError) as exc:
+        Container.from_bytes(_frozen("flip-crc"), index=3)
+    assert exc.value.fault == "crc-mismatch"
+    assert exc.value.offset == 40
+    assert exc.value.index == 3
+    assert isinstance(exc.value, ValueError)  # old except clauses still fire
+    with pytest.raises(ContainerFormatError) as exc:
+        Container.from_bytes(_frozen("truncate"))
+    assert exc.value.fault == "truncated"
+
+
+def test_peek_parses_header_without_crc(power_v2_tables):
+    """Container.peek: O(1) admission routing — reads the header (and
+    rejects header faults) without touching the payload CRC."""
+    with open(os.path.join(GOLDEN_DIR, "power_v2.fptc"), "rb") as f:
+        golden = f.read()
+    hdr = Container.peek(golden)
+    ref = Container.from_bytes(golden)
+    assert hdr.plan_key == ref.plan_key
+    assert hdr.domain_id == ref.domain_id
+    # payload corruption is invisible to peek (caught later, at staging)
+    assert Container.peek(
+        corrupt(golden, "flip-words", seed=1)
+    ).plan_key == ref.plan_key
+    # header corruption is typed at peek time
+    with pytest.raises(ContainerFormatError):
+        Container.peek(corrupt(golden, "bad-magic", seed=1))
+
+
+# ---------------------------------------------------------------------------
+# Quarantine semantics: per-request poison, byte-identical batch-mates.
+# ---------------------------------------------------------------------------
+def test_quarantine_excludes_poison_and_keeps_batch_byte_identical(
+    serving_tables,
+):
+    rng = np.random.default_rng(0)
+    sigs = [rng.standard_normal(500).astype(np.float32) for _ in range(5)]
+    enc = BatchEncoder(pipeline=False)
+    blobs = [c.to_bytes() for c in enc.encode(sigs, serving_tables).to_host()]
+    dec = BatchDecoder(pipeline=False)
+    ref = dec.decode(
+        [Container.from_bytes(b) for b in blobs], serving_tables
+    ).to_host()
+
+    items = list(blobs)
+    items[1] = corrupt(blobs[1], "flip-words", seed=2)
+    items[3] = corrupt(blobs[3], "truncate", seed=2)
+    out = dec.decode(items, serving_tables, quarantine=True).to_host()
+    assert isinstance(out[1], PoisonedContainerError)
+    assert isinstance(out[3], PoisonedContainerError)
+    assert out[1].index == 1 and out[3].index == 3
+    for i in (0, 2, 4):
+        np.testing.assert_array_equal(out[i], ref[i])
+    assert dec.stats.quarantined == 2
+
+
+def test_quarantine_transcode_excludes_poison_byte_identical(serving_tables):
+    rng = np.random.default_rng(1)
+    sigs = [rng.standard_normal(400).astype(np.float32) for _ in range(3)]
+    dst = calibrate(
+        make_signal("temperature", 65536, seed=8),
+        DOMAIN_DEFAULTS["meteorological"],
+        domain_id=1,
+    )
+    tabs = {0: serving_tables, 1: dst}
+    enc = BatchEncoder(pipeline=False)
+    blobs = [
+        c.to_bytes()
+        for c in enc.encode(
+            sigs, tabs, domain_ids=[0, 0, 0]
+        ).to_host()
+    ]
+    tr = Transcoder(pipeline=False)
+    ref = [
+        c.to_bytes()
+        for c in tr.transcode(
+            [Container.from_bytes(b) for b in blobs], tabs, tabs,
+            dst_domain_ids=[1, 1, 1],
+        ).to_host()
+    ]
+    items = [blobs[0], corrupt(blobs[1], "flip-sidecar", seed=3), blobs[2]]
+    out = tr.transcode(
+        items, tabs, tabs, dst_domain_ids=[1, 1, 1], quarantine=True
+    ).to_host()
+    assert isinstance(out[1], PoisonedContainerError)
+    assert out[0].to_bytes() == ref[0]
+    assert out[2].to_bytes() == ref[2]
+
+
+def test_quarantine_demotes_histogram_gap_per_signal():
+    """The device-side gap flag: batch-fatal offline, per-signal typed
+    outcome under quarantine — and the clean co-batched signal's bytes
+    are identical to encoding it alone."""
+    from test_batch_encode import _gap_tables
+
+    tables = _gap_tables()
+    gap_sig = np.sin(np.linspace(0, 30, 512)).astype(np.float32) * 5
+    ok_sig = np.zeros(512, np.float32)
+    # offline contract preserved: batch-fatal
+    batch = BatchEncoder(pipeline=False).encode([gap_sig, ok_sig], tables)
+    with pytest.raises(ValueError, match="histogram gap"):
+        batch.to_host()
+    # quarantine: per-signal typed outcome
+    out = BatchEncoder(pipeline=False).encode(
+        [gap_sig, ok_sig], tables, quarantine=True
+    ).to_host()
+    assert isinstance(out[0], PoisonedContainerError)
+    assert out[0].fault == "histogram-gap"
+    solo = BatchEncoder(pipeline=False).encode([ok_sig], tables).to_host()
+    assert out[1].to_bytes() == solo[0].to_bytes()
+
+
+def test_all_poisoned_batch_drains_typed(serving_tables):
+    dec = BatchDecoder(pipeline=False)
+    out = dec.decode(
+        [_frozen("bad-magic"), _frozen("flip-crc")],
+        serving_tables.config and serving_tables,  # single tables arg
+        quarantine=True,
+    ).to_host()
+    assert all(isinstance(o, PoisonedContainerError) for o in out)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher fault injection: retry + watchdog.
+# ---------------------------------------------------------------------------
+def _frontend(tables, injector=None, **cfg):
+    return ServingFrontend(
+        tables, pipeline=False, fault_injector=injector,
+        config=FrontendConfig(**cfg),
+    )
+
+
+def test_injector_counts_and_fires_on_nth():
+    inj = DispatcherFaultInjector(fail_on={2})
+    inj.on_dispatch(("decode", ()), [])
+    with pytest.raises(InjectedDispatchError):
+        inj.on_dispatch(("decode", ()), [])
+    inj.on_dispatch(("decode", ()), [])
+    assert inj.dispatches == 3
+    assert inj.injected == [(2, "fail")]
+
+
+def test_retry_absorbs_transient_fault(serving_tables):
+    rng = np.random.default_rng(4)
+    sig = rng.standard_normal(300).astype(np.float32)
+    inj = DispatcherFaultInjector(fail_on={2})  # 1: encode, 2: decode fails
+    with _frontend(
+        serving_tables, inj,
+        retry=RetryPolicy(max_retries=2, base_backoff_ms=1.0),
+    ) as fe:
+        blob = fe.submit_encode(sig).result(60).to_bytes()
+        ref = fe.submit_decode(blob)
+        fe.flush()
+        np.testing.assert_array_equal(
+            ref.result(60),
+            BatchDecoder(pipeline=False).decode(
+                [Container.from_bytes(blob)], serving_tables
+            ).to_host()[0],
+        )
+        stats = fe.stats_snapshot()
+        assert stats.retries >= 1
+        assert stats.retry_successes >= 1
+        assert stats.failed == 0
+
+
+def test_retry_exhaustion_is_typed_dispatch_failure(serving_tables):
+    rng = np.random.default_rng(5)
+    sig = rng.standard_normal(300).astype(np.float32)
+    inj = DispatcherFaultInjector(fail_on={2, 3, 4})
+    with _frontend(
+        serving_tables, inj,
+        retry=RetryPolicy(max_retries=2, base_backoff_ms=1.0),
+    ) as fe:
+        blob = fe.submit_encode(sig).result(60).to_bytes()
+        fut = fe.submit_decode(blob)
+        fe.flush()
+        with pytest.raises(DispatchFailedError) as exc:
+            fut.result(60)
+        assert isinstance(exc.value.__cause__, InjectedDispatchError)
+        stats = fe.stats_snapshot()
+        assert stats.dispatch_failures == 1
+        assert fe.health()["status"] == "degraded"
+
+
+def test_retry_never_reruns_poisoned_payloads(serving_tables):
+    """A poisoned request is a RESULT (typed error on its future), not a
+    dispatch fault — the retry machinery must never see it."""
+    rng = np.random.default_rng(6)
+    sig = rng.standard_normal(300).astype(np.float32)
+    with _frontend(serving_tables) as fe:
+        blob = fe.submit_encode(sig).result(60).to_bytes()
+        fut = fe.submit_decode(corrupt(blob, "flip-words", seed=7))
+        fe.flush()
+        with pytest.raises(PoisonedContainerError):
+            fut.result(60)
+        stats = fe.stats_snapshot()
+        assert stats.retries == 0  # poison never re-dispatches
+        assert stats.quarantined == 1
+
+
+def test_watchdog_cuts_hung_dispatch_and_frontend_survives(serving_tables):
+    rng = np.random.default_rng(7)
+    sig = rng.standard_normal(300).astype(np.float32)
+    # warm the jit caches outside the instrumented frontend so the watchdog
+    # budget below only has to cover a warm dispatch, not a cold compile
+    warm = BatchEncoder(pipeline=False).encode([sig], serving_tables)
+    BatchDecoder(pipeline=False).decode(
+        list(warm.to_host()), serving_tables
+    ).to_host()
+    inj = DispatcherFaultInjector(hang_on={2}, hang_timeout_s=30.0)
+    with _frontend(
+        serving_tables, inj,
+        watchdog_timeout_ms=1500.0, watchdog_poll_ms=25.0,
+        retry=RetryPolicy(max_retries=1, base_backoff_ms=1.0),
+    ) as fe:
+        blob = fe.submit_encode(sig).result(60).to_bytes()
+        hung = fe.submit_decode(blob)
+        fe.flush()
+        with pytest.raises(DispatchFailedError, match="watchdog"):
+            hung.result(30)
+        # the replacement dispatcher generation keeps draining the queues
+        again = fe.submit_decode(blob)
+        fe.flush()
+        assert again.result(60).shape == sig.shape
+        stats = fe.stats_snapshot()
+        assert stats.watchdog_restarts == 1
+        health = fe.health()
+        assert health["status"] == "degraded"
+        assert health["watchdog_restarts"] == 1
+        inj.release()  # unblock the abandoned daemon before exiting
+
+
+def test_health_ok_and_sheds_reported(serving_tables):
+    with _frontend(serving_tables) as fe:
+        h = fe.health()
+        assert h["status"] == "ok"
+        assert h["shed_rate"] == 0.0
+        assert h["quarantined"] == 0
